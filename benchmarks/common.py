@@ -1,0 +1,117 @@
+"""Shared workload driver for the paper-figure benchmarks.
+
+Mirrors the paper's methodology (§C): closed-loop client threads, load
+increased by powers of two, measuring mean operation latency vs delivered
+throughput.  All runs are on the deterministic simulator, so results are
+bit-reproducible from the seed.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+from repro.core import (ClusterConfig, DiskParams, NodeConfig, ReplicaConfig,
+                        Simulator, SpinnakerCluster, key_of)
+from repro.core.sim import LatencyStats
+from repro.baselines import CassandraCluster, CassandraConfig
+
+VALUE_4K = b"x" * 4096
+NUM_KEYS = 5000
+
+
+@dataclass
+class Point:
+    threads: int
+    tput: float          # ops/s delivered
+    mean_ms: float
+    p99_ms: float
+    errors: int
+
+
+def make_spinnaker(n_nodes=5, seed=0, disk="hdd", commit_period=1.0):
+    sim = Simulator(seed=seed)
+    dp = {"hdd": DiskParams.hdd(), "ssd": DiskParams.ssd(),
+          "mem": DiskParams.memory()}[disk]
+    cfg = ClusterConfig(
+        n_nodes=n_nodes,
+        node=NodeConfig(replica=ReplicaConfig(commit_period=commit_period),
+                        disk=dp))
+    cluster = SpinnakerCluster(sim, cfg)
+    cluster.start()
+    cluster.settle()
+    return sim, cluster
+
+
+def make_cassandra(n_nodes=5, seed=0, disk="hdd"):
+    sim = Simulator(seed=seed)
+    dp = {"hdd": DiskParams.hdd(), "ssd": DiskParams.ssd(),
+          "mem": DiskParams.memory()}[disk]
+    cluster = CassandraCluster(sim, CassandraConfig(n_nodes=n_nodes, disk=dp))
+    return sim, cluster
+
+
+def run_closed_loop(sim, issue: Callable[[int, Callable], None],
+                    n_threads: int, warmup: float = 1.0,
+                    measure: float = 4.0) -> Point:
+    stats = LatencyStats()
+    errors = [0]
+    ops = [0]
+    t_start = sim.now
+    t_measure = t_start + warmup
+    t_end = t_measure + measure
+
+    def loop(tid: int):
+        if sim.now >= t_end:
+            return
+        t0 = sim.now
+
+        def cb(res):
+            if t0 >= t_measure and sim.now <= t_end:
+                if res is not None and getattr(res, "ok", False):
+                    stats.add(sim.now - t0)
+                    ops[0] += 1
+                else:
+                    errors[0] += 1
+            loop(tid)
+
+        issue(tid, cb)
+
+    for t in range(n_threads):
+        loop(t)
+    sim.run(until=t_end)
+    return Point(threads=n_threads,
+                 tput=ops[0] / measure,
+                 mean_ms=stats.mean * 1e3,
+                 p99_ms=stats.percentile(99) * 1e3,
+                 errors=errors[0])
+
+
+def preload(cluster, client, keys, value=VALUE_4K):
+    done = []
+    for k in keys:
+        client.put(k, "c", value, lambda r: done.append(r))
+    cluster.sim.run_for(30.0)
+    assert all(r.ok for r in done), "preload failed"
+
+
+def preload_cassandra(cluster, client, keys, value=VALUE_4K):
+    done = []
+    for k in keys:
+        client.write(k, "c", value, True, lambda r: done.append(r))
+    cluster.sim.run_for(30.0)
+    assert all(r.ok for r in done)
+
+
+def rand_keys(seed, n=NUM_KEYS, num_keys=100_000):
+    rng = np.random.default_rng(seed)
+    return [key_of(int(i)) for i in rng.integers(0, num_keys, n)]
+
+
+def fmt_curve(name: str, points: list[Point]) -> str:
+    rows = [f"{name},threads={p.threads},tput={p.tput:.0f}/s,"
+            f"mean={p.mean_ms:.2f}ms,p99={p.p99_ms:.2f}ms,err={p.errors}"
+            for p in points]
+    return "\n".join(rows)

@@ -1,0 +1,99 @@
+"""Benchmark harness entry point: one function per paper table/figure,
+plus the roofline summary from dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig8,...]
+
+Prints CSV rows (`name,...`) and a claim-validation block per figure.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+
+def roofline_summary(dryrun_dir="results/dryrun"):
+    rows = []
+    d = Path(dryrun_dir)
+    if not d.exists():
+        return ["roofline,no dryrun artifacts (run repro.launch.dryrun)"], {}
+    cells = sorted(d.glob("*.json"))
+    ok = skipped = 0
+    for p in cells:
+        rec = json.loads(p.read_text())
+        if rec.get("status") == "skipped":
+            skipped += 1
+            continue
+        r = rec.get("roofline")
+        if not r:
+            continue
+        ok += 1
+        rows.append(
+            f"roofline,{rec['arch']},{rec['shape']},{rec['mesh']},"
+            f"dominant={r['dominant']},compute_s={r['compute_s']:.4f},"
+            f"memory_s={r['memory_s']:.4f},"
+            f"collective_s={r['collective_s']:.4f},mfu={r['mfu']:.4f},"
+            f"useful={r['useful_ratio']:.3f}")
+    return rows, {"cells_ok": ok, "cells_skipped": skipped}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer load points (CI mode)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated figure names")
+    args = ap.parse_args()
+
+    from . import paper_figures as pf
+
+    threads = (2, 8) if args.quick else (1, 2, 4, 8, 16, 32)
+    small = (2, 8) if args.quick else (2, 8, 16)
+
+    benches = {
+        "fig8": lambda: pf.fig8_read_latency(threads=threads),
+        "fig9": lambda: pf.fig9_write_latency(threads=threads),
+        "table1": lambda: pf.table1_recovery(
+            commit_periods=(1.0, 5.0) if args.quick
+            else (1.0, 5.0, 10.0, 15.0)),
+        "fig11": lambda: pf.fig11_scaling(
+            sizes=(20, 40) if args.quick else (20, 40, 80)),
+        "fig12": lambda: pf.fig12_mixed(
+            write_pcts=(10, 50) if args.quick else (10, 30, 50)),
+        "fig13": lambda: pf.fig13_ssd_log(threads=small),
+        "fig14": lambda: pf.fig14_conditional_put(threads=small),
+        "fig15": lambda: pf.fig15_weak_writes(threads=small),
+        "fig16": lambda: pf.fig16_memlog(threads=small),
+        "roofline": roofline_summary,
+    }
+    only = [s for s in args.only.split(",") if s]
+    all_validations = {}
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            rows, validation = fn()
+        except Exception as e:  # keep the harness running
+            print(f"{name},ERROR,{e}")
+            import traceback
+            traceback.print_exc()
+            continue
+        for r in rows:
+            print(r)
+        print(f"# {name} validation: {json.dumps(validation)} "
+              f"({time.time()-t0:.0f}s)")
+        all_validations[name] = validation
+    out = Path("results")
+    out.mkdir(exist_ok=True)
+    (out / "benchmark_validation.json").write_text(
+        json.dumps(all_validations, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python examples/train.py --preset 100m --steps 300
+    PYTHONPATH=src python examples/train.py --preset 25m --steps 50   # CI
+
+Trains a llama-family model on the deterministic mixture pipeline with
+AdamW, periodically committing checkpoints to the Spinnaker-replicated
+store (quorum writes + conditionalPut manifest fence).  Loss curve and
+throughput are written to results/train_<preset>.json.
+"""
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.store import SpinnakerCheckpointStore, StoreConfig
+from repro.data.pipeline import DataConfig, TokenStream
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.train.optim import OptimizerConfig
+from repro.train.step import TrainConfig, init_train_state, make_train_step
+
+PRESETS = {
+    # ~name: layers, d_model, heads, kv, d_ff, vocab, batch, seq
+    "5m": dict(num_layers=4, d_model=128, heads=4, kv=2, d_ff=512,
+               vocab=2048, batch=8, seq=128),
+    "25m": dict(num_layers=8, d_model=384, heads=6, kv=2, d_ff=1024,
+                vocab=8192, batch=4, seq=256),
+    "100m": dict(num_layers=12, d_model=768, heads=12, kv=4, d_ff=2048,
+                 vocab=16384, batch=4, seq=256),
+}
+
+
+def make_config(p) -> ModelConfig:
+    return ModelConfig(
+        name="train-example", family="dense", num_layers=p["num_layers"],
+        d_model=p["d_model"], num_heads=p["heads"], num_kv_heads=p["kv"],
+        d_ff=p["d_ff"], vocab_size=p["vocab"], activation="swiglu",
+        dtype="float32", remat=False)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="25m", choices=PRESETS)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    cfg = make_config(p)
+    tcfg = TrainConfig(optimizer=OptimizerConfig(lr=args.lr))
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
+    print(f"model: {n_params/1e6:.1f}M params ({args.preset})")
+
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=p["seq"],
+                      global_batch=p["batch"], seed=0)
+    stream = TokenStream(dcfg, 0)
+    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+    store = SpinnakerCheckpointStore(StoreConfig(chunk_bytes=4 << 20))
+
+    losses = []
+    t0 = time.time()
+    tokens_done = 0
+    for s in range(args.steps):
+        raw = stream.batch_at(s)
+        batch = {k: jnp.asarray(v) for k, v in raw.items()}
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        tokens_done += p["batch"] * p["seq"]
+        if s % 10 == 0 or s == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {s:4d}  loss {loss:.4f}  "
+                  f"grad_norm {float(metrics['grad_norm']):.3f}  "
+                  f"{tokens_done/max(dt,1e-9):.0f} tok/s", flush=True)
+        if args.ckpt_every and (s + 1) % args.ckpt_every == 0:
+            import numpy as np
+            store.save(s + 1, jax.tree.map(np.asarray, state))
+            print(f"  checkpoint @ step {s+1} committed to replicated "
+                  f"store (quorum + manifest fence)", flush=True)
+
+    assert losses[-1] < losses[0], "loss did not decrease"
+    out = Path("results")
+    out.mkdir(exist_ok=True)
+    (out / f"train_{args.preset}.json").write_text(json.dumps({
+        "preset": args.preset, "params": n_params, "steps": args.steps,
+        "loss_first": losses[0], "loss_last": losses[-1],
+        "losses_every10": losses[::10],
+        "wall_s": time.time() - t0,
+        "tok_per_s": tokens_done / (time.time() - t0),
+    }, indent=2))
+    print(f"done: loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,342 @@
+"""Cassandra-style eventually consistent datastore (§9 baseline).
+
+The paper benchmarks Spinnaker against Cassandra (from whose codebase it
+was derived), so the comparison system is reproduced on the same simulator
+with the same storage/log/network models:
+
+- no leaders: any cohort replica coordinates a request;
+- writes go to all 3 replicas; *weak* writes ack after 1 durable copy,
+  *quorum* writes after 2 (same durability as Spinnaker, §9.2);
+- *weak* reads touch 1 replica; *quorum* reads touch 2, resolve conflicts
+  by timestamp (last-writer-wins) and fire async read repair;
+- no quorum-based recovery: a restarted replica serves stale data until
+  read repair catches it (the consistency gap §9 highlights).
+
+Timestamps come from the coordinator's clock — concurrent writes to
+different coordinators can conflict and LWW-resolve, which is exactly the
+anomaly Spinnaker's leader serialization removes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+from ..core.cluster import key_of
+from ..core.sim import (Disk, DiskParams, FifoServer, LatencyStats, NetParams,
+                        Network, Simulator)
+from ..core.types import ErrorCode, Result
+
+
+@dataclass
+class CassandraConfig:
+    n_nodes: int = 5
+    num_keys: int = 100_000
+    disk: DiskParams = field(default_factory=DiskParams.hdd)
+    net: NetParams = field(default_factory=NetParams)
+
+
+@dataclass
+class _TCell:
+    value: Any
+    ts: float
+
+
+# CPU costs mirror the Spinnaker node's (same codebase, §9)
+CPU_READ = 110e-6
+CPU_WRITE = 55e-6
+CPU_FWD = 28e-6
+CPU_ACK = 8e-6
+
+
+class CassandraNode:
+    def __init__(self, cluster: "CassandraCluster", node_id: int,
+                 cfg: CassandraConfig):
+        self.cluster = cluster
+        self.node_id = node_id
+        self.sim = cluster.sim
+        self.cpu = FifoServer(self.sim, name=f"ccpu{node_id}")
+        self.disk = Disk(self.sim, cfg.disk, name=f"clog{node_id}")
+        self.data: dict[tuple[str, str], _TCell] = {}
+        self.up = True
+
+    # -- local replica ops -------------------------------------------------------
+    def local_write(self, key: str, colname: str, value: Any, ts: float,
+                    done: Callable) -> None:
+        """Log force (group commit) then memtable apply."""
+        def after_force():
+            if not self.up:
+                return
+            cur = self.data.get((key, colname))
+            if cur is None or ts >= cur.ts:
+                self.data[(key, colname)] = _TCell(value, ts)
+            done()
+        self.disk.force(4200, after_force)
+
+    def local_read(self, key: str, colname: str) -> Optional[_TCell]:
+        return self.data.get((key, colname))
+
+    def crash(self, lose_disk: bool = False) -> None:
+        self.up = False
+        self.cluster.net.set_down(self.node_id, True)
+        self.cpu.close()
+        self.cpu.bump_generation()
+        self.disk.crash()
+        if lose_disk:
+            self.data.clear()
+
+    def restart(self) -> None:
+        # commit log replay restores the pre-crash memtable (all writes were
+        # forced before ack); no catch-up — the replica is simply stale.
+        self.up = True
+        self.cluster.net.set_down(self.node_id, False)
+        self.cpu.open()
+
+    # -- message entry points ------------------------------------------------------
+    def handle(self, kind: str, kw: dict) -> None:
+        if not self.up:
+            return
+        cost = {"coord_read": CPU_READ, "coord_write": CPU_WRITE,
+                "replica_write": CPU_FWD, "replica_read": CPU_FWD,
+                "ack": CPU_ACK}.get(kind, CPU_ACK)
+        self.cpu.submit(cost, lambda: getattr(self, kind)(**kw))
+
+    # -- coordinator logic -----------------------------------------------------------
+    def coord_write(self, key: str, colname: str, value: Any, w: int,
+                    reply: Callable) -> None:
+        """Send to all 3 replicas, ack client after `w` durable copies."""
+        ts = self.sim.now  # coordinator clock = LWW timestamp
+        members = self.cluster.cohort(self.cluster.range_of(key))
+        acks = [0]
+        replied = [False]
+
+        def one_ack():
+            acks[0] += 1
+            if acks[0] >= w and not replied[0]:
+                replied[0] = True
+                reply(Result(ErrorCode.OK, version=0))
+
+        for m in members:
+            if m == self.node_id:
+                self.local_write(key, colname, value, ts, one_ack)
+            else:
+                node = self.cluster.nodes[m]
+                self.cluster.net.send(
+                    self.node_id, m, node.handle, "replica_write",
+                    dict(key=key, colname=colname, value=value, ts=ts,
+                         origin=self.node_id), nbytes=4300)
+
+        # ack collection from remote replicas
+        self._pending_acks.setdefault((key, colname, ts), one_ack)
+
+    _pending_acks: dict = None  # set in __init__ of cluster wiring
+
+    def replica_write(self, key: str, colname: str, value: Any, ts: float,
+                      origin: int) -> None:
+        def done():
+            node = self.cluster.nodes.get(origin)
+            if node is None:
+                return
+            self.cluster.net.send(self.node_id, origin, node.handle, "ack",
+                                  dict(key=key, colname=colname, ts=ts),
+                                  nbytes=96)
+        self.local_write(key, colname, value, ts, done)
+
+    def ack(self, key: str, colname: str, ts: float) -> None:
+        cb = self._pending_acks.get((key, colname, ts))
+        if cb is not None:
+            cb()
+
+    def coord_read(self, key: str, colname: str, r: int,
+                   reply: Callable) -> None:
+        """Read `r` replicas, LWW-resolve, async read repair on conflict."""
+        members = list(self.cluster.cohort(self.cluster.range_of(key)))
+        # prefer self if replica, then others round-robin
+        if self.node_id in members:
+            members.remove(self.node_id)
+            targets = [self.node_id] + members
+        else:
+            targets = members
+        targets = targets[:r]
+        results: list[tuple[int, Optional[_TCell]]] = []
+
+        def collect(nid: int, cell: Optional[_TCell]):
+            results.append((nid, cell))
+            if len(results) == len(targets):
+                cells = [c for _, c in results if c is not None]
+                if not cells:
+                    reply(Result(ErrorCode.NOT_FOUND))
+                    return
+                best = max(cells, key=lambda c: c.ts)
+                # read repair: push the winning cell to stale replicas
+                for nid2, c in results:
+                    if c is None or c.ts < best.ts:
+                        node = self.cluster.nodes[nid2]
+                        if nid2 == self.node_id:
+                            node.local_write(key, colname, best.value,
+                                             best.ts, lambda: None)
+                        else:
+                            self.cluster.net.send(
+                                self.node_id, nid2, node.handle,
+                                "replica_write",
+                                dict(key=key, colname=colname,
+                                     value=best.value, ts=best.ts,
+                                     origin=self.node_id), nbytes=4300)
+                reply(Result(ErrorCode.OK, value=best.value, version=0))
+
+        for t in targets:
+            if t == self.node_id:
+                collect(t, self.local_read(key, colname))
+            else:
+                node = self.cluster.nodes[t]
+
+                def remote(t=t, node=node):
+                    self.cluster.net.send(
+                        self.node_id, t, node.handle, "replica_read",
+                        dict(key=key, colname=colname, origin=self.node_id,
+                             tag=(key, colname, self.sim.now)), nbytes=300)
+                remote()
+        self._read_collect[(key, colname)] = collect
+
+    _read_collect: dict = None
+
+    def replica_read(self, key: str, colname: str, origin: int,
+                     tag) -> None:
+        cell = self.local_read(key, colname)
+        node = self.cluster.nodes.get(origin)
+        if node is None:
+            return
+        nbytes = 4300 if cell is not None else 200
+        self.cluster.net.send(self.node_id, origin, node.handle, "read_resp",
+                              dict(key=key, colname=colname, cell=cell,
+                                   frm=self.node_id), nbytes=nbytes)
+
+    def read_resp(self, key: str, colname: str, cell: Optional[_TCell],
+                  frm: int) -> None:
+        cb = self._read_collect.get((key, colname))
+        if cb is not None:
+            cb(frm, cell)
+
+
+class CassandraCluster:
+    def __init__(self, sim: Simulator, cfg: CassandraConfig | None = None):
+        self.sim = sim
+        self.cfg = cfg or CassandraConfig()
+        self.net = Network(sim, self.cfg.net)
+        self.nodes: dict[int, CassandraNode] = {}
+        n = self.cfg.n_nodes
+        self.boundaries = [key_of(i * self.cfg.num_keys // n) for i in range(n)]
+        for i in range(n):
+            node = CassandraNode(self, i, self.cfg)
+            node._pending_acks = {}
+            node._read_collect = {}
+            self.nodes[i] = node
+
+    def cohort(self, rid: int) -> tuple[int, int, int]:
+        n = self.cfg.n_nodes
+        return (rid, (rid + 1) % n, (rid + 2) % n)
+
+    def range_of(self, key: str) -> int:
+        import bisect
+        return max(0, bisect.bisect_right(self.boundaries, key) - 1)
+
+    def crash_node(self, nid: int, lose_disk: bool = False) -> None:
+        self.nodes[nid].crash(lose_disk)
+
+    def restart_node(self, nid: int) -> None:
+        self.nodes[nid].restart()
+
+    def make_client(self, client_id: str = "cc0") -> "CassandraClient":
+        return CassandraClient(self, client_id)
+
+
+class CassandraClient:
+    """Weak/quorum reads and writes; coordinator = a cohort replica."""
+
+    ATTEMPT_TIMEOUT = 1.0
+    MAX_RETRIES = 30
+    RETRY_DELAY = 0.05
+
+    def __init__(self, cluster: CassandraCluster, client_id: str):
+        self.cluster = cluster
+        self.sim = cluster.sim
+        self.id = client_id
+        self.stats = LatencyStats()
+        self._rr = 0
+
+    def _coordinator(self, key: str) -> int:
+        members = self.cluster.cohort(self.cluster.range_of(key))
+        self._rr += 1
+        return members[self._rr % len(members)]
+
+    def write(self, key: str, colname: str, value: Any, quorum: bool,
+              cb: Callable) -> None:
+        self._op("coord_write", key,
+                 dict(key=key, colname=colname, value=value,
+                      w=2 if quorum else 1), cb, t0=self.sim.now, tries=0,
+                 nbytes=4300)
+
+    def read(self, key: str, colname: str, quorum: bool,
+             cb: Callable) -> None:
+        self._op("coord_read", key,
+                 dict(key=key, colname=colname, r=2 if quorum else 1), cb,
+                 t0=self.sim.now, tries=0, nbytes=300)
+
+    def _op(self, kind: str, key: str, kw: dict, cb: Callable, t0: float,
+            tries: int, nbytes: int) -> None:
+        if tries > self.MAX_RETRIES:
+            cb(Result(ErrorCode.TIMEOUT, latency=self.sim.now - t0))
+            return
+        target = self._coordinator(key)
+        settled = [False]
+
+        def on_reply(res: Result):
+            if settled[0]:
+                return
+            settled[0] = True
+            timeout_ev.cancel()
+            res.latency = self.sim.now - t0
+            self.stats.add(res.latency)
+            cb(res)
+
+        def on_timeout():
+            if settled[0]:
+                return
+            settled[0] = True
+            self.sim.schedule(self.RETRY_DELAY, self._op, kind, key, kw, cb,
+                              t0, tries + 1, nbytes)
+
+        timeout_ev = self.sim.schedule(self.ATTEMPT_TIMEOUT, on_timeout)
+
+        def reply_via_net(res: Result):
+            self.cluster.net.send(target, self.id, on_reply, res,
+                                  nbytes=4300, cross_switch=True)
+
+        payload = dict(kw)
+        payload["reply"] = reply_via_net
+        node = self.cluster.nodes[target]
+        self.cluster.net.send(self.id, target, node.handle, kind, payload,
+                              nbytes=nbytes, cross_switch=True)
+
+    # sync helpers for tests
+    def sync_write(self, key: str, colname: str, value: Any,
+                   quorum: bool = True) -> Result:
+        box = []
+        self.write(key, colname, value, quorum, lambda r: box.append(r))
+        guard = 0
+        while not box and guard < 1_000_000:
+            if not self.sim.step():
+                break
+            guard += 1
+        return box[0]
+
+    def sync_read(self, key: str, colname: str, quorum: bool = True) -> Result:
+        box = []
+        self.read(key, colname, quorum, lambda r: box.append(r))
+        guard = 0
+        while not box and guard < 1_000_000:
+            if not self.sim.step():
+                break
+            guard += 1
+        return box[0]

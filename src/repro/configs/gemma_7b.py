@@ -1,0 +1,20 @@
+"""Gemma-7B: GeGLU, head_dim=256, MHA kv=16. [arXiv:2403.08295; hf]"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-7b",
+    family="dense",
+    num_layers=28,
+    d_model=3072,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=256,
+    d_ff=24576,
+    vocab_size=256000,
+    activation="geglu",
+    tie_embeddings=True,
+)
+
+SMOKE = CONFIG.scaled(num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+                      head_dim=32, d_ff=256, vocab_size=512)

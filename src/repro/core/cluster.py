@@ -1,0 +1,299 @@
+"""Cluster assembly (Fig. 2), range partitioning with chained declustering
+(§4), and the client library (routing, retries, consistency levels).
+"""
+
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+from .coordination import Coordination, NoNode
+from .node import NodeConfig, SpinnakerNode
+from .sim import LatencyStats, NetParams, Network, Simulator
+from .types import ErrorCode, KeyRange, OpType, Result, WriteOp
+
+
+@dataclass
+class ClusterConfig:
+    n_nodes: int = 5
+    num_keys: int = 100_000          # key-space pre-split for range boundaries
+    node: NodeConfig = field(default_factory=NodeConfig)
+    net: NetParams = field(default_factory=NetParams)
+    session_timeout: float = 2.0     # §D.1
+    trace: bool = False
+
+
+def key_of(i: int) -> str:
+    return f"k{i:012d}"
+
+
+class SpinnakerCluster:
+    """N nodes; node i owns base range i, replicated on i+1, i+2 (mod N)."""
+
+    def __init__(self, sim: Simulator, cfg: ClusterConfig | None = None):
+        self.sim = sim
+        self.cfg = cfg or ClusterConfig()
+        self.net = Network(sim, self.cfg.net)
+        self.zk = Coordination(sim, session_timeout=self.cfg.session_timeout)
+        self.nodes: dict[int, SpinnakerNode] = {}
+        self.trace_log: list[str] = []
+
+        n = self.cfg.n_nodes
+        if n < 3:
+            raise ValueError("Spinnaker needs >= 3 nodes for 3-way replication")
+        # range boundaries: uniform pre-split of the key space
+        self.boundaries = [key_of(i * self.cfg.num_keys // n) for i in range(n)]
+        self.ranges: list[KeyRange] = []
+        for i in range(n):
+            hi = self.boundaries[i + 1] if i + 1 < n else ""
+            self.ranges.append(KeyRange(range_id=i, lo=self.boundaries[i], hi=hi))
+
+        for i in range(n):
+            self.nodes[i] = SpinnakerNode(self, i, self.cfg.node)
+        # chained declustering: cohort(r) = {r, r+1, r+2}
+        for r in range(n):
+            members = self.cohort(r)
+            for m in members:
+                peers = tuple(x for x in members if x != m)
+                self.nodes[m].add_range(self.ranges[r], peers)  # type: ignore[arg-type]
+
+    def cohort(self, rid: int) -> tuple[int, int, int]:
+        n = self.cfg.n_nodes
+        return (rid, (rid + 1) % n, (rid + 2) % n)
+
+    def range_of(self, key: str) -> int:
+        idx = bisect.bisect_right(self.boundaries, key) - 1
+        return max(0, idx)
+
+    def start(self) -> None:
+        for node in self.nodes.values():
+            node.boot()
+
+    def settle(self, timeout: float = 30.0) -> None:
+        """Drive the sim until every cohort has an open leader (test helper)."""
+        deadline = self.sim.now + timeout
+        while self.sim.now < deadline:
+            if all(self.leader_replica(r) is not None for r in range(self.cfg.n_nodes)):
+                return
+            before = self.sim.now
+            self.sim.run(until=min(deadline, before + 0.05))
+            if not self.sim._heap and self.sim.now >= deadline:
+                break
+        leaders = [self.leader_replica(r) for r in range(self.cfg.n_nodes)]
+        missing = [r for r, l in enumerate(leaders) if l is None]
+        if missing:
+            raise RuntimeError(f"cohorts without open leader: {missing}")
+
+    def leader_replica(self, rid: int):
+        from .replica import Role
+        for m in self.cohort(rid):
+            rep = self.nodes[m].replicas[rid]
+            if rep.role is Role.LEADER and rep.open_for_writes \
+                    and self.nodes[m].has_session():
+                return rep
+        return None
+
+    # -- failure injection ------------------------------------------------------
+    def crash_node(self, node_id: int, lose_disk: bool = False,
+                   expire_session: bool = True) -> None:
+        self.nodes[node_id].crash(lose_disk=lose_disk,
+                                  expire_session=expire_session)
+
+    def restart_node(self, node_id: int) -> None:
+        self.nodes[node_id].restart()
+
+    def trace(self, msg: str) -> None:
+        if self.cfg.trace:
+            self.trace_log.append(msg)
+
+    def make_client(self, client_id: str = "c0") -> "Client":
+        return Client(self, client_id)
+
+
+class Client:
+    """Closed-loop client: routes ops to cohort leaders (strong) or round-
+    robin replicas (timeline), retries on NOT_LEADER/UNAVAILABLE."""
+
+    MAX_RETRIES = 60
+    RETRY_DELAY = 0.05
+    ATTEMPT_TIMEOUT = 1.0    # per-attempt; lost messages (dead node) retry
+
+    def __init__(self, cluster: SpinnakerCluster, client_id: str):
+        self.cluster = cluster
+        self.sim = cluster.sim
+        self.id = client_id
+        self.leader_cache: dict[int, int] = {}
+        self._rr = 0
+        self.stats = LatencyStats()
+        self.errors = 0
+        self._session_seen: dict[tuple[str, str], int] = {}
+
+    # -- routing -----------------------------------------------------------------
+    def _lookup_leader(self, rid: int) -> Optional[int]:
+        cached = self.leader_cache.get(rid)
+        if cached is not None:
+            return cached
+        try:
+            leader_id, _epoch = self.cluster.zk.get(f"/ranges/{rid}/leader")
+            self.leader_cache[rid] = leader_id
+            return leader_id
+        except NoNode:
+            return None
+
+    def _any_replica(self, rid: int) -> int:
+        members = self.cluster.cohort(rid)
+        self._rr += 1
+        return members[self._rr % len(members)]
+
+    # -- async API -----------------------------------------------------------------
+    def get(self, key: str, colname: str, consistent: bool,
+            cb: Callable[[Result], None], monotonic: bool = False) -> None:
+        """`monotonic=True` adds the PNUTS-style session guarantee to
+        timeline reads: this client never observes versions going
+        backwards (stale replicas are retried)."""
+        if monotonic and not consistent:
+            inner = cb
+
+            def cb(res, _key=(key, colname)):
+                seen = self._session_seen.get(_key, -1)
+                if res.ok and res.version is not None \
+                        and res.version < seen:
+                    self.get(key, colname, False, inner, monotonic=True)
+                    return
+                if res.ok and res.version is not None:
+                    self._session_seen[_key] = max(seen, res.version)
+                inner(res)
+
+        self._op("read", key, dict(key=key, colname=colname,
+                                   consistent=consistent), cb,
+                 consistent=consistent, t0=self.sim.now, tries=0)
+
+    def put(self, key: str, colname: str, value: Any,
+            cb: Callable[[Result], None]) -> None:
+        op = WriteOp(OpType.PUT, key, colname, value)
+        self._op("write", key, dict(op=op), cb, consistent=True,
+                 t0=self.sim.now, tries=0)
+
+    def delete(self, key: str, colname: str, cb: Callable) -> None:
+        op = WriteOp(OpType.DELETE, key, colname)
+        self._op("write", key, dict(op=op), cb, consistent=True,
+                 t0=self.sim.now, tries=0)
+
+    def conditional_put(self, key: str, colname: str, value: Any, version: int,
+                        cb: Callable) -> None:
+        op = WriteOp(OpType.COND_PUT, key, colname, value,
+                     expected_version=version)
+        self._op("write", key, dict(op=op), cb, consistent=True,
+                 t0=self.sim.now, tries=0)
+
+    def conditional_delete(self, key: str, colname: str, version: int,
+                           cb: Callable) -> None:
+        op = WriteOp(OpType.COND_DELETE, key, colname,
+                     expected_version=version)
+        self._op("write", key, dict(op=op), cb, consistent=True,
+                 t0=self.sim.now, tries=0)
+
+    def multi_put(self, key: str, columns: list[tuple[str, Any]],
+                  cb: Callable) -> None:
+        op = WriteOp(OpType.MULTI_PUT, key, columns=tuple(columns))
+        self._op("write", key, dict(op=op), cb, consistent=True,
+                 t0=self.sim.now, tries=0)
+
+    def transaction(self, ops: list[WriteOp], cb: Callable) -> None:
+        """Multi-operation transaction (§8.2): scope limited to a single
+        cohort, exactly as the paper limits transactions to one node."""
+        rids = {self.cluster.range_of(op.key) for op in ops}
+        if len(rids) != 1:
+            cb(Result(ErrorCode.UNAVAILABLE))
+            return
+        self._op("txn", ops[0].key, dict(ops=ops), cb, consistent=True,
+                 t0=self.sim.now, tries=0)
+
+    # -- engine --------------------------------------------------------------------
+    def _op(self, kind: str, key: str, kw: dict, cb: Callable,
+            consistent: bool, t0: float, tries: int) -> None:
+        rid = self.cluster.range_of(key)
+        if tries > self.MAX_RETRIES:
+            self.errors += 1
+            cb(Result(ErrorCode.TIMEOUT, latency=self.sim.now - t0))
+            return
+        if kind == "read" and not consistent:
+            target = self._any_replica(rid)
+        else:
+            target = self._lookup_leader(rid)
+            if target is None:
+                self.sim.schedule(self.RETRY_DELAY, self._op, kind, key, kw,
+                                  cb, consistent, t0, tries + 1)
+                return
+
+        settled = [False]
+
+        def retry(res: Optional[Result]):
+            self.leader_cache.pop(rid, None)
+            if res is not None and res.leader_hint is not None \
+                    and res.code == ErrorCode.NOT_LEADER:
+                self.leader_cache[rid] = res.leader_hint
+            self.sim.schedule(self.RETRY_DELAY, self._op, kind, key, kw,
+                              cb, consistent, t0, tries + 1)
+
+        def on_reply(res: Optional[Result]):
+            if settled[0]:
+                return
+            settled[0] = True
+            timeout_ev.cancel()
+            if res is None or res.code in (ErrorCode.NOT_LEADER,
+                                           ErrorCode.UNAVAILABLE):
+                retry(res)
+                return
+            res.latency = self.sim.now - t0
+            self.stats.add(res.latency)
+            cb(res)
+
+        def on_timeout():
+            if settled[0]:
+                return
+            settled[0] = True
+            retry(None)
+
+        timeout_ev = self.sim.schedule(self.ATTEMPT_TIMEOUT, on_timeout)
+
+        payload = dict(kw)
+        payload["reply"] = self._reply_via_net(target, on_reply)
+        node = self.cluster.nodes[target]
+        nbytes = 4200 if kind == "write" else 300
+        self.cluster.net.send(self.id, target, node.handle_client, rid, kind,
+                              payload, nbytes=nbytes, cross_switch=True)
+
+    def _reply_via_net(self, src_node: int, cb: Callable) -> Callable:
+        def reply(res: Optional[Result]):
+            nbytes = 4200 if res is not None and res.value is not None else 200
+            self.cluster.net.send(src_node, self.id, cb, res, nbytes=nbytes,
+                                  cross_switch=True)
+        return reply
+
+    # -- synchronous helpers for tests ------------------------------------------------
+    def sync(self, fn: Callable, *args) -> Result:
+        box: list[Result] = []
+        fn(*args, lambda r: box.append(r))
+        guard = 0
+        while not box and guard < 2_000_000:
+            if not self.sim.step():
+                break
+            guard += 1
+        if not box:
+            raise RuntimeError("op did not complete")
+        return box[0]
+
+    def sync_put(self, key: str, colname: str, value: Any) -> Result:
+        return self.sync(self.put, key, colname, value)
+
+    def sync_get(self, key: str, colname: str, consistent: bool = True) -> Result:
+        return self.sync(self.get, key, colname, consistent)
+
+    def sync_cond_put(self, key: str, colname: str, value: Any,
+                      version: int) -> Result:
+        return self.sync(self.conditional_put, key, colname, value, version)
+
+    def sync_delete(self, key: str, colname: str) -> Result:
+        return self.sync(self.delete, key, colname)

@@ -1,0 +1,155 @@
+"""A Spinnaker node (§4.1): shared WAL on a dedicated log device, CPU
+server, 3 cohort replicas (chained declustering), ZooKeeper session with
+heartbeats, and message dispatch.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional, TYPE_CHECKING
+
+from .replica import CohortReplica, ReplicaConfig, Role
+from .sim import Disk, DiskParams, FifoServer
+from .types import KeyRange
+from .wal import WAL
+
+if TYPE_CHECKING:
+    from .cluster import SpinnakerCluster
+
+
+# CPU service times (per message handled).  Calibrated so a node saturates
+# around the paper's observed knees: reads are CPU+network bound (§C "most
+# of the data was cached ... CPU and network were the bottleneck"), writes
+# are log-force bound.
+CPU_COST = {
+    "client_read": 110e-6,      # 4KB read incl. kernel / network stack
+    "client_write": 55e-6,
+    "on_propose": 28e-6,
+    "on_ack": 8e-6,
+    "on_commit": 8e-6,
+    "on_new_leader": 20e-6,
+    "on_follower_state": 20e-6,
+    "on_catchup_data": 60e-6,
+    "on_catchup_synced": 20e-6,
+    "default": 10e-6,
+}
+
+
+@dataclass
+class NodeConfig:
+    replica: ReplicaConfig = field(default_factory=ReplicaConfig)
+    disk: DiskParams = field(default_factory=DiskParams.hdd)
+    heartbeat_interval: float = 0.5
+    wal_segment_bytes: int = 1 << 22
+
+
+class SpinnakerNode:
+    def __init__(self, cluster: "SpinnakerCluster", node_id: int,
+                 cfg: NodeConfig):
+        self.cluster = cluster
+        self.node_id = node_id
+        self.cfg = cfg
+        self.sim = cluster.sim
+        self.net = cluster.net
+        self.zk = cluster.zk
+
+        self.cpu = FifoServer(self.sim, name=f"cpu{node_id}")
+        self.disk = Disk(self.sim, cfg.disk, name=f"log{node_id}")
+        self.wal = WAL(self.sim, self.disk, segment_bytes=cfg.wal_segment_bytes)
+        self.replicas: dict[int, CohortReplica] = {}
+        self.session: Optional[int] = None
+        self._hb_timer = None
+        self.up = False
+
+    # -- wiring ----------------------------------------------------------------
+    def add_range(self, key_range: KeyRange, peers: tuple[int, int]) -> None:
+        self.replicas[key_range.range_id] = CohortReplica(
+            self, key_range, peers, self.cfg.replica)
+
+    def has_session(self) -> bool:
+        return self.session is not None and self.zk.session_alive(self.session)
+
+    # -- lifecycle ---------------------------------------------------------------
+    def boot(self) -> None:
+        self.up = True
+        self.net.set_down(self.node_id, False)
+        self.cpu.open()
+        self.session = self.zk.create_session()
+        try:
+            self.zk.create(f"/nodes/{self.node_id}", data=self.sim.now,
+                           ephemeral_session=self.session)
+        except Exception:
+            pass
+        self._heartbeat()
+        # local recovery of all 3 cohorts (shared log scan, §6), then join
+        for replica in self.replicas.values():
+            replica.start()
+
+    def _heartbeat(self) -> None:
+        if not self.up:
+            return
+        self.zk.heartbeat(self.session)
+        self._hb_timer = self.sim.schedule(self.cfg.heartbeat_interval,
+                                           self._heartbeat)
+
+    def crash(self, lose_disk: bool = False, expire_session: bool = False) -> None:
+        """Fail-stop: volatile state lost; durable log/SSTables survive
+        unless `lose_disk`."""
+        self.up = False
+        self.net.set_down(self.node_id, True)
+        self.cpu.close()
+        self.cpu.bump_generation()
+        if self._hb_timer is not None:
+            self._hb_timer.cancel()
+            self._hb_timer = None
+        self.wal.crash()
+        for replica in self.replicas.values():
+            replica.stop()
+            replica.store.crash_volatile()
+            if lose_disk:
+                replica.store.lose_disk()
+        if lose_disk:
+            self.wal.durable.clear()
+            self.wal.durable_bytes = 0
+            self.wal.skipped.clear()
+            self.wal.flushed_upto.clear()
+        if expire_session and self.session is not None:
+            self.zk.expire_session(self.session)
+        self.session = None
+
+    def restart(self) -> None:
+        self.boot()
+
+    # -- messaging -----------------------------------------------------------------
+    def send(self, dst: int, rid: int, handler: str, nbytes: int = 256,
+             **kw: Any) -> None:
+        dst_node = self.cluster.nodes[dst]
+        self.net.send(self.node_id, dst,
+                      dst_node.receive, rid, handler, kw, nbytes=nbytes)
+
+    def receive(self, rid: int, handler: str, kw: dict) -> None:
+        if not self.up:
+            return
+        replica = self.replicas.get(rid)
+        if replica is None:
+            return
+        cost = CPU_COST.get(handler, CPU_COST["default"])
+        self.cpu.submit(cost, lambda: getattr(replica, handler)(**kw))
+
+    # client entry points (arrive via network; dispatched through the CPU)
+    def handle_client(self, rid: int, kind: str, kw: dict) -> None:
+        if not self.up:
+            return
+        replica = self.replicas.get(rid)
+        if replica is None:
+            kw["reply"](None)
+            return
+        cost = CPU_COST["client_read" if kind == "read" else "client_write"]
+        if kind == "read":
+            self.cpu.submit(cost, lambda: replica.client_read(**kw))
+        elif kind == "txn":
+            n = max(1, len(kw.get("ops", ())))
+            self.cpu.submit(cost * n,
+                            lambda: replica.client_transaction(**kw))
+        else:
+            self.cpu.submit(cost, lambda: replica.client_write(**kw))

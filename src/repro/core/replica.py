@@ -1,0 +1,711 @@
+"""Per-cohort Paxos replica state machine (§5 replication, §6 recovery,
+§7 leader election).
+
+One `CohortReplica` instance exists per (node, key-range).  The node wires
+replicas to its shared WAL, CPU server, network, and coordination session.
+
+Protocol summary (steady state, Fig. 4):
+  client write -> leader: assign LSN (epoch.seq) + versions, append+force
+  own log ∥ send PROPOSE to in-sync followers; followers force + ACK;
+  leader commits once 2 of 3 logs hold the record (its own force counts),
+  applies to memtable, replies to client.  A periodic async COMMIT message
+  advances followers (the *commit period*); commit LSNs are persisted with
+  non-forced log writes.
+
+Recovery (Fig. 5/6, App. B): follower local recovery replays (flushed,
+f.cmt], catch-up pulls committed writes (f.cmt, l.cmt] from the leader
+(log- or SSTable-sourced), the window (f.cmt, f.lst] is *logically
+truncated* via skipped-LSN lists; leader takeover re-proposes
+(l.cmt, l.lst] under a fresh epoch before reopening for writes.
+
+Election (Fig. 7): candidates advertise last-LSN in ephemeral sequential
+znodes; with a majority present the max-LSN candidate claims /leader
+atomically.  Entries are stamped with the election *round* (the epoch
+counter) so stale candidacies from earlier rounds are never counted —
+this closes the stale-lst race the paper waves off as "certain race
+conditions ignored".
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+from typing import Callable, Optional, TYPE_CHECKING
+
+from .coordination import NodeExists, NoNode
+from .storage import Store
+from .types import (CommitMarker, ErrorCode, KeyRange, LogRecord, OpType,
+                    Result, WriteOp, fmt_lsn, lsn_seq, make_lsn)
+
+if TYPE_CHECKING:
+    from .node import SpinnakerNode
+
+
+class Role(enum.Enum):
+    OFFLINE = "offline"
+    ELECTING = "electing"
+    CATCHUP = "catchup"          # follower pulling missed writes
+    FOLLOWER = "follower"
+    TAKEOVER = "takeover"        # leader-elect running Fig. 6
+    LEADER = "leader"
+
+
+@dataclass
+class ReplicaConfig:
+    commit_period: float = 1.0          # §D.1 default
+    piggyback_commit: bool = False      # §D.1: piggy-back commit LSN on proposes
+    flush_threshold: int = 4 << 20
+
+
+class CohortReplica:
+    def __init__(self, node: "SpinnakerNode", key_range: KeyRange,
+                 peers: tuple[int, int], cfg: ReplicaConfig):
+        self.node = node
+        self.range = key_range
+        self.rid = key_range.range_id
+        self.peers = peers                     # the other 2 node ids
+        self.cfg = cfg
+        self.store = Store(flush_threshold_bytes=cfg.flush_threshold)
+
+        self.role = Role.OFFLINE
+        self.epoch = 0
+        self.leader_id: Optional[int] = None
+
+        # log positions
+        self.cmt = 0           # last committed LSN known locally
+        self.lst = 0           # last LSN in local log
+        self.forced_upto = 0   # leader: own contiguous durable LSN
+        self._next_seq = 1
+
+        # leader-side state
+        self.queue: dict[int, LogRecord] = {}           # pending (uncommitted)
+        self.acked: dict[int, int] = {}                 # follower -> max acked LSN
+        self.insync: set[int] = set()
+        self.open_for_writes = False
+        self.pending_reply: dict[int, Callable] = {}
+        self.blocked_writes: list[tuple[WriteOp, Callable]] = []
+        self.proposed_version: dict[tuple[str, str], int] = {}
+        self._commit_timer = None
+        self._takeover_hi = 0    # l.lst at takeover; writes open when cmt >= this
+        self._election_round = 0
+
+        # follower-side
+        self._announced_leader_epoch = 0
+
+        # stats
+        self.commits = 0
+        self.writes_served = 0
+        self.reads_served = 0
+
+    # ------------------------------------------------------------------ utils
+    @property
+    def zk(self):
+        return self.node.zk
+
+    @property
+    def base(self) -> str:
+        return f"/ranges/{self.rid}"
+
+    def _send(self, dst: int, handler: str, nbytes: int = 256, **kw) -> None:
+        self.node.send(dst, self.rid, handler, nbytes=nbytes, **kw)
+
+    def log(self, msg: str) -> None:
+        self.node.cluster.trace(
+            f"[{self.node.sim.now*1e3:9.2f}ms n{self.node.node_id} r{self.rid} "
+            f"{self.role.value:9s} e{self.epoch}] {msg}")
+
+    # ============================================================== lifecycle
+    def start(self) -> None:
+        """Called after the node's local recovery pass for this range."""
+        records, cmt = self.node.wal.recover_range(self.rid)
+        self.lst = max((r.lsn for r in records), default=0)
+        self.cmt = min(cmt, self.lst)
+        # local recovery: re-apply (flushed, f.cmt] idempotently (§6.1)
+        for r in records:
+            if self.store.flushed_upto < r.lsn <= self.cmt:
+                self.store.apply(r)
+        self.queue = {r.lsn: r for r in records if r.lsn > self.cmt}
+        self._follower_forced = self.lst   # durable log scanned
+        self.pending_reply.clear()
+        self.acked = {p: 0 for p in self.peers}
+        self.insync.clear()
+        self.open_for_writes = False
+        self.proposed_version.clear()
+        self.role = Role.ELECTING
+        self._join_or_elect()
+
+    def stop(self) -> None:
+        self.role = Role.OFFLINE
+        if self._commit_timer is not None:
+            self._commit_timer.cancel()
+            self._commit_timer = None
+
+    # ======================================================== election (§7.2)
+    def _join_or_elect(self) -> None:
+        if self.role == Role.OFFLINE:
+            return
+        leader_path = f"{self.base}/leader"
+        if self.zk.exists(leader_path):
+            leader_id, epoch = self.zk.get(leader_path)
+            if leader_id == self.node.node_id:
+                # our own stale leader znode (crash + restart faster than
+                # session expiry): drop it and start over
+                try:
+                    self.zk.delete(leader_path)
+                except NoNode:
+                    pass
+                self._join_or_elect()
+                return
+            self._become_joining_follower(leader_id, epoch)
+            return
+        self._run_election()
+
+    def _current_round(self) -> int:
+        try:
+            return self.zk.get(f"{self.base}/epoch")
+        except NoNode:
+            return 0
+
+    def _run_election(self) -> None:
+        if self.role == Role.OFFLINE:
+            return
+        self.role = Role.ELECTING
+        self._election_round = self._current_round()
+        # Fig. 7 line 1: clean up old state — our prior candidacies and
+        # anything stamped with an older round
+        for name, (data, _) in self.zk.get_children(f"{self.base}/candidates").items():
+            node_id, _lst, rnd = data
+            if node_id == self.node.node_id or rnd < self._election_round:
+                try:
+                    self.zk.delete(f"{self.base}/candidates/{name}")
+                except NoNode:
+                    pass
+        # line 4: advertise our last LSN in an ephemeral sequential znode
+        self.zk.create(f"{self.base}/candidates/c",
+                       data=(self.node.node_id, self.lst, self._election_round),
+                       ephemeral_session=self.node.session,
+                       sequential=True)
+        self._evaluate_election()
+
+    def _evaluate_election(self, _path: str = "") -> None:
+        if self.role is not Role.ELECTING or not self.node.has_session():
+            return
+        leader_path = f"{self.base}/leader"
+        if self.zk.exists(leader_path):
+            leader_id, epoch = self.zk.get(leader_path)
+            if leader_id != self.node.node_id:
+                self._become_joining_follower(leader_id, epoch)
+            return
+        if self._current_round() != self._election_round:
+            # a takeover happened and that leader died already; restart with
+            # a fresh candidacy so our advertised lst is current
+            self._run_election()
+            return
+        cands = {n: d for n, (d, cz) in
+                 self.zk.get_children(f"{self.base}/candidates").items()
+                 if d[2] == self._election_round}
+        czxids = {n: cz for n, (d, cz) in
+                  self.zk.get_children(f"{self.base}/candidates").items()}
+        # lines 5-6: wait for a majority; winner = max n.lst, znode sequence
+        # number breaks ties
+        if len(cands) < 2:
+            self.zk.watch_children(f"{self.base}/candidates",
+                                   self._evaluate_election)
+            return
+        winner_name = max(cands, key=lambda n: (cands[n][1], czxids[n]))
+        winner_node = cands[winner_name][0]
+        if winner_node == self.node.node_id:
+            # lines 7-8: atomically claim leadership under a fresh epoch
+            new_epoch = self.zk.fetch_and_add(f"{self.base}/epoch", 1, initial=0)
+            try:
+                self.zk.create(f"{self.base}/leader",
+                               data=(self.node.node_id, new_epoch),
+                               ephemeral_session=self.node.session)
+            except NodeExists:
+                leader_id, epoch = self.zk.get(f"{self.base}/leader")
+                if leader_id != self.node.node_id:
+                    self._become_joining_follower(leader_id, epoch)
+                return
+            self._start_takeover(new_epoch)
+        else:
+            # line 11 + liveness: watch for the winner's claim, and for
+            # candidate churn (the winner may die before claiming)
+            self.zk.watch_children(f"{self.base}/candidates",
+                                   self._evaluate_election)
+            self.zk.watch_exists(f"{self.base}/leader",
+                                 self._evaluate_election)
+
+    def _watch_leader_liveness(self) -> None:
+        """Re-elect when the leader's ephemeral znode disappears."""
+        leader_path = f"{self.base}/leader"
+
+        def on_change(_p):
+            if self.role in (Role.OFFLINE, Role.LEADER, Role.TAKEOVER):
+                return
+            if not self.zk.exists(leader_path):
+                self.log("leader znode gone; (re)electing")
+                self._run_election()
+            else:
+                lid, ep = self.zk.get(leader_path)
+                if lid != self.node.node_id and ep > self.epoch:
+                    self._become_joining_follower(lid, ep)
+                else:
+                    self.zk.watch_exists(leader_path, on_change)
+
+        self.zk.watch_exists(leader_path, on_change)
+
+    # ===================================================== leader takeover
+    def _start_takeover(self, new_epoch: int) -> None:
+        """Fig. 6.  We hold the leader znode; re-commit the unresolved
+        window, then open for writes under `new_epoch`."""
+        self.epoch = new_epoch
+        self.leader_id = self.node.node_id
+        self.role = Role.TAKEOVER
+        self.open_for_writes = False
+        self.insync.clear()
+        self.acked = {p: 0 for p in self.peers}
+        # the unresolved window (l.cmt, l.lst] is already in self.queue
+        # (rebuilt from the durable log in start(), or live from before)
+        self.forced_upto = self.lst        # everything local is durable or inflight->refused on crash
+        self._takeover_hi = self.lst
+        # rebuild version map from committed state + unresolved queue
+        self.proposed_version.clear()
+        for lsn in sorted(self.queue):
+            rec = self.queue[lsn]
+            for colname, _value, version in rec.columns:
+                self.proposed_version[(rec.key, colname)] = version
+        self._next_seq = lsn_seq(self.lst) + 1
+        self.log(f"takeover: cmt={fmt_lsn(self.cmt)} lst={fmt_lsn(self.lst)} "
+                 f"unresolved={len(self.queue)}")
+        for p in self.peers:
+            self._send(p, "on_new_leader", epoch=self.epoch,
+                       leader=self.node.node_id)
+        self._watch_peer_sessions()
+        self._arm_commit_timer()
+
+    def _watch_peer_sessions(self) -> None:
+        for p in self.peers:
+            def on_change(_p, peer=p):
+                if self.role not in (Role.LEADER, Role.TAKEOVER):
+                    return
+                if not self.zk.exists(f"/nodes/{peer}"):
+                    if peer in self.insync:
+                        self.insync.discard(peer)
+                        self.acked[peer] = 0
+                        self.log(f"follower n{peer} lost (session expired)")
+                self.zk.watch_exists(f"/nodes/{peer}", on_change)
+
+            self.zk.watch_exists(f"/nodes/{p}", on_change)
+
+    # --- follower side of takeover / join ------------------------------------
+    def _become_joining_follower(self, leader_id: int, epoch: int) -> None:
+        """We found an existing leader (restart path §6.1): advertise state,
+        wait for catch-up."""
+        if epoch < self.epoch or self.role == Role.OFFLINE:
+            return
+        if epoch == self.epoch and self.leader_id == leader_id \
+                and self.role in (Role.CATCHUP, Role.FOLLOWER):
+            return  # duplicate announcement (znode watch + NEW_LEADER msg)
+        self._step_down()
+        self.epoch = epoch
+        self.leader_id = leader_id
+        self.role = Role.CATCHUP
+        self._drop_uncommitted_tail()
+        self._watch_leader_liveness()
+        self._send(leader_id, "on_follower_state", epoch=epoch,
+                   follower=self.node.node_id, f_cmt=self.cmt, f_lst=self.lst)
+
+    def on_new_leader(self, epoch: int, leader: int) -> None:
+        if self.role == Role.OFFLINE or epoch <= self._announced_leader_epoch \
+                or epoch < self.epoch or leader == self.node.node_id:
+            return
+        self._announced_leader_epoch = epoch
+        self._become_joining_follower(leader, epoch)
+
+    def _step_down(self) -> None:
+        if self.role in (Role.LEADER, Role.TAKEOVER):
+            self.open_for_writes = False
+            if self._commit_timer is not None:
+                self._commit_timer.cancel()
+                self._commit_timer = None
+            for op, cb in self.blocked_writes:
+                cb(Result(ErrorCode.NOT_LEADER, leader_hint=self.leader_id))
+            self.blocked_writes.clear()
+
+    def _drop_uncommitted_tail(self) -> None:
+        """Entering a new regime: pending writes in (cmt, lst] are ambiguous.
+        Drop the volatile queue; the durable copies are logically truncated
+        when catch-up data arrives (§6.1.1).  The durability watermark must
+        retreat with them: a truncated record no longer counts as a stable
+        copy, so re-proposals of it must be re-forced before being acked."""
+        self.queue = {l: r for l, r in self.queue.items() if l <= self.cmt}
+        self._follower_forced = min(self._follower_forced, self.cmt)
+        for lsn in list(self.pending_reply):
+            cb = self.pending_reply.pop(lsn)
+            cb(Result(ErrorCode.UNAVAILABLE))
+
+    # --- leader side: follower catch-up (§6.1 + Fig. 6 lines 3-8) ------------
+    def on_follower_state(self, epoch: int, follower: int, f_cmt: int,
+                          f_lst: int) -> None:
+        if self.role not in (Role.LEADER, Role.TAKEOVER) or epoch != self.epoch:
+            return
+        # a restarted follower must re-sync from scratch
+        self.insync.discard(follower)
+        self.acked[follower] = 0
+        self.log(f"catch-up request from n{follower} "
+                 f"(f.cmt={fmt_lsn(f_cmt)} f.lst={fmt_lsn(f_lst)})")
+        self._send_catchup(follower, f_cmt, f_lst, first=True)
+
+    def _send_catchup(self, follower: int, f_cmt: int, f_lst: int,
+                      first: bool = False) -> None:
+        target = self.cmt
+        recs = self.node.wal.records_between(self.rid, f_cmt, target)
+        if recs is None:
+            # log rolled over: source from SSTables (§6.1), synthesising one
+            # record per surviving cell
+            cells = self.store.cells_with_lsn_above(f_cmt)
+            recs = [LogRecord(self.rid, cell.lsn,
+                              OpType.DELETE if cell.deleted else OpType.PUT,
+                              key, ((colname, cell.value, cell.version),))
+                    for key, colname, cell in cells
+                    if cell.lsn <= target]
+            recs.sort(key=lambda r: r.lsn)
+        nbytes = 128 + sum(r.nbytes() for r in recs)
+        self._send(follower, "on_catchup_data", nbytes=nbytes,
+                   epoch=self.epoch, records=recs, commit_lsn=target,
+                   truncate_from=f_cmt if first else None,
+                   truncate_to=f_lst if first else None)
+
+    def on_catchup_synced(self, epoch: int, follower: int, upto: int) -> None:
+        if self.role not in (Role.LEADER, Role.TAKEOVER) or epoch != self.epoch:
+            return
+        if upto < self.cmt:
+            # new writes committed while the batch was in flight: send the
+            # delta (the paper's "momentarily blocks new writes" final round
+            # is subsumed by the gap-forwarding below once upto == cmt)
+            self._send_catchup(follower, upto, upto)
+            return
+        self.insync.add(follower)
+        self.acked[follower] = max(self.acked.get(follower, 0), upto)
+        # close the in-flight gap: forward pending proposals this follower
+        # has not seen (they were proposed while it was out-of-sync); FIFO
+        # links order these before any subsequent propose
+        for lsn in sorted(l for l in self.queue if l > upto):
+            rec = self.queue[lsn]
+            self._send(follower, "on_propose", nbytes=rec.nbytes() + 64,
+                       epoch=self.epoch, record=rec,
+                       commit_lsn=self._piggyback())
+        self.log(f"follower n{follower} in-sync @ {fmt_lsn(upto)}")
+        self._after_quorum_progress()
+
+    def _after_quorum_progress(self) -> None:
+        if self.role == Role.TAKEOVER and self.insync:
+            # Fig. 6 lines 8-10: quorum reached; re-propose (l.cmt, l.lst]
+            unresolved = sorted(l for l in self.queue if l > self.cmt)
+            self.role = Role.LEADER
+            if unresolved:
+                self.log(f"re-proposing {len(unresolved)} unresolved writes")
+                # records were already forwarded to the in-sync follower by
+                # on_catchup_synced's gap-forwarding; commits flow via acks
+                self._advance_commit()
+            if self.cmt >= self._takeover_hi and not self.open_for_writes:
+                self._open_writes()
+        elif self.role == Role.LEADER and not self.open_for_writes:
+            if self.cmt >= self._takeover_hi:
+                self._open_writes()
+
+    def _open_writes(self) -> None:
+        self.open_for_writes = True
+        self._next_seq = max(self._next_seq, lsn_seq(self.lst) + 1)
+        self.log(f"open for writes (next lsn {self.epoch}.{self._next_seq})")
+        blocked, self.blocked_writes = self.blocked_writes, []
+        for op, cb in blocked:
+            if isinstance(op, list):                # blocked transaction
+                self.client_transaction(op, cb)
+            else:
+                self.client_write(op, cb)
+
+    # --- follower side: catch-up data -----------------------------------------
+    def on_catchup_data(self, epoch: int, records: list[LogRecord],
+                        commit_lsn: int, truncate_from: Optional[int],
+                        truncate_to: Optional[int]) -> None:
+        if self.role not in (Role.CATCHUP, Role.FOLLOWER) or epoch != self.epoch:
+            return
+        if truncate_from is not None and truncate_to is not None \
+                and truncate_to > truncate_from:
+            # §6.1.1 logical truncation: (f.cmt, f.lst] may contain records
+            # discarded by the new regime; never re-apply them.  Re-sent
+            # records are re-appended afresh (WAL.append un-skips their LSN).
+            lsns = self.node.wal.range_lsns_between(self.rid, truncate_from,
+                                                    truncate_to)
+            self.node.wal.logically_truncate(self.rid, lsns)
+            self.lst = min(self.lst, truncate_from)
+
+        fresh = [r for r in records if r.lsn > self.lst]
+        e0 = self.epoch
+
+        def complete() -> None:
+            if self.role == Role.OFFLINE or self.epoch != e0:
+                return
+            self._apply_committed(commit_lsn)
+            if self.role == Role.CATCHUP:
+                self.role = Role.FOLLOWER
+            self._send(self.leader_id, "on_catchup_synced",
+                       epoch=self.epoch, follower=self.node.node_id,
+                       upto=commit_lsn)
+
+        if not fresh:
+            complete()
+            return
+        for i, rec in enumerate(fresh):
+            self.queue[rec.lsn] = rec
+            self.lst = max(self.lst, rec.lsn)
+            last = i == len(fresh) - 1
+            self.node.wal.append(rec, force=last, cb=complete if last else None)
+
+    # ===================================================== steady state (§5)
+    def _piggyback(self) -> Optional[int]:
+        return self.cmt if self.cfg.piggyback_commit else None
+
+    def client_write(self, op: WriteOp, reply: Callable) -> None:
+        if self.role != Role.LEADER or not self.node.has_session():
+            reply(Result(ErrorCode.NOT_LEADER, leader_hint=self.leader_id))
+            return
+        if not self.open_for_writes:
+            self.blocked_writes.append((op, reply))
+            return
+        # conditional check against the latest *proposed* version so
+        # pipelined writes to one row serialize correctly (§5.1)
+        cur = self.proposed_version.get((op.key, op.colname))
+        if cur is None:
+            cur = self.store.current_version(op.key, op.colname)
+        if op.is_conditional and op.expected_version != cur:
+            reply(Result(ErrorCode.VERSION_MISMATCH, version=cur))
+            return
+        if op.op == OpType.MULTI_PUT:
+            cols = tuple((c, v, self._bump_version(op.key, c))
+                         for c, v in (op.columns or ()))
+        elif op.op in (OpType.DELETE, OpType.COND_DELETE):
+            cols = ((op.colname, None, self._bump_version(op.key, op.colname)),)
+        else:
+            cols = ((op.colname, op.value,
+                     self._bump_version(op.key, op.colname)),)
+        lsn = make_lsn(self.epoch, self._next_seq)
+        self._next_seq += 1
+        rec = LogRecord(self.rid, lsn, op.op, op.key, cols)
+        self.lst = max(self.lst, lsn)
+        self.queue[lsn] = rec
+        self.pending_reply[lsn] = reply
+        self.writes_served += 1
+        # parallel: force own log ∥ propose to in-sync followers (Fig. 4)
+        self.node.wal.append(rec, force=True,
+                             cb=lambda: self._on_self_forced(lsn))
+        for f in self.insync:
+            self._send(f, "on_propose", nbytes=rec.nbytes() + 64,
+                       epoch=self.epoch, record=rec,
+                       commit_lsn=self._piggyback())
+
+    def client_transaction(self, ops: list, reply: Callable) -> None:
+        """Multi-operation transaction (§8.2, the paper's sketched
+        extension): all ops target this cohort's range; the transaction
+        creates multiple log records but invokes the replication protocol
+        once, as a batch — consecutive LSNs proposed together, client
+        acked when the LAST record commits (commits are in LSN order, so
+        the batch is atomic at every replica: a prefix is never visible
+        to strong reads because apply happens in one _apply_committed
+        sweep only after quorum covers the tail record)."""
+        if self.role != Role.LEADER or not self.node.has_session():
+            reply(Result(ErrorCode.NOT_LEADER, leader_hint=self.leader_id))
+            return
+        if not self.open_for_writes:
+            self.blocked_writes.append((ops, reply))
+            return
+        # validate every conditional against latest proposed state FIRST —
+        # any mismatch aborts the whole transaction with nothing proposed
+        for op in ops:
+            cur = self.proposed_version.get((op.key, op.colname))
+            if cur is None:
+                cur = self.store.current_version(op.key, op.colname)
+            if op.is_conditional and op.expected_version != cur:
+                reply(Result(ErrorCode.VERSION_MISMATCH, version=cur))
+                return
+        records = []
+        tail_lsn = make_lsn(self.epoch, self._next_seq + len(ops) - 1)
+        for op in ops:
+            if op.op in (OpType.DELETE, OpType.COND_DELETE):
+                cols = ((op.colname, None,
+                         self._bump_version(op.key, op.colname)),)
+            else:
+                cols = ((op.colname, op.value,
+                         self._bump_version(op.key, op.colname)),)
+            lsn = make_lsn(self.epoch, self._next_seq)
+            self._next_seq += 1
+            rec = LogRecord(self.rid, lsn, op.op, op.key, cols,
+                            txn_tail=tail_lsn)
+            self.lst = max(self.lst, lsn)
+            self.queue[lsn] = rec
+            records.append(rec)
+        self.writes_served += 1
+        # client acked on the LAST record's commit (atomic prefix rule)
+        self.pending_reply[records[-1].lsn] = reply
+        for i, rec in enumerate(records):
+            force = i == len(records) - 1  # one group force for the batch
+            self.node.wal.append(
+                rec, force=force,
+                cb=(lambda lsn=rec.lsn: self._on_self_forced(lsn))
+                if force else None)
+        for f in self.insync:
+            nbytes = sum(r.nbytes() for r in records) + 64
+            for rec in records:
+                self._send(f, "on_propose", nbytes=nbytes // len(records),
+                           epoch=self.epoch, record=rec,
+                           commit_lsn=self._piggyback())
+
+    def _bump_version(self, key: str, colname: str) -> int:
+        cur = self.proposed_version.get((key, colname))
+        if cur is None:
+            cur = self.store.current_version(key, colname)
+        self.proposed_version[(key, colname)] = cur + 1
+        return cur + 1
+
+    def _on_self_forced(self, lsn: int) -> None:
+        if self.role not in (Role.LEADER, Role.TAKEOVER):
+            return
+        self.forced_upto = max(self.forced_upto, lsn)
+        self._advance_commit()
+
+    def on_propose(self, epoch: int, record: LogRecord,
+                   commit_lsn: Optional[int]) -> None:
+        if self.role is not Role.FOLLOWER or epoch != self.epoch:
+            return
+        if record.lsn <= self._follower_forced or record.lsn <= self.cmt:
+            # durable duplicate (gap-forward overlap): plain re-ack
+            self._ack(record.lsn)
+        elif record.lsn in self.queue:
+            pass  # logged already; the in-flight force's ack covers it
+        else:
+            self.queue[record.lsn] = record
+            self.lst = max(self.lst, record.lsn)
+            e0 = self.epoch
+            self.node.wal.append(record, force=True,
+                                 cb=lambda: self._on_follower_forced(
+                                     record.lsn, e0))
+        if commit_lsn is not None:
+            self._apply_committed(min(commit_lsn, self.lst))
+
+    _follower_forced = 0
+
+    def _on_follower_forced(self, lsn: int, epoch: int) -> None:
+        """Durability callback, EPOCH-BOUND: a force that was in flight
+        when the regime changed must not ack into the new epoch — the
+        records it covers may have just been logically truncated (the
+        async-callback-across-regimes hazard the paper's TCP assumption
+        hides; see EXPERIMENTS.md §Paper-deviations)."""
+        if epoch != self.epoch:
+            return
+        self._follower_forced = max(self._follower_forced, lsn)
+        self._ack(lsn)
+
+    def _ack(self, lsn: int) -> None:
+        if self.role is not Role.FOLLOWER:
+            return
+        self._send(self.leader_id, "on_ack", epoch=self.epoch,
+                   follower=self.node.node_id, lsn=lsn, nbytes=96)
+
+    def on_ack(self, epoch: int, follower: int, lsn: int) -> None:
+        if self.role not in (Role.LEADER, Role.TAKEOVER) or epoch != self.epoch:
+            return
+        if follower not in self.insync:
+            return
+        self.acked[follower] = max(self.acked.get(follower, 0), lsn)
+        self._advance_commit()
+
+    def _advance_commit(self) -> None:
+        """Commit rule (Fig. 4): a write commits once the *leader's* log
+        force completed AND at least one follower acked — i.e.
+        min(own forced, max follower ack).  (A more aggressive any-2-of-3
+        rule is also safe Paxos-wise, but the paper's leader-anchored rule
+        is what produces its §9.2 latency profile; see EXPERIMENTS.md.)
+        Acks and forces are per-node prefix-closed (FIFO links, in-order
+        forces)."""
+        best_follower = max([self.acked.get(f, 0) for f in self.insync],
+                            default=0)
+        new_cmt = min(self.forced_upto, best_follower)
+        if new_cmt <= self.cmt:
+            return
+        self._apply_committed(new_cmt)
+        self._after_quorum_progress()
+
+    def _apply_committed(self, upto: int) -> None:
+        """Apply queue entries in LSN order through `upto`; leader replies to
+        clients here (the write is now durable on a majority).
+
+        Multi-op transactions (§8.2): a batch becomes visible atomically —
+        if `upto` lands inside a batch (tail not yet quorum-covered), apply
+        stops before the batch's first record (cmt is held back, which is
+        protocol-safe: it is a conservative commit watermark)."""
+        if upto <= self.cmt:
+            return
+        for lsn in sorted(l for l in self.queue if self.cmt < l <= upto):
+            rec = self.queue[lsn]
+            if rec.txn_tail and rec.txn_tail > upto:
+                upto = lsn - 1 if lsn - 1 > self.cmt else self.cmt
+                break
+        if upto <= self.cmt:
+            return
+        for lsn in sorted(l for l in self.queue if self.cmt < l <= upto):
+            rec = self.queue.pop(lsn)
+            self.store.apply(rec)
+            self.commits += 1
+            cb = self.pending_reply.pop(lsn, None)
+            if cb is not None:
+                ver = rec.columns[0][2] if rec.columns else None
+                cb(Result(ErrorCode.OK, version=ver))
+        self.cmt = upto
+        flushed = self.store.maybe_flush(self.cmt)
+        if flushed is not None:
+            self.node.wal.note_flushed(self.rid, flushed)
+
+    # --- periodic async commit messages (§5) -----------------------------------
+    def _arm_commit_timer(self) -> None:
+        if self._commit_timer is not None:
+            self._commit_timer.cancel()
+        self._commit_timer = self.node.sim.schedule(
+            self.cfg.commit_period, self._commit_tick)
+
+    def _commit_tick(self) -> None:
+        if self.role not in (Role.LEADER, Role.TAKEOVER):
+            return
+        self.node.wal.append(CommitMarker(self.rid, self.cmt), force=False)
+        for f in self.insync:
+            self._send(f, "on_commit", epoch=self.epoch, commit_lsn=self.cmt,
+                       nbytes=96)
+        self._arm_commit_timer()
+
+    def on_commit(self, epoch: int, commit_lsn: int) -> None:
+        if self.role is not Role.FOLLOWER or epoch != self.epoch:
+            return
+        self._apply_committed(min(commit_lsn, self.lst))
+        self.node.wal.append(CommitMarker(self.rid, self.cmt), force=False)
+
+    # ===================================================== reads (§3, §5)
+    def client_read(self, key: str, colname: str, consistent: bool,
+                    reply: Callable) -> None:
+        if consistent:
+            # strong reads are served only by a live leader (§5)
+            if self.role is not Role.LEADER or not self.node.has_session():
+                reply(Result(ErrorCode.NOT_LEADER, leader_hint=self.leader_id))
+                return
+        else:
+            # timeline reads: any replica with a recovered store (§8.1 —
+            # available with just 1 node up)
+            if self.role is Role.OFFLINE:
+                reply(Result(ErrorCode.UNAVAILABLE))
+                return
+        self.reads_served += 1
+        cell = self.store.get(key, colname)
+        if cell is None or cell.deleted:
+            reply(Result(ErrorCode.NOT_FOUND,
+                         version=cell.version if cell else 0))
+        else:
+            reply(Result(ErrorCode.OK, value=cell.value, version=cell.version))

@@ -1,0 +1,331 @@
+"""Deterministic discrete-event simulator.
+
+Every component of the Spinnaker reproduction (nodes, disks, network,
+coordination service, clients) runs on this simulator so that arbitrary
+failure schedules are reproducible bit-for-bit from a seed.  Time is in
+seconds (float).  Events with equal timestamps are ordered by insertion
+sequence, which makes runs deterministic regardless of heap tie-breaking.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import random
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+
+class Event:
+    """A cancellable scheduled callback."""
+
+    __slots__ = ("time", "seq", "fn", "args", "cancelled")
+
+    def __init__(self, time: float, seq: int, fn: Callable, args: tuple):
+        self.time = time
+        self.seq = seq
+        self.fn = fn
+        self.args = args
+        self.cancelled = False
+
+    def cancel(self) -> None:
+        self.cancelled = True
+
+    def __lt__(self, other: "Event") -> bool:
+        return (self.time, self.seq) < (other.time, other.seq)
+
+
+class Simulator:
+    """Event loop with a virtual clock."""
+
+    def __init__(self, seed: int = 0):
+        self.now: float = 0.0
+        self._heap: list[Event] = []
+        self._seq = itertools.count()
+        self.rng = random.Random(seed)
+        self.events_processed = 0
+
+    # -- scheduling ---------------------------------------------------------
+    def schedule(self, delay: float, fn: Callable, *args: Any) -> Event:
+        if delay < 0:
+            raise ValueError(f"negative delay {delay}")
+        ev = Event(self.now + delay, next(self._seq), fn, args)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def at(self, time: float, fn: Callable, *args: Any) -> Event:
+        return self.schedule(max(0.0, time - self.now), fn, *args)
+
+    # -- execution ----------------------------------------------------------
+    def step(self) -> bool:
+        """Run one event.  Returns False when the queue is exhausted."""
+        while self._heap:
+            ev = heapq.heappop(self._heap)
+            if ev.cancelled:
+                continue
+            if ev.time < self.now - 1e-12:
+                raise RuntimeError("event scheduled in the past")
+            self.now = max(self.now, ev.time)
+            self.events_processed += 1
+            ev.fn(*ev.args)
+            return True
+        return False
+
+    def run(self, until: Optional[float] = None, max_events: int = 50_000_000) -> None:
+        """Run events until the queue empties or the clock passes `until`."""
+        n = 0
+        while self._heap:
+            ev = self._heap[0]
+            if ev.cancelled:
+                heapq.heappop(self._heap)
+                continue
+            if until is not None and ev.time > until:
+                self.now = until
+                return
+            if not self.step():
+                return
+            n += 1
+            if n > max_events:
+                raise RuntimeError(f"simulation exceeded {max_events} events")
+        if until is not None:
+            self.now = max(self.now, until)
+
+    def run_until_idle(self, max_events: int = 50_000_000) -> None:
+        self.run(until=None, max_events=max_events)
+
+    def run_for(self, dt: float) -> None:
+        """Advance the clock by dt (periodic timers keep the queue non-empty
+        forever, so bounded runs are the normal driving mode)."""
+        self.run(until=self.now + dt)
+
+    # -- randomness helpers ---------------------------------------------------
+    def jitter(self, mean: float, cv: float = 0.25) -> float:
+        """Log-normal-ish positive jittered latency with coefficient of variation cv."""
+        if mean <= 0:
+            return 0.0
+        lo = mean * max(0.05, 1.0 - 2.0 * cv)
+        x = self.rng.gauss(mean, mean * cv)
+        return max(lo, x)
+
+
+# ---------------------------------------------------------------------------
+# Resources
+# ---------------------------------------------------------------------------
+
+
+class FifoServer:
+    """A single-server FIFO queue (models per-node CPU or a disk head).
+
+    `submit(service_time, cb)` enqueues a job; `cb` fires when the job
+    completes.  Utilisation and queue statistics are tracked so benchmarks
+    can report saturation points.
+    """
+
+    def __init__(self, sim: Simulator, name: str = "srv"):
+        self.sim = sim
+        self.name = name
+        self.busy_until: float = 0.0
+        self.queue_len = 0
+        self.total_busy = 0.0
+        self.jobs = 0
+        self._open = True
+
+    def reset(self) -> None:
+        """Drop queued work (e.g. on node crash)."""
+        self.busy_until = self.sim.now
+        self.queue_len = 0
+
+    def close(self) -> None:
+        self._open = False
+        self.reset()
+
+    def open(self) -> None:
+        self._open = True
+        self.busy_until = self.sim.now
+
+    def submit(self, service_time: float, cb: Optional[Callable] = None,
+               *args: Any) -> float:
+        """Enqueue a job; returns its completion time."""
+        if not self._open:
+            return float("inf")
+        start = max(self.sim.now, self.busy_until)
+        done = start + service_time
+        self.busy_until = done
+        self.total_busy += service_time
+        self.jobs += 1
+        if cb is not None:
+            gen = self._gen  # crash-generation guard
+            def fire():
+                if self._open and self._gen == gen:
+                    cb(*args)
+            self.sim.schedule(done - self.sim.now, fire)
+        return done
+
+    _gen = 0
+
+    def bump_generation(self) -> None:
+        self._gen += 1
+
+
+@dataclass
+class NetParams:
+    base_latency: float = 200e-6      # one-way propagation + switch, 1 GbE rack
+    bandwidth: float = 117e6          # bytes/sec usable on 1 Gbit
+    jitter_cv: float = 0.20
+    cross_switch_extra: float = 120e-6  # second-level switch hop
+
+
+class Network:
+    """Point-to-point reliable in-order messaging (TCP model, §A.1).
+
+    Per (src, dst) pair delivery is FIFO: a later send never arrives before
+    an earlier one.  Messages to/from a down endpoint are dropped, like a
+    broken TCP connection.
+    """
+
+    def __init__(self, sim: Simulator, params: NetParams | None = None):
+        self.sim = sim
+        self.p = params or NetParams()
+        self._last_delivery: dict[tuple[Any, Any], float] = {}
+        self._down: set[Any] = set()
+        self.bytes_sent = 0
+        self.msgs_sent = 0
+
+    def set_down(self, endpoint: Any, down: bool = True) -> None:
+        if down:
+            self._down.add(endpoint)
+        else:
+            self._down.discard(endpoint)
+
+    def is_down(self, endpoint: Any) -> bool:
+        return endpoint in self._down
+
+    def send(self, src: Any, dst: Any, handler: Callable, *args: Any,
+             nbytes: int = 256, cross_switch: bool = False) -> None:
+        if src in self._down or dst in self._down:
+            return  # dropped
+        lat = self.sim.jitter(self.p.base_latency, self.p.jitter_cv)
+        lat += nbytes / self.p.bandwidth
+        if cross_switch:
+            lat += self.p.cross_switch_extra
+        key = (src, dst)
+        deliver_at = max(self.sim.now + lat,
+                         self._last_delivery.get(key, 0.0) + 1e-9)
+        self._last_delivery[key] = deliver_at
+        self.bytes_sent += nbytes
+        self.msgs_sent += 1
+
+        def deliver():
+            # recheck liveness at delivery time
+            if src in self._down or dst in self._down:
+                return
+            handler(*args)
+
+        self.sim.at(deliver_at, deliver)
+
+
+@dataclass
+class DiskParams:
+    """Log-device model.  Defaults are the paper's SATA HDD logging disk."""
+    force_latency: float = 4.0e-3      # rotational + metadata seek, §C
+    force_cv: float = 0.35
+    bandwidth: float = 80e6            # sequential bytes/sec
+    kind: str = "hdd"
+
+    @staticmethod
+    def hdd() -> "DiskParams":
+        return DiskParams()
+
+    @staticmethod
+    def ssd() -> "DiskParams":
+        # FusionIO ioXtreme-class device (App. D.4)
+        return DiskParams(force_latency=90e-6, force_cv=0.25, bandwidth=500e6,
+                          kind="ssd")
+
+    @staticmethod
+    def memory() -> "DiskParams":
+        # main-memory "log" (App. D.6.2): a force is just a memcpy
+        return DiskParams(force_latency=4e-6, force_cv=0.10, bandwidth=8e9,
+                          kind="mem")
+
+
+class Disk:
+    """Serial log device with FIFO forcing; used by the WAL's group commit."""
+
+    def __init__(self, sim: Simulator, params: DiskParams | None = None,
+                 name: str = "disk"):
+        self.sim = sim
+        self.p = params or DiskParams()
+        self.name = name
+        self.busy = False
+        self._waiters: list[tuple[int, Callable]] = []  # (nbytes, cb)
+        self.forces = 0
+        self.bytes_forced = 0
+        self._gen = 0
+
+    def crash(self) -> None:
+        """Drop in-flight IO (node crash).  Durable state is kept by the WAL."""
+        self._gen += 1
+        self._waiters.clear()
+        self.busy = False
+
+    def force(self, nbytes: int, cb: Callable) -> None:
+        """Request a durable write of `nbytes`; `cb()` fires on completion.
+
+        Requests arriving while the head is busy are coalesced into one
+        batch force when the head frees up — this IS group commit [13].
+        """
+        self._waiters.append((nbytes, cb))
+        if not self.busy:
+            self._start_batch()
+
+    def _start_batch(self) -> None:
+        if not self._waiters:
+            return
+        batch = self._waiters
+        self._waiters = []
+        self.busy = True
+        total = sum(b for b, _ in batch)
+        lat = self.sim.jitter(self.p.force_latency, self.p.force_cv)
+        lat += total / self.p.bandwidth
+        gen = self._gen
+        self.forces += 1
+        self.bytes_forced += total
+
+        def done():
+            if gen != self._gen:
+                return
+            self.busy = False
+            for _, cb in batch:
+                cb()
+            self._start_batch()
+
+        self.sim.schedule(lat, done)
+
+
+# ---------------------------------------------------------------------------
+# Statistics helper
+# ---------------------------------------------------------------------------
+
+
+class LatencyStats:
+    def __init__(self):
+        self.samples: list[float] = []
+
+    def add(self, v: float) -> None:
+        self.samples.append(v)
+
+    @property
+    def count(self) -> int:
+        return len(self.samples)
+
+    @property
+    def mean(self) -> float:
+        return sum(self.samples) / len(self.samples) if self.samples else float("nan")
+
+    def percentile(self, p: float) -> float:
+        if not self.samples:
+            return float("nan")
+        s = sorted(self.samples)
+        idx = min(len(s) - 1, max(0, int(round(p / 100.0 * (len(s) - 1)))))
+        return s[idx]

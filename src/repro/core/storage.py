@@ -1,0 +1,169 @@
+"""Memtables and SSTables (§4.1), per-cohort storage engine.
+
+Committed writes land in a sorted in-memory *memtable*; when it exceeds a
+threshold it is flushed to an immutable *SSTable* tagged with the min/max
+LSN of the writes it contains (§6.1: catch-up falls back to SSTables when
+the log has rolled over).  Background size-tiered compaction merges small
+SSTables.  Reads consult the memtable, then SSTables newest-first.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Iterator, Optional
+
+from .types import Cell, LogRecord, OpType
+
+
+class Memtable:
+    def __init__(self):
+        self.rows: dict[str, dict[str, Cell]] = {}
+        self.bytes = 0
+        self.min_lsn: Optional[int] = None
+        self.max_lsn: int = 0
+
+    def apply(self, rec: LogRecord) -> None:
+        """Apply a committed record.  Idempotent: re-applying the same LSN
+        leaves identical state (local recovery replays ranges of the log)."""
+        row = self.rows.setdefault(rec.key, {})
+        for colname, value, version in rec.columns:
+            old = row.get(colname)
+            if old is not None and old.lsn >= rec.lsn:
+                continue  # replay of an already-applied record
+            deleted = rec.op in (OpType.DELETE, OpType.COND_DELETE) or value is None
+            row[colname] = Cell(value=None if deleted else value,
+                                version=version, lsn=rec.lsn, deleted=deleted)
+            self.bytes += 48 + len(colname) + (
+                len(value) if isinstance(value, (bytes, str)) else 16)
+        if self.min_lsn is None:
+            self.min_lsn = rec.lsn
+        self.max_lsn = max(self.max_lsn, rec.lsn)
+
+    def get(self, key: str, colname: str) -> Optional[Cell]:
+        row = self.rows.get(key)
+        return row.get(colname) if row else None
+
+    def items(self) -> Iterator[tuple[str, str, Cell]]:
+        for key in sorted(self.rows):
+            for colname in sorted(self.rows[key]):
+                yield key, colname, self.rows[key][colname]
+
+
+@dataclass
+class SSTable:
+    """Immutable sorted run, indexed by (key, colname); LSN-tagged (§6.1)."""
+    cells: dict[tuple[str, str], Cell]
+    min_lsn: int
+    max_lsn: int
+
+    def get(self, key: str, colname: str) -> Optional[Cell]:
+        return self.cells.get((key, colname))
+
+    @property
+    def nbytes(self) -> int:
+        return 48 * len(self.cells)
+
+
+class Store:
+    """Per-(node, range) storage engine: one memtable + SSTable stack.
+
+    The memtable is volatile (rebuilt by local recovery); SSTables and the
+    flushed-LSN watermark are durable.
+    """
+
+    def __init__(self, flush_threshold_bytes: int = 4 << 20,
+                 compact_fanin: int = 4):
+        self.memtable = Memtable()
+        self.sstables: list[SSTable] = []   # oldest first
+        self.flush_threshold = flush_threshold_bytes
+        self.compact_fanin = compact_fanin
+        self.flushed_upto = 0               # durable watermark
+        self.flushes = 0
+        self.compactions = 0
+
+    # -- write path -----------------------------------------------------------
+    def apply(self, rec: LogRecord) -> None:
+        self.memtable.apply(rec)
+
+    def maybe_flush(self, committed_lsn: int) -> Optional[int]:
+        """Flush the memtable if over threshold.  Returns the new flushed
+        watermark (callers feed it to WAL.note_flushed for log GC)."""
+        if self.memtable.bytes < self.flush_threshold or self.memtable.min_lsn is None:
+            return None
+        return self.flush(committed_lsn)
+
+    def flush(self, committed_lsn: int) -> int:
+        mt = self.memtable
+        if mt.min_lsn is None:
+            return self.flushed_upto
+        cells = {(k, c): cell for k, c, cell in mt.items()}
+        self.sstables.append(SSTable(cells=cells, min_lsn=mt.min_lsn,
+                                     max_lsn=mt.max_lsn))
+        self.flushed_upto = max(self.flushed_upto, committed_lsn)
+        self.memtable = Memtable()
+        self.flushes += 1
+        self._maybe_compact()
+        return self.flushed_upto
+
+    def _maybe_compact(self) -> None:
+        """Size-tiered: merge the newest `fanin` runs when they pile up.
+        Garbage-collects tombstones shadowed by newer cells."""
+        if len(self.sstables) < self.compact_fanin * 2:
+            return
+        merged: dict[tuple[str, str], Cell] = {}
+        victims = self.sstables[:self.compact_fanin]
+        for t in victims:  # oldest→newest so newer cells overwrite
+            merged.update(t.cells)
+        # drop tombstones in the oldest run (nothing below to shadow)
+        merged = {k: v for k, v in merged.items() if not v.deleted} \
+            if len(self.sstables) == self.compact_fanin else merged
+        self.sstables = [SSTable(
+            cells=merged,
+            min_lsn=min(t.min_lsn for t in victims),
+            max_lsn=max(t.max_lsn for t in victims))] + self.sstables[self.compact_fanin:]
+        self.compactions += 1
+
+    # -- read path ------------------------------------------------------------
+    def get(self, key: str, colname: str) -> Optional[Cell]:
+        cell = self.memtable.get(key, colname)
+        best = cell
+        for t in reversed(self.sstables):
+            c = t.get(key, colname)
+            if c is not None and (best is None or c.lsn > best.lsn):
+                best = c
+        if best is None or best.deleted:
+            return None if best is None else best
+        return best
+
+    def current_version(self, key: str, colname: str) -> int:
+        cell = self.get(key, colname)
+        if cell is None:
+            return 0
+        return cell.version
+
+    # -- catch-up source (SSTable path, §6.1) ----------------------------------
+    def cells_with_lsn_above(self, lo_excl: int) -> list[tuple[str, str, Cell]]:
+        out: dict[tuple[str, str], Cell] = {}
+        for t in self.sstables:
+            for (k, c), cell in t.cells.items():
+                if cell.lsn > lo_excl:
+                    prev = out.get((k, c))
+                    if prev is None or cell.lsn > prev.lsn:
+                        out[(k, c)] = cell
+        for k, c, cell in self.memtable.items():
+            if cell.lsn > lo_excl:
+                prev = out.get((k, c))
+                if prev is None or cell.lsn > prev.lsn:
+                    out[(k, c)] = cell
+        return [(k, c, cell) for (k, c), cell in sorted(out.items())]
+
+    # -- crash ------------------------------------------------------------------
+    def crash_volatile(self) -> None:
+        self.memtable = Memtable()
+
+    def lose_disk(self) -> None:
+        """Disk failure: SSTables and watermark gone (§6.1 'lost all its
+        data because of a disk failure ... moves directly to catch up')."""
+        self.memtable = Memtable()
+        self.sstables = []
+        self.flushed_upto = 0

@@ -1,0 +1,130 @@
+"""Core datatypes: LSNs, log records, cells, API results.
+
+LSNs are 64-bit integers with the *epoch* in the high bits and a sequence
+number in the low bits (paper App. B: "the high order bits of the LSN are
+used to store the epoch number").  LSNs double as Paxos proposal numbers;
+the epoch is bumped in the coordination service on every leader takeover,
+which guarantees new writes order after everything from prior regimes.
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+SEQ_BITS = 40
+SEQ_MASK = (1 << SEQ_BITS) - 1
+
+
+def make_lsn(epoch: int, seq: int) -> int:
+    if seq > SEQ_MASK:
+        raise ValueError("sequence number overflow")
+    return (epoch << SEQ_BITS) | seq
+
+
+def lsn_epoch(lsn: int) -> int:
+    return lsn >> SEQ_BITS
+
+
+def lsn_seq(lsn: int) -> int:
+    return lsn & SEQ_MASK
+
+
+def fmt_lsn(lsn: int) -> str:
+    return f"{lsn_epoch(lsn)}.{lsn_seq(lsn)}"
+
+
+class OpType(enum.Enum):
+    PUT = "put"
+    DELETE = "delete"
+    COND_PUT = "cond_put"
+    COND_DELETE = "cond_delete"
+    # multi-column variant of put (§3: "multi-column versions of its API")
+    MULTI_PUT = "multi_put"
+
+
+@dataclass(frozen=True)
+class WriteOp:
+    """A client write request (pre-LSN-assignment)."""
+    op: OpType
+    key: str
+    colname: str = ""
+    value: Any = None
+    expected_version: Optional[int] = None       # for conditional ops
+    columns: Optional[tuple[tuple[str, Any], ...]] = None  # for MULTI_PUT
+
+    @property
+    def is_conditional(self) -> bool:
+        return self.op in (OpType.COND_PUT, OpType.COND_DELETE)
+
+
+@dataclass
+class LogRecord:
+    """A replicated log record.  `versions` are assigned by the leader at
+    propose time so every replica applies identical state.  `txn_tail`
+    (§8.2 multi-op transactions) marks the LSN of the batch's last record:
+    replicas apply a batch only once its tail is committed."""
+    range_id: int
+    lsn: int
+    op: OpType
+    key: str
+    columns: tuple[tuple[str, Any, int], ...]  # (colname, value, version); value None => tombstone
+    txn_tail: int = 0
+
+    def nbytes(self) -> int:
+        n = 64
+        for c, v, _ in self.columns:
+            n += len(c) + (len(v) if isinstance(v, (bytes, str)) else 16)
+        return n
+
+
+@dataclass
+class CommitMarker:
+    """Non-forced log record persisting a replica's last-committed LSN."""
+    range_id: int
+    commit_lsn: int
+
+
+@dataclass(frozen=True)
+class Cell:
+    """A (value, version) pair stored under (key, colname)."""
+    value: Any
+    version: int
+    lsn: int
+    deleted: bool = False
+
+
+class ErrorCode(enum.Enum):
+    OK = "ok"
+    NOT_LEADER = "not_leader"
+    UNAVAILABLE = "unavailable"
+    VERSION_MISMATCH = "version_mismatch"
+    NOT_FOUND = "not_found"
+    TIMEOUT = "timeout"
+
+
+@dataclass
+class Result:
+    code: ErrorCode
+    value: Any = None
+    version: Optional[int] = None
+    leader_hint: Optional[int] = None
+    latency: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return self.code == ErrorCode.OK
+
+
+@dataclass(frozen=True)
+class KeyRange:
+    """[lo, hi) over the key space; range_id indexes the cohort."""
+    range_id: int
+    lo: str
+    hi: str          # exclusive; "" means +inf (wraparound tail range)
+
+    def contains(self, key: str) -> bool:
+        if self.hi == "":
+            return key >= self.lo
+        return self.lo <= key < self.hi

@@ -1,0 +1,119 @@
+"""Pallas TPU single-query decode attention.
+
+The decode hot loop is memory-bound: one query row per (batch, head)
+streams the KV cache from HBM exactly once.  Grid = (batch, q_heads,
+k_blocks) with the k dimension sequential; online-softmax state (m, l,
+acc) sits in VMEM scratch.  The `length` operand masks cache positions
+beyond the current decode index so one compiled kernel serves every step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1.0e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, scale: float, window: int, block_k: int):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+    length = len_ref[0]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    lo = ik * block_k
+    needed = lo < length
+    if window:
+        needed &= (lo + block_k) > length - window
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)             # (1, hd)
+        k = k_ref[0, 0].astype(jnp.float32)             # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = lo + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        mask = pos < length
+        if window:
+            mask &= pos >= length - window
+        s = jnp.where(mask, s, NEG_INF)                 # (1, bk)
+        m_prev = m_scr[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_cur
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_bhd(q: jax.Array, k_cache: jax.Array,
+                         v_cache: jax.Array, length: jax.Array, *,
+                         window: int = 0, block_k: int = 512,
+                         scale: float | None = None,
+                         interpret: bool = False) -> jax.Array:
+    """q: (B, H, hd); caches: (B, Hkv, T, hd); length: () int32.
+    Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    _, Hkv, T, _ = k_cache.shape
+    group = H // Hkv
+    if scale is None:
+        scale = hd ** -0.5
+    block_k = min(block_k, max(8, T))
+    pad = (-T) % block_k
+    if pad:
+        widths = ((0, 0), (0, 0), (0, pad), (0, 0))
+        k_cache = jnp.pad(k_cache, widths)
+        v_cache = jnp.pad(v_cache, widths)
+    nk = k_cache.shape[2] // block_k
+    qr = q[:, :, None, :]                               # (B, H, 1, hd)
+    length = jnp.asarray(length, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
+                               block_k=block_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ik: (0,)),   # length scalar
+            pl.BlockSpec((1, 1, 1, hd), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, ik, group=group: (b, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, ik, group=group: (b, h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, hd), q.dtype),
+        scratch_shapes=[_scratch((1, 1)), _scratch((1, 1)), _scratch((1, hd))],
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(length, qr, k_cache, v_cache)
+    return out[:, :, 0, :]
+
+
+def _scratch(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)
+
+
+def _compiler_params():
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.CompilerParams(
+        dimension_semantics=("parallel", "parallel", "arbitrary"))

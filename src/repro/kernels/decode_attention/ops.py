@@ -1,0 +1,28 @@
+"""jit'd wrapper for decode attention with XLA fallback."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention_bhd
+from .ref import decode_attention_ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("window", "block_k"))
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length, *, window: int = 0,
+                     block_k: int = 512) -> jax.Array:
+    return decode_attention_bhd(q, k_cache, v_cache, length, window=window,
+                                block_k=block_k, interpret=_use_interpret())
+
+
+@partial(jax.jit, static_argnames=("window",))
+def decode_attention_xla(q, k_cache, v_cache, length, *, window: int = 0):
+    return decode_attention_ref(q, k_cache, v_cache, length, window=window)

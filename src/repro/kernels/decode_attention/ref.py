@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for single-query decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array,
+                         v_cache: jax.Array, length, *,
+                         window: int = 0,
+                         scale: float | None = None) -> jax.Array:
+    """q: (B, H, hd); caches: (B, Hkv, T, hd); length: int — number of
+    valid cache positions.  Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    _, Hkv, T, _ = k_cache.shape
+    group = H // Hkv
+    if scale is None:
+        scale = hd ** -0.5
+    kk = jnp.repeat(k_cache, group, axis=1).astype(jnp.float32)
+    vv = jnp.repeat(v_cache, group, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhd,bhtd->bht", q.astype(jnp.float32), kk) * scale
+    pos = jnp.arange(T)
+    mask = pos < length
+    if window:
+        mask &= pos >= length - window
+    s = jnp.where(mask[None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bht,bhtd->bhd", p, vv).astype(q.dtype)

@@ -1,0 +1,163 @@
+"""Pallas TPU flash attention (causal, GQA, optional sliding window).
+
+Design (TPU-native, not a CUDA port):
+- grid = (batch, q_heads, q_blocks, k_blocks); the k dimension is the
+  innermost, sequential ("arbitrary") axis so the online-softmax state
+  lives in VMEM scratch across k steps;
+- BlockSpec tiles: q/o (1,1,block_q,hd), k/v (1,1,block_k,hd) — MXU-aligned
+  (block_q=block_k=128 default, hd up to 256), working set
+  ≈ (2·block_q + 2·block_k)·hd·4B ≪ VMEM;
+- GQA is folded into the k/v index_map (q head h reads kv head
+  h // (H/Hkv)) — no repeated KV materialisation in HBM;
+- causal + window masking via block-level iota compare; fully-masked
+  blocks still iterate but skip the FLOPs via pl.when on the block's
+  reachability (cheap static bound).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1.0e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int, block_q: int,
+                  block_k: int, seq_q: int, seq_k: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # static reachability: causal ⇒ k-block start ≤ q-block end
+    q_lo = iq * block_q
+    q_hi = q_lo + block_q - 1
+    k_lo = ik * block_k
+    reachable = jnp.asarray(True)
+    if causal:
+        reachable &= k_lo <= q_hi
+    if window:
+        reachable &= (ik + 1) * block_k - 1 > q_lo - window
+
+    @pl.when(reachable)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32,
+                                                (block_q, block_k), 0)
+        k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32,
+                                                (block_q, block_k), 1)
+        mask = (k_pos < seq_k) & (q_pos < seq_q)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                            # (bq, 1)
+        l_prev = l_scr[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)                # (bq, 1)
+        p = jnp.exp(s - m_cur)                         # (bq, bk)
+        l_cur = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_cur
+        l_scr[...] = l_cur
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)                # fully-masked rows
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True, window: int = 0,
+                         block_q: int = 128, block_k: int = 128,
+                         scale: float | None = None,
+                         interpret: bool = False) -> jax.Array:
+    """q: (B, H, Sq, hd); k/v: (B, Hkv, Sk, hd) -> (B, H, Sq, hd)."""
+    B, H, Sq, hd = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert H % Hkv == 0
+    group = H // Hkv
+    if scale is None:
+        scale = hd ** -0.5
+    block_q = min(block_q, max(8, Sq))
+    block_k = min(block_k, max(8, Sk))
+
+    def pad_to(x, axis, mult):
+        pad = (-x.shape[axis]) % mult
+        if pad == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        return jnp.pad(x, widths)
+
+    qp = pad_to(q, 2, block_q)
+    kp = pad_to(k, 2, block_k)
+    vp = pad_to(v, 2, block_k)
+    nq = qp.shape[2] // block_q
+    nk = kp.shape[2] // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, seq_q=Sq, seq_k=Sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik, group=group: (b, h // group,
+                                                            ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik, group=group: (b, h // group,
+                                                            ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
+        scratch_shapes=[
+            pl_scratch((block_q, 1)),       # running max m
+            pl_scratch((block_q, 1)),       # running denom l
+            pl_scratch((block_q, hd)),      # accumulator
+        ],
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :Sq, :]
+
+
+def pl_scratch(shape):
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        return pltpu.VMEM(shape, jnp.float32)
+    except Exception:  # pragma: no cover - CPU-only environments
+        return pl.MemorySpace.ANY(shape, jnp.float32)
+
+
+def _compiler_params():
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        return pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"))
+    except Exception:  # pragma: no cover
+        return None

@@ -1,0 +1,42 @@
+"""jit'd public wrapper: (B,S,H,hd) layout, XLA fallback + interpret mode.
+
+On CPU (this container) the kernel executes in interpret mode; on TPU it
+compiles via Mosaic.  `flash_attention` is the entry the model layer uses
+when cfg.attn_impl == "pallas".
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+from .ref import attention_ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128) -> jax.Array:
+    """q: (B, S, H, hd); k/v: (B, S, Hkv, hd) -> (B, S, H*hd-compatible)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                             block_q=block_q, block_k=block_k,
+                             interpret=_use_interpret())
+    return o.transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention_xla(q, k, v, *, causal: bool = True, window: int = 0):
+    """XLA fallback with identical semantics (used by dry-run lowering)."""
+    o = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                      v.transpose(0, 2, 1, 3), causal=causal, window=window)
+    return o.transpose(0, 2, 1, 3)

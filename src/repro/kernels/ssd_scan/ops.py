@@ -1,0 +1,31 @@
+"""jit'd wrapper for the SSD scan with XLA (chunked-jnp) fallback."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan
+from .ref import ssd_chunked_jnp
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("chunk", "head_block"))
+def ssd(x, dt, A, B, C, *, chunk: int = 128, head_block: int = 8):
+    """x: (b,s,h,p); dt: (b,s,h); A: (h,); B/C: (b,s,g,n) with g==1.
+    Returns (y, None) — decode keeps its own state path."""
+    assert B.shape[2] == 1, "kernel path assumes single-group SSD"
+    y = ssd_scan(x, dt, A, B[:, :, 0, :], C[:, :, 0, :], chunk=chunk,
+                 head_block=min(head_block, x.shape[2]),
+                 interpret=_use_interpret())
+    return y, None
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd_xla(x, dt, A, B, C, *, chunk: int = 128):
+    return ssd_chunked_jnp(x, dt, A, B, C, chunk=chunk)

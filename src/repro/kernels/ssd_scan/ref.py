@@ -1,0 +1,39 @@
+"""Oracles for the SSD scan.
+
+`ssd_sequential` is the ground truth (direct recurrence, one step per
+token); `ssd_chunked_jnp` re-exports the vectorised chunked formulation
+from the model layer.  Tests check kernel == chunked == sequential.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...models.mamba2 import ssd_chunked as ssd_chunked_jnp  # noqa: F401
+
+
+def ssd_sequential(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                   C: jax.Array):
+    """Direct SSD recurrence.  x: (b,s,h,p); dt: (b,s,h); A: (h,);
+    B/C: (b,s,g,n).  Returns (y, final_state)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)   # (b,s,h,n)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp                              # (b,h,p) (b,h) ...
+        decay = jnp.exp(dtt * A[None, :])                  # (b,h)
+        state = state * decay[..., None, None] \
+            + (dtt[..., None] * xt.astype(jnp.float32))[..., :, None] \
+            * Bt[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ct)
+        return state, y
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2).astype(jnp.float32),
+          Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, init, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final

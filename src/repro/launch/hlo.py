@@ -1,0 +1,110 @@
+"""Post-SPMD HLO analysis: collective inventory and per-chip link bytes.
+
+cost_analysis() has no collective traffic, so we parse the compiled
+(per-device) HLO text.  For each collective we derive the bytes a single
+chip moves over ICI links under ring algorithms:
+
+    all-gather      : (N-1)/N × result_bytes
+    reduce-scatter  : (N-1)   × result_bytes          (input = N × result)
+    all-reduce      : 2(N-1)/N × result_bytes
+    all-to-all      : (N-1)/N × result_bytes
+    collective-permute : result_bytes
+
+N = participating group size parsed from replica_groups.  Async
+`-start`/`-done` pairs are counted once (on the start op).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=lambda: defaultdict(int))
+    result_bytes: dict = field(default_factory=lambda: defaultdict(int))
+    link_bytes: dict = field(default_factory=lambda: defaultdict(float))
+
+    @property
+    def total_link_bytes(self) -> float:
+        return sum(self.link_bytes.values())
+
+    def table(self) -> list[dict]:
+        return [{"op": op, "count": self.counts[op],
+                 "result_bytes": self.result_bytes[op],
+                 "link_bytes_per_chip": self.link_bytes[op]}
+                for op in sorted(self.counts)]
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if m is None:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        base = op.replace("-start", "")
+        rb = shape_bytes(type_str)
+        n = max(2, _group_size(line, n_devices))
+        if base == "all-gather":
+            link = (n - 1) / n * rb
+        elif base == "reduce-scatter":
+            link = (n - 1) * rb
+        elif base == "all-reduce":
+            link = 2 * (n - 1) / n * rb
+        elif base == "all-to-all":
+            link = (n - 1) / n * rb
+        else:  # collective-permute
+            link = rb
+        stats.counts[base] += 1
+        stats.result_bytes[base] += rb
+        stats.link_bytes[base] += link
+    return stats
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first init,
+while smoke tests and benches see the real single device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 (one v5e pod's worth of chips) or 2×16×16 (two pods).
+
+    Axes: 'pod' is the DCN-connected outer data axis; 'data' hosts
+    FSDP/EP/DP; 'model' hosts tensor parallelism over ICI.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for_devices(n_devices: int, model_parallel: int = 1,
+                          axes: tuple[str, str] = ("data", "model")):
+    """Largest (data, model) grid for an elastic restart (repro.ft)."""
+    model = min(model_parallel, n_devices)
+    while n_devices % model:
+        model -= 1
+    return jax.make_mesh((n_devices // model, model), axes)

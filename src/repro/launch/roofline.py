@@ -1,0 +1,87 @@
+"""Roofline term derivation from dry-run artifacts (TPU v5e targets).
+
+Terms (per chip — cost_analysis of the post-SPMD module is per-device):
+    compute    = HLO_flops / peak_flops
+    memory     = HLO_bytes / hbm_bw
+    collective = link_bytes_per_chip / link_bw
+
+plus MODEL_FLOPS (6·N·D train / 2·N·D forward, N_active for MoE) and the
+useful-compute ratio MODEL_FLOPS / (HLO_flops × chips), which exposes
+remat recompute and dispatch waste.
+"""
+
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+
+from ..models.config import ModelConfig
+from .shapes import SHAPES, ShapeSpec
+
+# TPU v5e hardware constants (per brief)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    link_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    step_time_s: float          # max of the three terms (overlap-ideal)
+    mfu: float                  # model_flops / (chips·peak·step_time)
+    args_bytes_per_chip: float = 0.0
+    temp_bytes_per_chip: float = 0.0
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def model_flops(cfg: ModelConfig, spec: ShapeSpec) -> float:
+    n = cfg.active_param_count() if cfg.is_moe else cfg.param_count()
+    if spec.kind == "train":
+        tokens = spec.seq_len * spec.global_batch
+        return 6.0 * n * tokens
+    if spec.kind == "prefill":
+        tokens = spec.seq_len * spec.global_batch
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * spec.global_batch
+
+
+def derive(arch: str, shape: str, mesh_name: str, chips: int,
+           cost: dict, mem: object, link_bytes_per_chip: float,
+           cfg: ModelConfig) -> Roofline:
+    spec = SHAPES[shape]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    coll_s = link_bytes_per_chip / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, spec)
+    useful = mf / max(1.0, flops * chips)
+    step = max(compute_s, memory_s, coll_s)
+    mfu = mf / max(1e-12, chips * PEAK_FLOPS * step)
+    args_b = getattr(mem, "argument_size_in_bytes", 0) if mem else 0
+    temp_b = getattr(mem, "temp_size_in_bytes", 0) if mem else 0
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops_per_chip=flops, hlo_bytes_per_chip=byts,
+        link_bytes_per_chip=link_bytes_per_chip,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        dominant=dominant, model_flops=mf, useful_ratio=useful,
+        step_time_s=step, mfu=mfu,
+        args_bytes_per_chip=float(args_b), temp_bytes_per_chip=float(temp_b))

@@ -1,0 +1,128 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins.
+
+Four shapes per architecture (train_4k / prefill_32k / decode_32k /
+long_500k); `input_specs` returns allocation-free ShapeDtypeStructs for
+dry-run lowering, `make_batch` returns real (small) arrays for smoke tests
+and examples.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import init_cache
+from ..models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """(runs?, reason).  long_500k needs sub-quadratic context handling:
+    only SSM/hybrid archs run it (DESIGN.md §Arch-applicability)."""
+    if shape_name == "long_500k" and not cfg.has_ssm:
+        return False, ("pure full-attention arch: a 524k dense KV cache is "
+                       "the quadratic blowup long_500k excludes; skipped "
+                       "per brief")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# spec builders (ShapeDtypeStruct — no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg: ModelConfig, spec: ShapeSpec) -> dict:
+    B, S = spec.global_batch, spec.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.modality == "vlm":
+        P = cfg.num_patches
+        return {"tokens": _sds((B, S - P), jnp.int32),
+                "patches": _sds((B, P, cfg.d_model), dt),
+                "labels": _sds((B, S), jnp.int32)}
+    if cfg.modality == "audio" and cfg.frame_embed:
+        return {"frames": _sds((B, S, cfg.d_model), dt),
+                "labels": _sds((B, S), jnp.int32)}
+    return {"tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32)}
+
+
+def decode_input_specs(cfg: ModelConfig, spec: ShapeSpec) -> dict:
+    B = spec.global_batch
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.modality == "audio" and cfg.frame_embed:
+        tok = _sds((B, 1, cfg.d_model), dt)
+    else:
+        tok = _sds((B, 1), jnp.int32)
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, B, spec.seq_len))
+    return {"tokens": tok, "cache": cache}
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    spec = SHAPES[shape_name]
+    if spec.kind in ("train", "prefill"):
+        return train_input_specs(cfg, spec)
+    return decode_input_specs(cfg, spec)
+
+
+# ---------------------------------------------------------------------------
+# real batches (smoke tests, examples)
+# ---------------------------------------------------------------------------
+
+
+def make_batch(cfg: ModelConfig, rng: np.random.Generator, batch: int,
+               seq: int) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.modality == "vlm":
+        P = cfg.num_patches
+        return {
+            "tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (batch, seq - P)), jnp.int32),
+            "patches": jnp.asarray(
+                rng.standard_normal((batch, P, cfg.d_model)), dt),
+            "labels": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+        }
+    if cfg.modality == "audio" and cfg.frame_embed:
+        return {
+            "frames": jnp.asarray(
+                rng.standard_normal((batch, seq, cfg.d_model)) * 0.02, dt),
+            "labels": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+        }
+    return {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+        "labels": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+    }
+
+
+def make_decode_tokens(cfg: ModelConfig, rng: np.random.Generator,
+                       batch: int):
+    if cfg.modality == "audio" and cfg.frame_embed:
+        return jnp.asarray(rng.standard_normal((batch, 1, cfg.d_model)) * 0.02,
+                           jnp.dtype(cfg.dtype))
+    return jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, 1)), jnp.int32)

@@ -1,0 +1,8 @@
+"""Pure-JAX model library: dense/MoE transformers, Mamba2 SSD, hybrids."""
+
+from .config import ModelConfig
+from .model import (decode_step, forward, init_cache, init_params, loss_fn,
+                    prefill)
+
+__all__ = ["ModelConfig", "decode_step", "forward", "init_cache",
+           "init_params", "loss_fn", "prefill"]

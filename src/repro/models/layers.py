@@ -1,0 +1,382 @@
+"""Building-block layers (pure JAX, no flax).
+
+Parameters are plain dict pytrees.  Every layer is a pair of functions:
+`init_*(rng, ...) -> params` and the apply function.  Sharding is applied
+from outside via repro.dist; `pshard` is a pluggable activation-sharding
+hook that becomes a no-op when no mesh context is installed.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .quant import wcast
+
+# ---------------------------------------------------------------------------
+# activation sharding hook (installed by repro.dist.context)
+# ---------------------------------------------------------------------------
+
+_SHARD_HOOK = None
+
+
+def install_shard_hook(fn) -> None:
+    global _SHARD_HOOK
+    _SHARD_HOOK = fn
+
+
+def pshard(x: jax.Array, kind: str) -> jax.Array:
+    """Constrain activation sharding; `kind` names a logical layout
+    ('act_btd', 'act_btf', 'moe_ecd', ...) resolved by the dist context."""
+    if _SHARD_HOOK is None:
+        return x
+    return _SHARD_HOOK(x, kind)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(rng, shape, in_axis: int = 0, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(rng, shape, dtype=jnp.float32, std: float = 0.02):
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / projections
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(params, x: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(dt)
+
+
+def linear(w, x: jax.Array) -> jax.Array:
+    return jnp.einsum("...d,df->...f", x, wcast(w, x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, causal, optional sliding window) — XLA reference path
+# ---------------------------------------------------------------------------
+
+
+def init_attention(rng, cfg: ModelConfig, dtype):
+    D = cfg.d_model
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(ks[0], (D, H * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (D, Hkv * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (D, Hkv * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (H * hd, D), dtype=dtype),
+    }
+
+
+def _gqa_scores(q, k, scale):
+    """q: (B,S,Hkv,rep,hd) k: (B,T,Hkv,hd) -> (B,Hkv,rep,S,T)"""
+    return jnp.einsum("bshrd,bthd->bhrst", q, k) * scale
+
+
+def attention(params, x: jax.Array, cfg: ModelConfig,
+              positions: jax.Array, window: int = 0) -> jax.Array:
+    """Causal self-attention over the full sequence (train / prefill)."""
+    B, S, D = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    rep = H // Hkv
+    q = linear(params["wq"], x).reshape(B, S, Hkv, rep, hd)
+    k = linear(params["wk"], x).reshape(B, S, Hkv, hd)
+    v = linear(params["wv"], x).reshape(B, S, Hkv, hd)
+    q = apply_rope(q.reshape(B, S, Hkv * rep, hd), positions,
+                   cfg.rope_theta).reshape(B, S, Hkv, rep, hd)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = pshard(q, "act_bshrd")
+    k = pshard(k, "act_bthd")
+
+    if cfg.attn_impl == "pallas":
+        from ..kernels.flash_attention import ops as fa_ops
+        o = fa_ops.flash_attention(
+            q.reshape(B, S, H, hd), k, v, causal=True, window=window)
+        o = o.reshape(B, S, H * hd)
+    elif cfg.attn_impl == "xla_chunked":
+        o = _attention_chunked(q, k, v, positions, window=window,
+                               unroll=not cfg.scan_layers)
+        o = o.reshape(B, S, H * hd)
+    elif cfg.attn_impl == "xla_bhsd":
+        # head-major layout: materialise GQA-repeated K/V so every tensor
+        # (incl. the quadratic scores) carries a shardable q-head axis —
+        # the memory-roofline fix for H % tp == 0 archs
+        qh = pshard(q.reshape(B, S, H, hd), "act_q_bshd")
+        kr = pshard(jnp.repeat(k, rep, axis=2), "act_q_bshd")
+        vr = pshard(jnp.repeat(v, rep, axis=2), "act_q_bshd")
+        scale = 1.0 / math.sqrt(hd)
+        s = jnp.einsum("bshd,bthd->bhst", qh, kr) * scale
+        ii = positions[:, :, None]
+        jj = positions[:, None, :]
+        mask = jj <= ii
+        if window:
+            mask &= jj > ii - window
+        s = jnp.where(mask[:, None, :, :], s, -jnp.inf)
+        p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhst,bthd->bshd", p, vr).reshape(B, S, H * hd)
+    else:
+        scale = 1.0 / math.sqrt(hd)
+        scores = _gqa_scores(q, k, scale)                  # (B,Hkv,rep,S,T)
+        ii = positions[:, :, None]                          # (B,S,1)
+        jj = positions[:, None, :]                          # (B,1,T)
+        mask = jj <= ii
+        if window:
+            mask &= jj > ii - window
+        scores = jnp.where(mask[:, None, None, :, :], scores, -jnp.inf)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+        probs = probs.astype(x.dtype)
+        o = jnp.einsum("bhrst,bthd->bshrd", probs, v).reshape(B, S, H * hd)
+    o = pshard(o, "act_bshd_flat")
+    return linear(params["wo"], o)
+
+
+def attention_decode(params, x: jax.Array, cfg: ModelConfig,
+                     k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, window: int = 0):
+    """One-token decode against a KV cache.
+
+    x: (B,1,D); caches: (B,Hkv,T,hd); pos: () current index (same for all
+    batch rows — the serving engine aligns slots).
+    Returns (out (B,1,D), k_cache, v_cache).
+    """
+    B, _, D = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    rep = H // Hkv
+    T = k_cache.shape[2]
+    q = linear(params["wq"], x).reshape(B, 1, Hkv, rep, hd)
+    k = linear(params["wk"], x).reshape(B, 1, Hkv, hd)
+    v = linear(params["wv"], x).reshape(B, 1, Hkv, hd)
+    posb = jnp.broadcast_to(pos[None], (B, 1))
+    q = apply_rope(q.reshape(B, 1, H, hd), posb, cfg.rope_theta
+                   ).reshape(B, 1, Hkv, rep, hd)
+    k = apply_rope(k, posb, cfg.rope_theta)
+
+    if cfg.decode_attn_impl == "shard_map":
+        from ..dist.context import current_ctx
+        ctx = current_ctx()
+        dp_size = 1
+        tp_size = 0
+        if ctx is not None:
+            tp_size = ctx.mesh.shape[ctx.pol.tp_axis]
+            for a in ctx.pol.dp_axes:
+                dp_size *= ctx.mesh.shape[a]
+        # only when KV heads CANNOT shard the model axis (the GSPMD
+        # cache-gather pathology); head-shardable archs already decode
+        # collective-free and the hd reshard would regress them ~8×
+        # (EXPERIMENTS.md §Perf optimized-decode table)
+        if ctx is not None and tp_size and Hkv % tp_size != 0 \
+                and hd % tp_size == 0 and B % dp_size == 0:
+            o, k_cache, v_cache = _decode_attention_shard_map(
+                q, k, v, k_cache, v_cache, pos, ctx, window=window)
+            return linear(params["wo"], o), k_cache, v_cache
+
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k.transpose(0, 2, 1, 3).astype(k_cache.dtype),
+        (0, 0, pos, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v.transpose(0, 2, 1, 3).astype(v_cache.dtype),
+        (0, 0, pos, 0))
+    if cfg.attn_impl == "pallas":
+        from ..kernels.decode_attention import ops as da_ops
+        o = da_ops.decode_attention(
+            q.reshape(B, H, hd), k_cache, v_cache, pos + 1, window=window)
+        o = o.reshape(B, 1, H * hd)
+    else:
+        scale = 1.0 / math.sqrt(hd)
+        scores = jnp.einsum("bshrd,bhtd->bhrst", q,
+                            k_cache.astype(q.dtype)) * scale  # (B,Hkv,rep,1,T)
+        jj = jnp.arange(T)
+        mask = jj <= pos
+        if window:
+            mask &= jj > pos - window
+        scores = jnp.where(mask[None, None, None, None, :], scores, -jnp.inf)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1
+                               ).astype(x.dtype)
+        o = jnp.einsum("bhrst,bhtd->bshrd", probs,
+                       v_cache.astype(x.dtype)).reshape(B, 1, H * hd)
+    return linear(params["wo"], o), k_cache, v_cache
+
+
+def _decode_attention_shard_map(q, k_new, v_new, k_cache, v_cache, pos, ctx,
+                                *, window: int = 0):
+    """Decode attention with explicit head_dim-sharded collectives.
+
+    GSPMD all-gathers an hd-sharded KV cache per layer (2.9 GB/layer/token
+    on mistral-large — the dominant decode collective).  Written by hand,
+    the hd contraction becomes a psum of the (B,Hkv,rep,1,T) partial
+    scores (67 MB) while cache stays put:  ~45× fewer link bytes.
+
+    q: (B,1,Hkv,rep,hd); k_new/v_new: (B,1,Hkv,hd);
+    caches: (B,Hkv,T,hd).  Returns (o (B,1,H*hd), k_cache, v_cache).
+    """
+    import math as _math
+
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = ctx.mesh
+    dp = ctx.pol.dp_axes
+    tp = ctx.pol.tp_axis
+    B, _, Hkv, rep, hd = q.shape
+    T = k_cache.shape[2]
+    scale = 1.0 / _math.sqrt(hd)
+
+    qspec = P(dp, None, None, None, tp)
+    kvspec = P(dp, None, None, tp)
+    cspec = P(dp, None, None, tp)
+
+    def body(ql, knl, vnl, kc, vc, posl):
+        kc = jax.lax.dynamic_update_slice(
+            kc, knl.transpose(0, 2, 1, 3).astype(kc.dtype), (0, 0, posl, 0))
+        vc = jax.lax.dynamic_update_slice(
+            vc, vnl.transpose(0, 2, 1, 3).astype(vc.dtype), (0, 0, posl, 0))
+        s_part = jnp.einsum("bshrd,bhtd->bhrst", ql,
+                            kc.astype(ql.dtype)) * scale
+        s = jax.lax.psum(s_part, tp)               # (B_l,Hkv,rep,1,T)
+        jj = jnp.arange(T)
+        mask = jj <= posl
+        if window:
+            mask &= jj > posl - window
+        s = jnp.where(mask[None, None, None, None, :], s, -jnp.inf)
+        p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(ql.dtype)
+        o = jnp.einsum("bhrst,bhtd->bshrd", p, vc.astype(ql.dtype))
+        return o, kc, vc                            # o hd-sharded
+
+    o, k_cache, v_cache = shard_map(
+        body, mesh=mesh,
+        in_specs=(qspec, kvspec, kvspec, cspec, cspec, P()),
+        out_specs=(qspec, cspec, cspec),
+        check_vma=False,
+    )(q, k_new, v_new, k_cache, v_cache, pos)
+    H = Hkv * rep
+    return o.reshape(B, 1, H * hd), k_cache, v_cache
+
+
+def _attention_chunked(q, k, v, positions, *, window: int = 0,
+                       chunk: int = 512, unroll: bool = False):
+    """Online-softmax attention, blocked over the KV axis — the pure-XLA
+    flash formulation.  Bounds the live score buffer to (B,H,S,chunk)
+    instead of (B,H,S,T); this is the memory-roofline optimization the
+    Pallas kernel implements natively on TPU.
+
+    q: (B,S,Hkv,rep,hd); k/v: (B,T,Hkv,hd) -> (B,S,Hkv,rep,hd)
+    """
+    B, S, Hkv, rep, hd = q.shape
+    T = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = k.shape[1] // chunk
+    kc = k.reshape(B, nc, chunk, Hkv, hd)
+    vc = v.reshape(B, nc, chunk, Hkv, hd)
+    qpos = positions[:, :, None]                       # (B,S,1)
+
+    m0 = jnp.full((B, Hkv, rep, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, rep, S), jnp.float32)
+    a0 = jnp.zeros((B, S, Hkv, rep, hd), jnp.float32)
+
+    def body(carry, ic):
+        m, l, acc = carry
+        kb = jax.lax.dynamic_index_in_dim(kc, ic, 1, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(vc, ic, 1, keepdims=False)
+        s = jnp.einsum("bshrd,bthd->bhrst", q, kb) * scale
+        kpos = ic * chunk + jnp.arange(chunk)[None, None, :]  # (1,1,chunk)
+        mask = kpos <= qpos                                   # (B,S,chunk)
+        mask &= kpos < T
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask[:, None, None, :, :], s.astype(jnp.float32),
+                      -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows (exp(-inf - -inf))
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[:, None, None, :, :], p, 0.0)
+        alpha = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - m_safe))
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhrst,bthd->bshrd", p.astype(q.dtype), vb)
+        acc_new = acc * alpha.transpose(0, 3, 1, 2)[..., None] \
+            + pv.astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    if unroll:
+        carry = (m0, l0, a0)
+        for ic in range(nc):
+            carry, _ = body(carry, ic)
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nc))
+    denom = jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return (acc / denom).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(rng, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "w_up": dense_init(ks[1], (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(ks[2], (d_ff, d_model), dtype=dtype),
+    }
+
+
+def mlp(params, x: jax.Array, activation: str) -> jax.Array:
+    g = linear(params["w_gate"], x)
+    u = linear(params["w_up"], x)
+    act = jax.nn.gelu(g) if activation == "geglu" else jax.nn.silu(g)
+    h = pshard(act * u, "act_btf")
+    return linear(params["w_down"], h)

@@ -1,0 +1,193 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk quadratic
+term + inter-chunk state recurrence via lax.scan); decode is the O(1)
+recurrent update.  The chunked scan is also provided as a Pallas kernel
+(repro.kernels.ssd_scan); this module's jnp implementation is the oracle
+and the XLA fallback.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init, init_rmsnorm, linear, pshard, rms_norm
+
+
+def init_mamba2(rng, cfg: ModelConfig, dtype):
+    D, Din = cfg.d_model, cfg.d_inner
+    N, H, G = cfg.ssm_state, cfg.ssm_heads, cfg.ssm_groups
+    conv_dim = Din + 2 * G * N
+    ks = jax.random.split(rng, 4)
+    dt = jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32,
+                                    math.log(1e-3), math.log(1e-1)))
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * Din + 2 * G * N + H),
+                              dtype=dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv_width, conv_dim),
+                             dtype=dtype) * 0.5,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(dt)),          # softplus^-1
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": init_rmsnorm(Din),
+        "out_proj": dense_init(ks[3], (Din, D), dtype=dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    Din, N, G, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads
+    z, xBC, dt = jnp.split(zxbcdt, [Din, 2 * Din + 2 * G * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d, width K.  xBC: (B,S,C); w: (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b.astype(out.dtype))
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD forward (oracle).  Shapes:
+      x: (b, s, h, p)   dt: (b, s, h)   A: (h,) (negative)
+      B, C: (b, s, g, n) with heads grouped g | h.
+    Returns y: (b, s, h, p) and final state (b, h, p, n).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, "sequence must be chunk-aligned"
+    nc = s // chunk
+    rep = h // g
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+
+    dA = dtc * A[None, None, None, :]                 # (b,nc,q,h), negative
+    cum = jnp.cumsum(dA, axis=2)                      # within-chunk cumsum
+
+    # intra-chunk quadratic term: M[i,j] = (C_i·B_j) exp(cum_i - cum_j) dt_j
+    Bh = jnp.repeat(Bc, rep, axis=3)                  # (b,nc,q,h,n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    cb = jnp.einsum("bcihn,bcjhn->bchij", Ch, Bh)     # (b,nc,h,q,q)
+    # seg[b,c,h,i,j] = cum_i - cum_j
+    seg = cum.transpose(0, 1, 3, 2)[..., :, None] \
+        - cum.transpose(0, 1, 3, 2)[..., None, :]     # (b,nc,h,q,q)
+    ii = jnp.arange(chunk)
+    causal = ii[:, None] >= ii[None, :]
+    decay = jnp.where(causal, jnp.exp(seg), 0.0)
+    M = cb * decay * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]  # dt_j
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", M.astype(x.dtype), xc)
+
+    # chunk-level states: S_c = sum_j exp(cum_last - cum_j) dt_j B_j x_j^T
+    last = cum[:, :, -1:, :]                          # (b,nc,1,h)
+    w = jnp.exp(last - cum) * dtc                     # (b,nc,q,h)
+    states = jnp.einsum("bcjh,bcjhn,bcjhp->bchpn",
+                        w.astype(x.dtype), Bh.astype(x.dtype), xc)
+
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(last[:, :, 0, :])           # (b,nc,h)
+
+    def step(carry, inp):
+        s_prev = carry
+        s_c, dec = inp
+        s_new = s_prev * dec[..., None, None].astype(s_prev.dtype) + s_c
+        return s_new, s_prev
+
+    init = jnp.zeros((b, h, p, n), x.dtype)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,nc,h,p,n)
+
+    # inter-chunk output: y_i += C_i · (exp(cum_i) * S_prev)
+    inter_w = jnp.exp(cum)                            # (b,nc,q,h)
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp", Ch.astype(x.dtype),
+                         prev_states) * inter_w[..., None].astype(x.dtype)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, final
+
+
+def mamba2_block(params, x: jax.Array, cfg: ModelConfig):
+    """Full Mamba2 block (train/prefill).  x: (B,S,D) -> (B,S,D)."""
+    B, S, D = x.shape
+    Din, N, G, H, P = (cfg.d_inner, cfg.ssm_state, cfg.ssm_groups,
+                       cfg.ssm_heads, cfg.ssm_head_dim)
+    zxbcdt = linear(params["in_proj"], x)
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(xBC, params["conv_w"].astype(x.dtype),
+                       params["conv_b"])
+    xs, Bs, Cs = jnp.split(xBC, [Din, Din + G * N], axis=-1)
+    xs = xs.reshape(B, S, H, P)
+    Bs = Bs.reshape(B, S, G, N)
+    Cs = Cs.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])          # (B,S,H)
+    A = -jnp.exp(params["A_log"])                      # (H,) negative
+
+    if cfg.attn_impl == "pallas":
+        from ..kernels.ssd_scan import ops as ssd_ops
+        y, _ = ssd_ops.ssd(xs, dt, A, Bs, Cs, chunk=cfg.ssm_chunk)
+    else:
+        y, _ = ssd_chunked(xs, dt, A, Bs, Cs, chunk=cfg.ssm_chunk)
+    y = y + xs * params["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B, S, Din)
+    y = rms_norm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    y = pshard(y, "act_btf")
+    return linear(params["out_proj"], y)
+
+
+# ---------------------------------------------------------------------------
+# O(1) recurrent decode
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype):
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, H, P, N), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+    }
+
+
+def mamba2_decode(params, x: jax.Array, cache: dict, cfg: ModelConfig):
+    """One-token step.  x: (B,1,D); cache: {'state','conv'}."""
+    B = x.shape[0]
+    Din, N, G, H, P = (cfg.d_inner, cfg.ssm_state, cfg.ssm_groups,
+                       cfg.ssm_heads, cfg.ssm_head_dim)
+    zxbcdt = linear(params["in_proj"], x)[:, 0]        # (B, ...)
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    # rolling conv window
+    hist = jnp.concatenate([cache["conv"], xBC[:, None, :].astype(
+        cache["conv"].dtype)], axis=1)                 # (B, K, C)
+    w = params["conv_w"].astype(x.dtype)
+    conv_out = jnp.einsum("bkc,kc->bc", hist.astype(x.dtype), w)
+    xBC = jax.nn.silu(conv_out + params["conv_b"].astype(x.dtype))
+    new_conv = hist[:, 1:, :]
+
+    xs, Bs, Cs = jnp.split(xBC, [Din, Din + G * N], axis=-1)
+    xs = xs.reshape(B, H, P)
+    Bs = jnp.repeat(Bs.reshape(B, G, N), H // G, axis=1)
+    Cs = jnp.repeat(Cs.reshape(B, G, N), H // G, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A)                            # (B,H)
+    state = cache["state"].astype(jnp.float32)
+    state = state * decay[..., None, None] \
+        + (dt[..., None] * xs.astype(jnp.float32))[..., :, None] \
+        * Bs[:, :, None, :].astype(jnp.float32)
+    y = jnp.einsum("bhpn,bhn->bhp", state, Cs.astype(jnp.float32))
+    y = y.astype(x.dtype) + xs * params["D"][None, :, None].astype(x.dtype)
+    y = y.reshape(B, 1, Din)
+    y = rms_norm(params["norm"], y * jax.nn.silu(z)[:, None, :], cfg.norm_eps)
+    out = linear(params["out_proj"], y)
+    return out, {"state": state.astype(cache["state"].dtype),
+                 "conv": new_conv}

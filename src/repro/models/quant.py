@@ -1,0 +1,67 @@
+"""Weight-only int8 quantization (W8A16) for serving.
+
+Decode is launched once per token: FSDP weight all-gathers per step are
+the collective bottleneck (dry-run: 2.9 GB/layer/chip/token on
+mistral-large).  The production fix is weight-STATIONARY serving — every
+chip keeps its full TP shard resident — which only fits HBM with 8-bit
+weights.  Per-output-channel absmax scales keep matmul error ~0.4%
+relative; embeddings and norms stay in bf16.
+
+A quantized weight is the pytree {"q": int8 (in, out), "s": f32 (out,)};
+`wcast` transparently dequantizes at use so every matmul site supports
+both representations.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_weight(w: jax.Array) -> dict:
+    """Per-output-channel absmax int8: the scale reduces only the
+    contraction axis (-2), so stacked (L, D, F) / expert (E, D, F)
+    weights keep per-layer/per-expert scales — scan-compatible."""
+    w32 = w.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(w32), axis=-2) / 127.0      # (..., out)
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(w32 / scale[..., None, :]), -127,
+                 127).astype(jnp.int8)
+    return {"q": q, "s": scale}
+
+
+def is_quantized(w) -> bool:
+    return isinstance(w, dict) and "q" in w and "s" in w
+
+
+def wcast(w, dtype):
+    """Weight fetch: dequantize int8 weights or cast dense ones."""
+    if is_quantized(w):
+        return w["q"].astype(dtype) * w["s"][..., None, :].astype(dtype)
+    return w.astype(dtype)
+
+
+_QUANT_SUFFIXES = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+                   "in_proj", "out_proj")
+
+
+def quantize_tree(params: dict) -> dict:
+    """Quantize every matmul weight in a model param tree (embeddings,
+    norms, SSM scalars, conv stay dense)."""
+    def rec(node, name=""):
+        if isinstance(node, dict):
+            return {k: rec(v, k) for k, v in node.items()}
+        if name in _QUANT_SUFFIXES and getattr(node, "ndim", 0) >= 2:
+            return quantize_weight(node)
+        return node
+    return rec(params)
+
+
+def dequantize_tree(params: dict, dtype=jnp.bfloat16) -> dict:
+    def rec(node):
+        if is_quantized(node):
+            return wcast(node, dtype)
+        if isinstance(node, dict):
+            return {k: rec(v) for k, v in node.items()}
+        return node
+    return rec(params)

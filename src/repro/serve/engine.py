@@ -1,0 +1,154 @@
+"""Batched serving engine: continuous-batching decode over a fixed slot
+pool, with timeline-consistent weight refresh from the replicated store.
+
+The engine owns a KV/SSM cache sized (slots, max_seq); requests are
+admitted into free slots, prefilled token-by-token (teacher forcing
+through the shared decode step keeps one compiled program for everything
+— at 1000-node scale you never want a second XLA program per prompt
+length), then decoded until EOS/max_tokens.  Weight refresh uses the
+paper's *timeline* consistency: the engine polls the checkpoint store's
+manifest with a timeline read (stale ≤ commit period) and hot-swaps
+params between batches — serving never blocks the training commit path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import decode_step, init_cache
+from ..models.config import ModelConfig
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    output: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class ServeConfig:
+    slots: int = 4
+    max_seq: int = 256
+    eos_id: int = 1
+    greedy: bool = True
+    refresh_every_batches: int = 0     # 0 = no weight refresh polling
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
+                 store=None, run_id: str = "run0"):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.store = store
+        self.run_id = run_id
+        self.cache = init_cache(cfg, scfg.slots, scfg.max_seq)
+        self.slot_req: list[Optional[Request]] = [None] * scfg.slots
+        self.slot_pos = np.zeros(scfg.slots, np.int32)   # per-slot progress
+        self.queue: list[Request] = []
+        self.finished: dict[int, Request] = {}
+        self.batches_run = 0
+        self.weights_step = -1
+        self._step = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg))
+
+    # -- admission ---------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.scfg.slots):
+            if self.slot_req[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[i] = req
+                self.slot_pos[i] = 0
+
+    # -- decode loop ------------------------------------------------------------
+    def _gather_tokens(self) -> jnp.ndarray:
+        """Next input token per slot: prompt token (prefill phase) or the
+        last generated token (decode phase); idle slots feed EOS."""
+        toks = np.full((self.scfg.slots, 1), self.scfg.eos_id, np.int32)
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            p = int(self.slot_pos[i])
+            if p < len(req.prompt):
+                toks[i, 0] = req.prompt[p]
+            elif req.output:
+                toks[i, 0] = req.output[-1]
+        return jnp.asarray(toks)
+
+    def step_batch(self) -> int:
+        """One lockstep decode step across all slots.  Returns #active."""
+        self._admit()
+        active = sum(r is not None for r in self.slot_req)
+        if active == 0:
+            return 0
+        logits, self.cache = self._step(self.params, self.cache,
+                                        self._gather_tokens())
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            self.slot_pos[i] += 1
+            p = int(self.slot_pos[i])
+            if p < len(req.prompt):
+                continue                      # still prefilling
+            tok = int(nxt[i])
+            req.output.append(tok)
+            if (tok == self.scfg.eos_id
+                    or len(req.output) >= req.max_new_tokens
+                    or p + 1 >= self.scfg.max_seq):
+                req.done = True
+                self.finished[req.rid] = req
+                self.slot_req[i] = None
+        self.batches_run += 1
+        if (self.scfg.refresh_every_batches
+                and self.batches_run % self.scfg.refresh_every_batches == 0):
+            self.maybe_refresh_weights()
+        return active
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.queue and all(r is None for r in self.slot_req):
+                return
+            self.step_batch()
+        raise RuntimeError("serving did not drain")
+
+    # -- timeline weight refresh (§5's consistency menu, applied) -----------------
+    def maybe_refresh_weights(self) -> bool:
+        if self.store is None:
+            return False
+        from ..checkpoint.store import CheckpointError
+        try:
+            step = self.store.latest_step(self.run_id, consistent=False)
+            if step is None or step <= self.weights_step:
+                return False
+            # timeline reads may race a checkpoint mid-commit or hit a
+            # stale replica — that is the contract (§5); skip this round
+            _, flat = self.store.restore(run_id=self.run_id,
+                                         consistent=False)
+        except CheckpointError:
+            return False
+        self.params = _unflatten_like(self.params, flat)
+        self.weights_step = step
+        return True
+
+
+def _unflatten_like(tree, flat: dict):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in leaves:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        arr = flat.get(name)
+        out.append(jnp.asarray(arr, leaf.dtype) if arr is not None else leaf)
+    return jax.tree_util.tree_unflatten(treedef, [l for _, l in leaves]) \
+        if not flat else jax.tree_util.tree_unflatten(treedef, out)

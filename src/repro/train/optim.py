@@ -1,0 +1,179 @@
+"""Hand-rolled optimizers (no optax in this environment).
+
+AdamW for ≤~200B-param configs; Adafactor (factored second moments, no
+momentum by default) for the trillion-parameter MoE where Adam state
+would not fit a pod.  Both are pure pytree transforms so optimizer state
+inherits the parameters' FSDP sharding.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # adafactor
+    decay_rate: float = 0.8
+    factored_min_dim: int = 128
+
+
+def choose_optimizer(param_count: int) -> OptimizerConfig:
+    if param_count > 200e9:
+        return OptimizerConfig(name="adafactor")
+    return OptimizerConfig(name="adamw")
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, opt_state, params, cfg: OptimizerConfig):
+    count = opt_state["count"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g32
+        v2 = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m2 / c1
+        vhat = v2 / c2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (-cfg.lr * step).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"], params)
+    updates = jax.tree.map(lambda t: t[0], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    m = jax.tree.map(lambda t: t[1], out,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    v = jax.tree.map(lambda t: t[2], out,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    return updates, {"m": m, "v": v, "count": count}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor
+# ---------------------------------------------------------------------------
+
+
+def _factored(p, min_dim: int) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= min_dim and p.shape[-2] >= min_dim
+
+
+def adafactor_init(params, cfg: OptimizerConfig = OptimizerConfig()):
+    def one(p):
+        if _factored(p, cfg.factored_min_dim):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"stats": jax.tree.map(one, params,
+                                  is_leaf=lambda x: hasattr(x, "shape")),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, opt_state, params, cfg: OptimizerConfig):
+    count = opt_state["count"] + 1
+    t = count.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-cfg.decay_rate)
+
+    def upd(g, stat, p):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + 1e-30
+        if "vr" in stat:
+            vr = beta2 * stat["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * stat["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            rfac = vr / jnp.mean(vr, axis=-1, keepdims=True)
+            step = g32 / (jnp.sqrt(rfac)[..., None] *
+                          jnp.sqrt(vc)[..., None, :] + cfg.eps)
+            new = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * stat["v"] + (1 - beta2) * g2
+            step = g32 / (jnp.sqrt(v) + cfg.eps)
+            new = {"v": v}
+        # update clipping (Adafactor's RMS clip)
+        rms = jnp.sqrt(jnp.mean(jnp.square(step)) + 1e-30)
+        step = step / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (-cfg.lr * step).astype(p.dtype), new
+
+    flat_out = jax.tree_util.tree_map_with_path(
+        lambda path, g, p: upd(g, _stat_at(opt_state["stats"], path), p),
+        grads, params)
+    updates = jax.tree.map(lambda t: t[0], flat_out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    stats = jax.tree.map(lambda t: t[1], flat_out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return updates, {"stats": stats, "count": count}
+
+
+def _stat_at(stats, path):
+    node = stats
+    for p in path:
+        key = p.key if hasattr(p, "key") else p.idx
+        node = node[key]
+    return node
+
+
+# ---------------------------------------------------------------------------
+# facade
+# ---------------------------------------------------------------------------
+
+
+def init_opt_state(params, cfg: OptimizerConfig):
+    if cfg.name == "adafactor":
+        return adafactor_init(params, cfg)
+    return adamw_init(params)
+
+
+def apply_optimizer(grads, opt_state, params, cfg: OptimizerConfig):
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    if cfg.name == "adafactor":
+        updates, new_state = adafactor_update(grads, opt_state, params, cfg)
+    else:
+        updates, new_state = adamw_update(grads, opt_state, params, cfg)
+    new_params = jax.tree.map(lambda p, u: p + u.astype(p.dtype), params,
+                              updates)
+    return new_params, new_state, gnorm

@@ -1,0 +1,108 @@
+"""Step builders: train_step / prefill_step / serve_step.
+
+These are the functions the dry-run lowers and the drivers jit.  All are
+pure (state, batch) -> (state, metrics) style with donated state.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import decode_step, forward, init_cache, init_params, loss_fn
+from ..models.config import ModelConfig
+from .optim import OptimizerConfig, apply_optimizer, init_opt_state
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: OptimizerConfig = OptimizerConfig()
+    microbatches: int = 1          # grad accumulation steps per global step
+    grad_compression: bool = False  # int8 + error feedback on the DP reduce
+
+
+def init_train_state(rng: jax.Array, cfg: ModelConfig,
+                     tcfg: TrainConfig) -> dict:
+    params = init_params(rng, cfg)
+    return {
+        "params": params,
+        "opt": init_opt_state(params, tcfg.optimizer),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, cfg)
+        return loss, metrics, grads
+
+    def train_step(state, batch):
+        params = state["params"]
+        if tcfg.microbatches > 1:
+            n = tcfg.microbatches
+
+            def reshape(x):
+                b = x.shape[0]
+                return x.reshape(n, b // n, *x.shape[1:])
+            mbatches = jax.tree.map(reshape, batch)
+
+            def body(carry, mb):
+                acc, loss_sum = carry
+                loss, _metrics, grads = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return (acc, loss_sum + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, loss_sum), _ = jax.lax.scan(body, (zeros, 0.0), mbatches)
+            grads = jax.tree.map(lambda g: g / n, gsum)
+            loss = loss_sum / n
+            metrics = {}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        if tcfg.grad_compression:
+            from ..dist.compression import compress_decompress
+            grads = compress_decompress(grads)
+
+        new_params, new_opt, gnorm = apply_optimizer(
+            grads, state["opt"], params, tcfg.optimizer)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        out_metrics = {"loss": loss.astype(jnp.float32),
+                       "grad_norm": gnorm.astype(jnp.float32),
+                       "step": new_state["step"]}
+        out_metrics.update({k: v for k, v in metrics.items()
+                            if k in ("ce", "aux")})
+        return new_state, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """prefill_step(params, batch) -> last-token logits (B, V)."""
+
+    def prefill_step(params, batch):
+        logits, _aux, _mask = forward(params, batch, cfg)
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """serve_step(params, cache, tokens) -> (logits, cache) — one new token
+    against a seq_len-deep cache (the decode shapes lower THIS, not
+    train_step)."""
+
+    def serve_step(params, cache, tokens):
+        logits, new_cache = decode_step(params, cache, tokens, cfg)
+        return logits, new_cache
+
+    return serve_step

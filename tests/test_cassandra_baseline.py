@@ -1,0 +1,91 @@
+"""Tests for the eventually consistent baseline (§9's comparison system)."""
+
+from repro.baselines import CassandraCluster, CassandraConfig
+from repro.core import ErrorCode, Simulator
+from repro.core.cluster import key_of
+
+
+def make(n=5, seed=0):
+    sim = Simulator(seed=seed)
+    cluster = CassandraCluster(sim, CassandraConfig(n_nodes=n))
+    return sim, cluster
+
+
+def test_quorum_write_then_quorum_read():
+    sim, cluster = make()
+    c = cluster.make_client()
+    assert c.sync_write(key_of(5), "c", b"v", quorum=True).ok
+    got = c.sync_read(key_of(5), "c", quorum=True)
+    assert got.ok and got.value == b"v"
+
+
+def test_weak_write_single_ack_faster_than_quorum():
+    sim, cluster = make()
+    c = cluster.make_client()
+    lat_w, lat_q = [], []
+    for i in range(50):
+        r = c.sync_write(key_of(5), "c", f"w{i}".encode(), quorum=False)
+        lat_w.append(r.latency)
+    for i in range(50):
+        r = c.sync_write(key_of(5), "c", f"q{i}".encode(), quorum=True)
+        lat_q.append(r.latency)
+    assert sum(lat_w) / 50 < sum(lat_q) / 50
+
+
+def test_stale_read_possible_after_restart_without_repair():
+    """The consistency gap §9 highlights: no quorum recovery => a restarted
+    replica can serve stale weak reads."""
+    sim, cluster = make(n=3, seed=7)
+    c = cluster.make_client()
+    key = key_of(5)
+    c.sync_write(key, "c", b"old", quorum=True)
+    sim.run_for(1.0)
+    victim = cluster.cohort(cluster.range_of(key))[0]
+    cluster.crash_node(victim)
+    sim.run_for(0.5)
+    assert c.sync_write(key, "c", b"new", quorum=True).ok
+    cluster.restart_node(victim)
+    sim.run_for(0.5)
+    # weak reads round-robin; some hit the stale restarted replica
+    seen = set()
+    for _ in range(12):
+        r = c.sync_read(key, "c", quorum=False)
+        if r.ok:
+            seen.add(r.value)
+    assert b"new" in seen
+    # (stale b"old" may or may not appear depending on routing; both legal
+    # under eventual consistency — the point is no error is raised either way)
+
+
+def test_quorum_read_repairs_stale_replica():
+    sim, cluster = make(n=3, seed=11)
+    c = cluster.make_client()
+    key = key_of(5)
+    c.sync_write(key, "c", b"old", quorum=True)
+    victim = cluster.cohort(cluster.range_of(key))[0]
+    cluster.crash_node(victim)
+    sim.run_for(0.5)
+    c.sync_write(key, "c", b"new", quorum=True)
+    cluster.restart_node(victim)
+    sim.run_for(0.5)
+    # quorum reads LWW-resolve and trigger read repair
+    for _ in range(8):
+        r = c.sync_read(key, "c", quorum=True)
+        assert not r.ok or r.value == b"new" or r.value == b"old"
+    sim.run_for(1.0)
+    for _ in range(8):
+        r = c.sync_read(key, "c", quorum=True)
+        if r.ok:
+            assert r.value == b"new"
+
+
+def test_write_survives_one_node_down():
+    sim, cluster = make(n=3)
+    c = cluster.make_client()
+    key = key_of(5)
+    victim = cluster.cohort(cluster.range_of(key))[1]
+    cluster.crash_node(victim)
+    sim.run_for(0.2)
+    assert c.sync_write(key, "c", b"v", quorum=True).ok
+    got = c.sync_read(key, "c", quorum=True)
+    assert got.ok and got.value == b"v"

@@ -1,0 +1,125 @@
+"""Failure-edge tests: optimistic concurrency across a leader failover,
+and storage-node crash in the middle of a checkpoint commit."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import (CheckpointError, SpinnakerCheckpointStore,
+                                    StoreConfig)
+from repro.core import (ClusterConfig, ErrorCode, NodeConfig, ReplicaConfig,
+                        Simulator, SpinnakerCluster, key_of)
+
+
+def make_cluster(n=3, seed=0):
+    sim = Simulator(seed=seed)
+    cluster = SpinnakerCluster(sim, ClusterConfig(
+        n_nodes=n, node=NodeConfig(replica=ReplicaConfig(commit_period=0.5))))
+    cluster.start()
+    cluster.settle()
+    return sim, cluster
+
+
+def test_conditional_put_counter_exact_across_failover():
+    """Concurrent CAS increments with a leader crash in the middle: the
+    final counter must equal exactly the number of SUCCESSFUL CAS acks
+    (no lost or duplicated increments — §3's transactional counter)."""
+    sim, cluster = make_cluster(seed=3)
+    c1 = cluster.make_client("c1")
+    c2 = cluster.make_client("c2")
+    key = key_of(7)
+    c1.sync_put(key, "n", 0)
+
+    successes = [0]
+    inflight = [0]
+
+    def attempt(client, rounds_left):
+        if rounds_left == 0:
+            return
+        inflight[0] += 1
+
+        def on_get(res):
+            if not res.ok:
+                inflight[0] -= 1
+                return
+
+            def on_cas(r2):
+                inflight[0] -= 1
+                if r2.ok:
+                    successes[0] += 1
+                attempt(client, rounds_left - 1)
+
+            client.conditional_put(key, "n", res.value + 1, res.version,
+                                   on_cas)
+
+        client.get(key, "n", True, on_get)
+
+    attempt(c1, 6)
+    attempt(c2, 6)
+    sim.run_for(1.5)
+    # kill the leader mid-burst
+    rid = cluster.range_of(key)
+    leader = cluster.leader_replica(rid)
+    if leader is not None:
+        cluster.crash_node(leader.node.node_id)
+    sim.run_for(10.0)
+    cluster.restart_node(leader.node.node_id)
+    sim.run_for(60.0)
+
+    final = c1.sync_get(key, "n", consistent=True)
+    assert final.ok
+    # CAS semantics make double-apply impossible; an acked CAS may at most
+    # be counted once. The counter equals the successful CAS count.
+    assert final.value == successes[0], \
+        f"counter {final.value} != acked CAS {successes[0]}"
+
+
+def test_checkpoint_commit_with_storage_crash_midway():
+    """Crash a storage node while chunks are being written: the save must
+    either complete (quorum survives) and restore bit-exactly, and the
+    previous manifest must never be corrupted."""
+    store = SpinnakerCheckpointStore(StoreConfig(chunk_bytes=256))
+    rng = np.random.default_rng(0)
+    tree1 = {"w": rng.standard_normal((64, 33)).astype(np.float32)}
+    store.save(1, tree1)
+
+    tree2 = {"w": rng.standard_normal((64, 33)).astype(np.float32)}
+    # interleave: crash node 1 after some chunks of save(2) are in
+    orig_put = store._put
+    calls = [0]
+
+    def crashing_put(key, value):
+        calls[0] += 1
+        if calls[0] == 4:
+            store.crash_storage_node(1)
+        return orig_put(key, value)
+
+    store._put = crashing_put
+    store.save(2, tree2)          # quorum survives -> must succeed
+    store._put = orig_put
+
+    step, restored = store.restore_tree(tree2)
+    assert step == 2
+    assert np.array_equal(restored["w"], tree2["w"])
+
+    # the dead node comes back and catches up; restore still exact
+    store.restart_storage_node(1)
+    step, restored = store.restore_tree(tree2)
+    assert step == 2 and np.array_equal(restored["w"], tree2["w"])
+
+
+def test_checkpoint_blocked_when_majority_lost_then_recovers():
+    store = SpinnakerCheckpointStore(StoreConfig(n_nodes=3, chunk_bytes=512))
+    tree = {"w": np.arange(300, dtype=np.float32)}
+    store.save(1, tree)
+    store.crash_storage_node(0)
+    store.crash_storage_node(1)
+    store.sim.run_for(3.0)
+    with pytest.raises(CheckpointError):
+        store.save(2, tree)
+    # majority restored -> commits flow again
+    store.restart_storage_node(0)
+    store.sim.run_for(8.0)
+    store.save(3, {"w": tree["w"] * 2})
+    step, restored = store.restore_tree(tree)
+    assert step == 3 and np.array_equal(restored["w"], tree["w"] * 2)

@@ -1,0 +1,128 @@
+"""Steady-state replication protocol tests (§5)."""
+
+import pytest
+
+from repro.core import (ClusterConfig, ErrorCode, Simulator, SpinnakerCluster,
+                        key_of)
+from repro.core.replica import Role
+
+
+def make_cluster(n=5, seed=0, **kw):
+    sim = Simulator(seed=seed)
+    cfg = ClusterConfig(n_nodes=n, **kw)
+    cluster = SpinnakerCluster(sim, cfg)
+    cluster.start()
+    cluster.settle()
+    return sim, cluster
+
+
+def test_cold_start_elects_all_leaders():
+    sim, cluster = make_cluster()
+    for rid in range(5):
+        rep = cluster.leader_replica(rid)
+        assert rep is not None
+        assert rep.open_for_writes
+        # exactly one leader per cohort
+        leaders = [m for m in cluster.cohort(rid)
+                   if cluster.nodes[m].replicas[rid].role is Role.LEADER]
+        assert len(leaders) == 1
+
+
+def test_put_then_strong_get():
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    res = c.sync_put(key_of(7), "col", b"hello")
+    assert res.ok and res.version == 1
+    got = c.sync_get(key_of(7), "col", consistent=True)
+    assert got.ok and got.value == b"hello" and got.version == 1
+
+
+def test_versions_increment_and_conditional_put():
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    assert c.sync_put(key_of(3), "c", b"v1").version == 1
+    assert c.sync_put(key_of(3), "c", b"v2").version == 2
+    # matching version succeeds
+    res = c.sync_cond_put(key_of(3), "c", b"v3", 2)
+    assert res.ok and res.version == 3
+    # stale version fails
+    res = c.sync_cond_put(key_of(3), "c", b"v4", 2)
+    assert res.code == ErrorCode.VERSION_MISMATCH
+    got = c.sync_get(key_of(3), "c")
+    assert got.value == b"v3" and got.version == 3
+
+
+def test_delete_and_not_found():
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    c.sync_put(key_of(11), "c", b"x")
+    res = c.sync_delete(key_of(11), "c")
+    assert res.ok
+    got = c.sync_get(key_of(11), "c")
+    assert got.code == ErrorCode.NOT_FOUND
+
+
+def test_multi_put_single_call():
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    res = c.sync(c.multi_put, key_of(20), [("a", b"1"), ("b", b"2")])
+    assert res.ok
+    assert c.sync_get(key_of(20), "a").value == b"1"
+    assert c.sync_get(key_of(20), "b").value == b"2"
+
+
+def test_write_replicated_to_majority_logs():
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    key = key_of(42)
+    c.sync_put(key, "c", b"payload")
+    rid = cluster.range_of(key)
+    sim.run(until=sim.now + 0.2)  # let follower forces finish
+    holders = 0
+    for m in cluster.cohort(rid):
+        recs, _cmt = cluster.nodes[m].wal.recover_range(rid)
+        if any(r.key == key for r in recs):
+            holders += 1
+    assert holders >= 2
+
+
+def test_timeline_read_converges_after_commit_period():
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    key = key_of(55)
+    c.sync_put(key, "c", b"fresh")
+    rid = cluster.range_of(key)
+    # after > commit_period, every replica must serve the new value
+    sim.run(until=sim.now + 2.5)
+    for m in cluster.cohort(rid):
+        rep = cluster.nodes[m].replicas[rid]
+        cell = rep.store.get(key, "c")
+        assert cell is not None and cell.value == b"fresh"
+
+
+def test_strong_read_routed_to_leader_only():
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    key = key_of(77)
+    c.sync_put(key, "c", b"x")
+    rid = cluster.range_of(key)
+    leader = cluster.leader_replica(rid)
+    before = leader.reads_served
+    c.sync_get(key, "c", consistent=True)
+    assert leader.reads_served == before + 1
+
+
+def test_pipelined_writes_same_key_serialize():
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    key = key_of(90)
+    results = []
+    for i in range(10):
+        c.put(key, "c", f"v{i}".encode(), lambda r: results.append(r))
+    sim.run_for(5.0)
+    assert len(results) == 10
+    assert all(r.ok for r in results)
+    versions = sorted(r.version for r in results)
+    assert versions == list(range(1, 11))
+    got = c.sync_get(key, "c")
+    assert got.version == 10

@@ -1,0 +1,120 @@
+"""Multi-operation transactions (§8.2) and monotonic timeline sessions."""
+
+import pytest
+
+from repro.core import (ClusterConfig, ErrorCode, NodeConfig, OpType,
+                        ReplicaConfig, Simulator, SpinnakerCluster, WriteOp,
+                        key_of)
+
+
+def make_cluster(n=3, seed=0, commit_period=1.0):
+    sim = Simulator(seed=seed)
+    cfg = ClusterConfig(
+        n_nodes=n,
+        node=NodeConfig(replica=ReplicaConfig(commit_period=commit_period)))
+    cluster = SpinnakerCluster(sim, cfg)
+    cluster.start()
+    cluster.settle()
+    return sim, cluster
+
+
+def sync(sim, fn, *args, budget=10.0):
+    box = []
+    fn(*args, lambda r: box.append(r))
+    deadline = sim.now + budget
+    while not box and sim.now < deadline:
+        sim.run(until=sim.now + 0.05)
+    assert box, "op did not complete"
+    return box[0]
+
+
+def test_transaction_commits_all_ops():
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    k1, k2 = key_of(5), key_of(6)
+    ops = [WriteOp(OpType.PUT, k1, "a", b"1"),
+           WriteOp(OpType.PUT, k1, "b", b"2"),
+           WriteOp(OpType.PUT, k2, "a", b"3")]
+    assert cluster.range_of(k1) == cluster.range_of(k2)
+    res = sync(sim, c.transaction, ops)
+    assert res.ok
+    assert c.sync_get(k1, "a").value == b"1"
+    assert c.sync_get(k1, "b").value == b"2"
+    assert c.sync_get(k2, "a").value == b"3"
+
+
+def test_transaction_conditional_abort_leaves_nothing():
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    k = key_of(5)
+    c.sync_put(k, "x", b"base")            # version 1
+    ops = [WriteOp(OpType.PUT, k, "y", b"new"),
+           WriteOp(OpType.COND_PUT, k, "x", b"clobber",
+                   expected_version=99)]   # mismatches -> abort
+    res = sync(sim, c.transaction, ops)
+    assert res.code == ErrorCode.VERSION_MISMATCH
+    # nothing from the transaction is visible
+    assert c.sync_get(k, "y").code == ErrorCode.NOT_FOUND
+    assert c.sync_get(k, "x").value == b"base"
+
+
+def test_transaction_rejects_cross_range():
+    sim, cluster = make_cluster(n=5)
+    c = cluster.make_client()
+    keys = [key_of(1), key_of(99_000)]
+    assert cluster.range_of(keys[0]) != cluster.range_of(keys[1])
+    ops = [WriteOp(OpType.PUT, keys[0], "a", b"1"),
+           WriteOp(OpType.PUT, keys[1], "a", b"2")]
+    res = sync(sim, c.transaction, ops)
+    assert res.code == ErrorCode.UNAVAILABLE
+
+
+def test_transaction_survives_leader_failover():
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    k = key_of(5)
+    ops = [WriteOp(OpType.PUT, k, "a", b"1"),
+           WriteOp(OpType.PUT, k, "b", b"2")]
+    res = sync(sim, c.transaction, ops)
+    assert res.ok
+    rid = cluster.range_of(k)
+    leader = cluster.leader_replica(rid)
+    cluster.crash_node(leader.node.node_id)
+    sim.run_for(6.0)
+    # both columns survive the failover (they were quorum-committed)
+    assert c.sync_get(k, "a").value == b"1"
+    assert c.sync_get(k, "b").value == b"2"
+
+
+def test_monotonic_timeline_session_never_goes_backwards():
+    sim, cluster = make_cluster(commit_period=5.0)   # followers lag 5s
+    c = cluster.make_client()
+    k = key_of(5)
+    c.sync_put(k, "c", b"v1")
+    sim.run_for(6.0)                 # all replicas at v1
+    c.sync_put(k, "c", b"v2")        # only the leader has v2 applied
+    seen = []
+    for _ in range(12):
+        res = sync(sim, lambda cb: c.get(k, "c", False, cb, monotonic=True))
+        if res.ok:
+            seen.append(res.version)
+    # plain timeline reads WOULD bounce 2,1,2,1...; the session must not
+    for a, b in zip(seen, seen[1:]):
+        assert b >= a, f"monotonic session regressed: {seen}"
+    assert seen and seen[-1] >= 1
+
+
+def test_plain_timeline_reads_can_be_stale_for_contrast():
+    sim, cluster = make_cluster(commit_period=5.0)
+    c = cluster.make_client()
+    k = key_of(5)
+    c.sync_put(k, "c", b"v1")
+    sim.run_for(6.0)
+    c.sync_put(k, "c", b"v2")
+    versions = set()
+    for _ in range(12):
+        res = sync(sim, lambda cb: c.get(k, "c", False, cb))
+        if res.ok:
+            versions.add(res.version)
+    # both the fresh and the stale version should be observable
+    assert 2 in versions and 1 in versions

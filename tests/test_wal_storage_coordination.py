@@ -1,0 +1,226 @@
+"""Unit tests: WAL (group commit, logical truncation, GC), memtable/
+SSTable engine, ZooKeeper-model coordination service."""
+
+import pytest
+
+from repro.core.coordination import Coordination, NodeExists, NoNode
+from repro.core.sim import Disk, DiskParams, Simulator
+from repro.core.storage import Store
+from repro.core.types import CommitMarker, LogRecord, OpType, make_lsn
+from repro.core.wal import WAL
+
+
+def rec(rid, lsn, key="k", val=b"v", version=1):
+    return LogRecord(rid, lsn, OpType.PUT, key, (("c", val, version),))
+
+
+# ---------------------------------------------------------------------------
+# WAL
+# ---------------------------------------------------------------------------
+
+
+def make_wal(seed=0, segment_bytes=1 << 20):
+    sim = Simulator(seed=seed)
+    disk = Disk(sim, DiskParams.ssd())
+    return sim, WAL(sim, disk, segment_bytes=segment_bytes)
+
+
+def test_forced_append_durable_after_force():
+    sim, wal = make_wal()
+    done = []
+    wal.append(rec(0, make_lsn(1, 1)), force=True, cb=lambda: done.append(1))
+    assert not done and not wal.durable
+    sim.run_for(1.0)
+    assert done and len(wal.durable) == 1
+
+
+def test_group_commit_coalesces_nonforced_markers():
+    sim, wal = make_wal()
+    wal.append(CommitMarker(0, make_lsn(1, 1)), force=False)
+    wal.append(rec(0, make_lsn(1, 2)), force=True)
+    sim.run_for(1.0)
+    # the non-forced marker rode along with the force
+    assert len(wal.durable) == 2
+
+
+def test_crash_loses_unforced_tail():
+    sim, wal = make_wal()
+    wal.append(rec(0, make_lsn(1, 1)), force=True)
+    sim.run_for(1.0)
+    wal.append(rec(0, make_lsn(1, 2)), force=False)   # buffered only
+    wal.crash()
+    records, cmt = wal.recover_range(0)
+    assert [r.lsn for r in records] == [make_lsn(1, 1)]
+
+
+def test_recover_range_interleaved_cohorts():
+    sim, wal = make_wal()
+    wal.append(rec(0, make_lsn(1, 1)), force=False)
+    wal.append(rec(1, make_lsn(1, 1)), force=False)
+    wal.append(rec(0, make_lsn(1, 2)), force=False)
+    wal.append(CommitMarker(0, make_lsn(1, 2)), force=False)
+    wal.append(rec(1, make_lsn(1, 2)), force=True)
+    sim.run_for(1.0)
+    r0, cmt0 = wal.recover_range(0)
+    r1, cmt1 = wal.recover_range(1)
+    assert [r.lsn for r in r0] == [make_lsn(1, 1), make_lsn(1, 2)]
+    assert cmt0 == make_lsn(1, 2)
+    assert [r.lsn for r in r1] == [make_lsn(1, 1), make_lsn(1, 2)]
+    assert cmt1 == 0
+
+
+def test_logical_truncation_and_unskip_on_reappend():
+    sim, wal = make_wal()
+    for s in (1, 2, 3):
+        wal.append(rec(0, make_lsn(1, s)), force=False)
+    wal.append(CommitMarker(0, make_lsn(1, 1)), force=True)
+    sim.run_for(1.0)
+    wal.logically_truncate(0, [make_lsn(1, 2), make_lsn(1, 3)])
+    records, _ = wal.recover_range(0)
+    assert [r.lsn for r in records] == [make_lsn(1, 1)]
+    # catch-up re-appends 1.2 -> it must be replayable again
+    wal.append(rec(0, make_lsn(1, 2)), force=True)
+    sim.run_for(1.0)
+    records, _ = wal.recover_range(0)
+    assert make_lsn(1, 2) in [r.lsn for r in records]
+    # 1.3 stays dead
+    assert make_lsn(1, 3) not in [r.lsn for r in records]
+
+
+def test_gc_drops_flushed_segments_and_catchup_falls_back():
+    sim, wal = make_wal(segment_bytes=500)
+    for s in range(1, 40):
+        wal.append(rec(0, make_lsn(1, s), val=b"x" * 64), force=(s % 4 == 0))
+    sim.run_for(2.0)
+    wal.note_flushed(0, make_lsn(1, 30))
+    assert wal.records_between(0, 0, make_lsn(1, 20)) is None  # GC'd
+    later = wal.records_between(0, make_lsn(1, 30), make_lsn(1, 36))
+    assert later is not None and len(later) > 0
+
+
+# ---------------------------------------------------------------------------
+# storage engine
+# ---------------------------------------------------------------------------
+
+
+def test_memtable_flush_and_read_through_sstables():
+    store = Store(flush_threshold_bytes=1)
+    store.apply(rec(0, make_lsn(1, 1), key="a", val=b"1", version=1))
+    store.flush(make_lsn(1, 1))
+    store.apply(rec(0, make_lsn(1, 2), key="a", val=b"2", version=2))
+    cell = store.get("a", "c")
+    assert cell.value == b"2" and cell.version == 2
+    store.flush(make_lsn(1, 2))
+    assert store.get("a", "c").value == b"2"     # newest SSTable wins
+    assert store.flushes == 2
+
+
+def test_idempotent_replay():
+    store = Store()
+    r = rec(0, make_lsn(1, 5), key="a", val=b"x", version=3)
+    store.apply(r)
+    store.apply(r)                                # local recovery replay
+    assert store.get("a", "c").version == 3
+
+
+def test_tombstones_and_compaction():
+    store = Store(flush_threshold_bytes=1, compact_fanin=2)
+    for i in range(1, 10):
+        op = OpType.DELETE if i % 3 == 0 else OpType.PUT
+        val = None if i % 3 == 0 else f"v{i}".encode()
+        store.apply(LogRecord(0, make_lsn(1, i), op, f"k{i % 2}",
+                              (("c", val, i),)))
+        store.flush(make_lsn(1, i))
+    assert store.compactions > 0
+    c = store.get("k0", "c")   # last write to k0 was i=8 -> put v8
+    assert c is not None and c.value == b"v8"
+    # k1: last write i=9 -> delete
+    c1 = store.get("k1", "c")
+    assert c1 is None or c1.deleted
+
+
+def test_cells_with_lsn_above_for_catchup():
+    store = Store(flush_threshold_bytes=1)
+    for i in range(1, 6):
+        store.apply(rec(0, make_lsn(1, i), key=f"k{i}", val=b"x", version=1))
+    store.flush(make_lsn(1, 5))
+    cells = store.cells_with_lsn_above(make_lsn(1, 3))
+    keys = sorted(k for k, _, _ in cells)
+    assert keys == ["k4", "k5"]
+
+
+# ---------------------------------------------------------------------------
+# coordination service
+# ---------------------------------------------------------------------------
+
+
+def test_znode_create_delete_exists():
+    sim = Simulator()
+    zk = Coordination(sim)
+    zk.create("/a/b", data=1)
+    assert zk.exists("/a/b") and zk.get("/a/b") == 1
+    with pytest.raises(NodeExists):
+        zk.create("/a/b")
+    zk.delete("/a/b")
+    assert not zk.exists("/a/b")
+    with pytest.raises(NoNode):
+        zk.delete("/a/b")
+
+
+def test_sequential_znodes_monotonic():
+    sim = Simulator()
+    zk = Coordination(sim)
+    p1 = zk.create("/r/c", sequential=True)
+    p2 = zk.create("/r/c", sequential=True)
+    assert p1 < p2
+    kids = zk.get_children("/r")
+    assert len(kids) == 2
+
+
+def test_ephemeral_deleted_on_session_expiry_and_watch_fires():
+    sim = Simulator()
+    zk = Coordination(sim, session_timeout=1.0)
+    sid = zk.create_session()
+    zk.create("/n/1", ephemeral_session=sid)
+    fired = []
+    zk.watch_exists("/n/1", lambda p: fired.append(p))
+    # no heartbeats -> expiry after timeout
+    sim.run_for(2.5)
+    assert not zk.exists("/n/1")
+    assert fired
+
+
+def test_heartbeats_keep_session_alive():
+    sim = Simulator()
+    zk = Coordination(sim, session_timeout=1.0)
+    sid = zk.create_session()
+    zk.create("/n/2", ephemeral_session=sid)
+
+    def beat():
+        zk.heartbeat(sid)
+        sim.schedule(0.4, beat)
+    beat()
+    sim.run_for(5.0)
+    assert zk.exists("/n/2")
+
+
+def test_fetch_and_add_monotonic():
+    sim = Simulator()
+    zk = Coordination(sim)
+    assert zk.fetch_and_add("/epoch", 1, initial=0) == 1
+    assert zk.fetch_and_add("/epoch", 1) == 2
+    assert zk.fetch_and_add("/epoch", 1) == 3
+
+
+def test_child_watch_one_shot():
+    sim = Simulator()
+    zk = Coordination(sim)
+    zk.create("/w/x")
+    fired = []
+    zk.watch_children("/w", lambda p: fired.append(p))
+    zk.create("/w/y")
+    sim.run_for(0.1)
+    assert len(fired) == 1
+    zk.create("/w/z")   # watch is one-shot: no second event
+    sim.run_for(0.1)
+    assert len(fired) == 1
