@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Pre-merge gate: a short workload scenario against a 5-node cluster
+# (leader kill included) plus the tier-1 test suite.
+#
+#     bash benchmarks/smoke.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== workload smoke: 5s scenario on a 5-node cluster =="
+python - <<'EOF'
+from repro.workload import (ExperimentConfig, WorkloadSpec,
+                            run_spinnaker_workload)
+
+cfg = ExperimentConfig(n_nodes=5, disk="mem", n_clients=4,
+                       warmup=0.5, duration=5.0, window=0.5, preload_cap=100)
+spec = WorkloadSpec(num_keys=100, value_size=512,
+                    read_frac=0.5, write_frac=0.5, rmw_frac=0, cond_frac=0)
+r = run_spinnaker_workload(
+    spec, cfg, schedule="at 1.0s crash leader of 0\nat 4.0s restart crashed")
+post = [w for w in r["timeline"]["write"] if w["t_start"] > 1.0]
+assert max(w["throughput"] for w in post) > 0, "writes never resumed"
+assert r["reads"]["count"] > 0 and r["writes"]["count"] > 0
+print(f"ok: {r['total_ops']} ops, reads p99={r['reads']['p99_ms']:.2f}ms, "
+      f"writes resumed after leader kill")
+EOF
+
+echo "== tier-1 suite =="
+python -m pytest -x -q

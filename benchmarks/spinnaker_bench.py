@@ -1,0 +1,160 @@
+"""Paper-§9 experiment runner: Spinnaker vs the Cassandra baseline.
+
+    PYTHONPATH=src python benchmarks/spinnaker_bench.py \
+        --scenario figs8-10 [--quick] [--out BENCH_spinnaker.json]
+
+Scenarios:
+
+- `fig8`    — read/write latency + throughput under a steady 80/15 YCSB-
+  style zipfian mix, for Spinnaker strong reads, Spinnaker timeline reads,
+  Cassandra quorum, and Cassandra eventual consistency;
+- `fig9`    — kill the leader of range 0 mid-load with the fault-schedule
+  DSL and record sliding-window write availability (writes must resume
+  without manual intervention once a follower takes over);
+- `fig10`   — same failure, timeline-read availability (reads keep being
+  served by the surviving replicas throughout);
+- `figs8-10`— all of the above in one JSON artifact.
+
+Emits `BENCH_spinnaker.json` plus claim checks against the paper's
+headline: comparable read latency, writes within ~5-10% of eventual
+consistency's throughput cost envelope, and post-failover recovery.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.workload import (ExperimentConfig, WorkloadSpec,  # noqa: E402
+                            run_cassandra_workload, run_spinnaker_workload)
+
+LEADER_KILL = """
+# Fig. 9/10: kill whichever node currently leads range 0, mid-load;
+# bring it back later.  No operator intervention in between.
+at {t_kill}s crash leader of 0
+at {t_back}s restart crashed
+"""
+
+
+def base_spec(quick: bool) -> WorkloadSpec:
+    return WorkloadSpec(
+        num_keys=1000 if quick else 5000,
+        key_dist="zipfian", zipf_theta=0.99,
+        read_frac=0.80, write_frac=0.15, rmw_frac=0.03, cond_frac=0.02,
+        value_size=4096)
+
+
+def base_cfg(quick: bool, seed: int = 0) -> ExperimentConfig:
+    return ExperimentConfig(
+        n_nodes=5, disk="ssd", seed=seed,
+        n_clients=8 if quick else 32,
+        warmup=0.5 if quick else 2.0,
+        duration=3.0 if quick else 15.0,
+        preload_cap=1000 if quick else 5000)
+
+
+def run_fig8(quick: bool) -> dict:
+    spec, cfg = base_spec(quick), base_cfg(quick)
+    print("fig8: steady-state comparison ...", flush=True)
+    out = {
+        "spinnaker_strong": run_spinnaker_workload(
+            spec, cfg, consistent_reads=True),
+        "spinnaker_timeline": run_spinnaker_workload(
+            spec, cfg, consistent_reads=False, monotonic=True),
+        "cassandra_quorum": run_cassandra_workload(spec, cfg, quorum=True),
+        "cassandra_eventual": run_cassandra_workload(spec, cfg, quorum=False),
+    }
+    for name, r in out.items():
+        print(f"  {name}: reads p50={r['reads']['p50_ms']:.2f}ms "
+              f"p99={r['reads']['p99_ms']:.2f}ms "
+              f"writes p50={r['writes']['p50_ms']:.2f}ms "
+              f"tput={r['throughput']:.0f}/s", flush=True)
+    return out
+
+
+def run_failover(quick: bool, consistent_reads: bool) -> dict:
+    cfg = base_cfg(quick, seed=1)
+    cfg.duration = 8.0 if quick else 30.0
+    cfg.window = 0.5
+    t_kill = 2.0 if quick else 8.0
+    t_back = cfg.duration * 0.75
+    spec = base_spec(quick)
+    sched = LEADER_KILL.format(t_kill=t_kill, t_back=t_back)
+    r = run_spinnaker_workload(spec, cfg, consistent_reads=consistent_reads,
+                               monotonic=not consistent_reads,
+                               schedule=sched)
+    r["t_kill"] = t_kill
+    r["t_restart"] = t_back
+    return r
+
+
+def check_writes_resume(fig9: dict) -> dict:
+    """Writes must come back after the leader kill with nobody touching
+    the cluster (§6: a follower takes over within the session timeout)."""
+    t_kill = fig9["t_kill"]
+    post = [w for w in fig9["timeline"]["write"] if w["t_start"] > t_kill]
+    resumed = [w for w in post if w["throughput"] > 0]
+    # recovery time = first window after the kill with successful writes
+    recovery_s = (resumed[0]["t_start"] - t_kill) if resumed else None
+    ok = bool(resumed) and max(w["throughput"] for w in resumed) > 0
+    return {"writes_resumed": ok,
+            "recovery_window_start_s_after_kill": recovery_s,
+            "post_kill_peak_write_tput": max(
+                (w["throughput"] for w in post), default=0.0)}
+
+
+def check_paper_claims(fig8: dict) -> list[str]:
+    claims = []
+    sp, ce = fig8["spinnaker_strong"], fig8["cassandra_eventual"]
+    cq = fig8["cassandra_quorum"]
+    r_ratio = sp["reads"]["p50_ms"] / max(cq["reads"]["p50_ms"], 1e-9)
+    claims.append(
+        f"strong reads vs quorum reads p50 ratio = {r_ratio:.2f} "
+        f"(paper: 'as fast or even faster', expect <= ~1.0)")
+    w_ratio = sp["writes"]["p50_ms"] / max(ce["writes"]["p50_ms"], 1e-9)
+    claims.append(
+        f"spinnaker writes vs eventual writes p50 ratio = {w_ratio:.2f} "
+        f"(paper: '5% to 10% slower', expect ~1.05-1.10)")
+    t_ratio = sp["throughput"] / max(ce["throughput"], 1e-9)
+    claims.append(f"throughput ratio spinnaker/eventual = {t_ratio:.2f}")
+    return claims
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenario", default="figs8-10",
+                    choices=["fig8", "fig9", "fig10", "figs8-10"])
+    ap.add_argument("--quick", action="store_true",
+                    help="short runs (CI / smoke mode)")
+    ap.add_argument("--out", default="BENCH_spinnaker.json")
+    args = ap.parse_args(argv)
+
+    rec: dict = {"scenario": args.scenario, "quick": args.quick}
+    if args.scenario in ("fig8", "figs8-10"):
+        rec["fig8"] = run_fig8(args.quick)
+        rec["claims"] = check_paper_claims(rec["fig8"])
+    if args.scenario in ("fig9", "figs8-10"):
+        print("fig9: leader kill under write load ...", flush=True)
+        rec["fig9"] = run_failover(args.quick, consistent_reads=True)
+        rec["fig9_check"] = check_writes_resume(rec["fig9"])
+        print(f"  {rec['fig9_check']}", flush=True)
+    if args.scenario in ("fig10", "figs8-10"):
+        print("fig10: leader kill under timeline reads ...", flush=True)
+        rec["fig10"] = run_failover(args.quick, consistent_reads=False)
+
+    Path(args.out).write_text(json.dumps(rec, indent=2))
+    print(f"wrote {args.out}")
+    for c in rec.get("claims", []):
+        print("claim:", c)
+    if "fig9_check" in rec and not rec["fig9_check"]["writes_resumed"]:
+        print("FAIL: writes did not resume after leader crash")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

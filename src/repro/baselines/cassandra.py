@@ -247,6 +247,12 @@ class CassandraCluster:
     def restart_node(self, nid: int) -> None:
         self.nodes[nid].restart()
 
+    def partition(self, *groups) -> None:
+        self.net.set_partition(groups)
+
+    def heal(self) -> None:
+        self.net.clear_partition()
+
     def make_client(self, client_id: str = "cc0") -> "CassandraClient":
         return CassandraClient(self, client_id)
 
@@ -263,6 +269,8 @@ class CassandraClient:
         self.sim = cluster.sim
         self.id = client_id
         self.stats = LatencyStats()
+        self.stats_by_kind: dict[str, LatencyStats] = {}
+        self.op_hook: Optional[Callable[[str, Result], None]] = None
         self._rr = 0
 
     def _coordinator(self, key: str) -> int:
@@ -286,7 +294,10 @@ class CassandraClient:
     def _op(self, kind: str, key: str, kw: dict, cb: Callable, t0: float,
             tries: int, nbytes: int) -> None:
         if tries > self.MAX_RETRIES:
-            cb(Result(ErrorCode.TIMEOUT, latency=self.sim.now - t0))
+            res = Result(ErrorCode.TIMEOUT, latency=self.sim.now - t0)
+            if self.op_hook is not None:
+                self.op_hook(kind.removeprefix("coord_"), res)
+            cb(res)
             return
         target = self._coordinator(key)
         settled = [False]
@@ -298,6 +309,11 @@ class CassandraClient:
             timeout_ev.cancel()
             res.latency = self.sim.now - t0
             self.stats.add(res.latency)
+            tag = kind.removeprefix("coord_")
+            self.stats_by_kind.setdefault(tag, LatencyStats()).add(
+                res.latency)
+            if self.op_hook is not None:
+                self.op_hook(tag, res)
             cb(res)
 
         def on_timeout():

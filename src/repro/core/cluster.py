@@ -103,6 +103,14 @@ class SpinnakerCluster:
     def restart_node(self, node_id: int) -> None:
         self.nodes[node_id].restart()
 
+    def partition(self, *groups) -> None:
+        """Partition the data network into node groups, e.g.
+        `cluster.partition({0, 1}, {2, 3, 4})`."""
+        self.net.set_partition(groups)
+
+    def heal(self) -> None:
+        self.net.clear_partition()
+
     def trace(self, msg: str) -> None:
         if self.cfg.trace:
             self.trace_log.append(msg)
@@ -126,8 +134,12 @@ class Client:
         self.leader_cache: dict[int, int] = {}
         self._rr = 0
         self.stats = LatencyStats()
+        self.stats_by_kind: dict[str, LatencyStats] = {}
         self.errors = 0
         self._session_seen: dict[tuple[str, str], int] = {}
+        # workload-driver hook: called once per finished op with
+        # (kind, result); fires for successes AND retry-exhausted timeouts
+        self.op_hook: Optional[Callable[[str, Result], None]] = None
 
     # -- routing -----------------------------------------------------------------
     def _lookup_leader(self, rid: int) -> Optional[int]:
@@ -200,6 +212,32 @@ class Client:
         self._op("write", key, dict(op=op), cb, consistent=True,
                  t0=self.sim.now, tries=0)
 
+    def multi_get(self, pairs: list[tuple[str, str]], consistent: bool,
+                  cb: Callable[[list[Result]], None],
+                  monotonic: bool = False) -> None:
+        """Batched read: issue every (key, colname) get concurrently and
+        deliver one ordered list of Results when the last one lands.
+
+        One network round-trip per distinct target still happens under the
+        hood (ranges live on different cohorts), but the client pays the
+        fan-out latency once instead of serializing it."""
+        if not pairs:
+            cb([])
+            return
+        results: list[Optional[Result]] = [None] * len(pairs)
+        pending = [len(pairs)]
+
+        def one(i: int):
+            def got(res: Result):
+                results[i] = res
+                pending[0] -= 1
+                if pending[0] == 0:
+                    cb(results)  # type: ignore[arg-type]
+            return got
+
+        for i, (key, colname) in enumerate(pairs):
+            self.get(key, colname, consistent, one(i), monotonic=monotonic)
+
     def transaction(self, ops: list[WriteOp], cb: Callable) -> None:
         """Multi-operation transaction (§8.2): scope limited to a single
         cohort, exactly as the paper limits transactions to one node."""
@@ -216,7 +254,10 @@ class Client:
         rid = self.cluster.range_of(key)
         if tries > self.MAX_RETRIES:
             self.errors += 1
-            cb(Result(ErrorCode.TIMEOUT, latency=self.sim.now - t0))
+            res = Result(ErrorCode.TIMEOUT, latency=self.sim.now - t0)
+            if self.op_hook is not None:
+                self.op_hook(kind, res)
+            cb(res)
             return
         if kind == "read" and not consistent:
             target = self._any_replica(rid)
@@ -248,6 +289,10 @@ class Client:
                 return
             res.latency = self.sim.now - t0
             self.stats.add(res.latency)
+            self.stats_by_kind.setdefault(kind, LatencyStats()).add(
+                res.latency)
+            if self.op_hook is not None:
+                self.op_hook(kind, res)
             cb(res)
 
         def on_timeout():

@@ -703,7 +703,11 @@ class CohortReplica:
                 reply(Result(ErrorCode.UNAVAILABLE))
                 return
         self.reads_served += 1
+        # Store.get contract: deletes surface as tombstone cells, not None
+        # — report NOT_FOUND but keep the tombstone's version so clients
+        # can conditional-put over a deleted key
         cell = self.store.get(key, colname)
+        assert cell is None or not (cell.deleted and cell.value is not None)
         if cell is None or cell.deleted:
             reply(Result(ErrorCode.NOT_FOUND,
                          version=cell.version if cell else 0))

@@ -188,8 +188,10 @@ class Network:
         self.p = params or NetParams()
         self._last_delivery: dict[tuple[Any, Any], float] = {}
         self._down: set[Any] = set()
+        self._group: dict[Any, int] = {}   # partition membership
         self.bytes_sent = 0
         self.msgs_sent = 0
+        self.dropped = 0
 
     def set_down(self, endpoint: Any, down: bool = True) -> None:
         if down:
@@ -200,9 +202,35 @@ class Network:
     def is_down(self, endpoint: Any) -> bool:
         return endpoint in self._down
 
+    # -- partitions -----------------------------------------------------------
+    def set_partition(self, groups) -> None:
+        """Partition the network into `groups` of endpoints.
+
+        Messages between endpoints in *different* groups are dropped (both
+        at send and delivery time, so in-flight traffic is cut too).
+        Endpoints in no group — clients, the coordination service — keep
+        full connectivity, mirroring the paper's deployment where ZooKeeper
+        sits outside the data path."""
+        self._group = {}
+        for gi, members in enumerate(groups):
+            for e in members:
+                self._group[e] = gi
+
+    def clear_partition(self) -> None:
+        self._group = {}
+
+    def partitioned(self, src: Any, dst: Any) -> bool:
+        gs, gd = self._group.get(src), self._group.get(dst)
+        return gs is not None and gd is not None and gs != gd
+
+    def _blocked(self, src: Any, dst: Any) -> bool:
+        return src in self._down or dst in self._down \
+            or self.partitioned(src, dst)
+
     def send(self, src: Any, dst: Any, handler: Callable, *args: Any,
              nbytes: int = 256, cross_switch: bool = False) -> None:
-        if src in self._down or dst in self._down:
+        if self._blocked(src, dst):
+            self.dropped += 1
             return  # dropped
         lat = self.sim.jitter(self.p.base_latency, self.p.jitter_cv)
         lat += nbytes / self.p.bandwidth
@@ -216,8 +244,9 @@ class Network:
         self.msgs_sent += 1
 
         def deliver():
-            # recheck liveness at delivery time
-            if src in self._down or dst in self._down:
+            # recheck liveness and partition membership at delivery time
+            if self._blocked(src, dst):
+                self.dropped += 1
                 return
             handler(*args)
 

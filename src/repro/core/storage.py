@@ -106,17 +106,22 @@ class Store:
         return self.flushed_upto
 
     def _maybe_compact(self) -> None:
-        """Size-tiered: merge the newest `fanin` runs when they pile up.
-        Garbage-collects tombstones shadowed by newer cells."""
+        """Size-tiered: merge the `fanin` *oldest* runs when they pile up.
+
+        The victims are the oldest runs and the merged run becomes the new
+        bottom of the stack, so dropping its tombstones cannot resurrect
+        anything: every surviving cell above has a higher LSN (SSTable LSN
+        ranges are disjoint and flush-ordered) and still wins reads.  The
+        GC is visible to `cells_with_lsn_above` — peers catching up from
+        SSTables after the log rolled over miss the delete, the same
+        gc-grace caveat real LSM stores carry (§6.1)."""
         if len(self.sstables) < self.compact_fanin * 2:
             return
         merged: dict[tuple[str, str], Cell] = {}
         victims = self.sstables[:self.compact_fanin]
         for t in victims:  # oldest→newest so newer cells overwrite
             merged.update(t.cells)
-        # drop tombstones in the oldest run (nothing below to shadow)
-        merged = {k: v for k, v in merged.items() if not v.deleted} \
-            if len(self.sstables) == self.compact_fanin else merged
+        merged = {k: v for k, v in merged.items() if not v.deleted}
         self.sstables = [SSTable(
             cells=merged,
             min_lsn=min(t.min_lsn for t in victims),
@@ -125,14 +130,21 @@ class Store:
 
     # -- read path ------------------------------------------------------------
     def get(self, key: str, colname: str) -> Optional[Cell]:
-        cell = self.memtable.get(key, colname)
-        best = cell
+        """Newest cell for (key, colname), or None if never written.
+
+        CONTRACT: deletes are returned as tombstone cells
+        (`cell.deleted == True`, `cell.value is None`) rather than None.
+        Callers that present reads to clients must check `.deleted` and
+        report NOT_FOUND; callers doing version arithmetic (conditional
+        puts) must keep using the tombstone's `version` so versions stay
+        monotone across a delete.  Only after a whole-stack compaction
+        garbage-collects the tombstone does `get` return None (and
+        `current_version` restarts at 0)."""
+        best = self.memtable.get(key, colname)
         for t in reversed(self.sstables):
             c = t.get(key, colname)
             if c is not None and (best is None or c.lsn > best.lsn):
                 best = c
-        if best is None or best.deleted:
-            return None if best is None else best
         return best
 
     def current_version(self, key: str, colname: str) -> int:

@@ -1,0 +1,15 @@
+"""Distributed-training helpers: pipeline-parallel schedules and gradient
+compression.  Split out of `train/` so substrate tests and napkin math can
+import them without pulling in the full model stack.
+"""
+
+from .compression import compress_decompress, compress_with_feedback
+from .pipeline import bubble_fraction, gpipe, pp_vs_dp_napkin
+
+__all__ = [
+    "bubble_fraction",
+    "compress_decompress",
+    "compress_with_feedback",
+    "gpipe",
+    "pp_vs_dp_napkin",
+]

@@ -1,0 +1,44 @@
+"""Gradient compression: symmetric int8 quantization with optional error
+feedback (residual carried to the next step so quantization error does not
+accumulate into bias).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize_leaf(g: jax.Array, residual: Optional[jax.Array] = None):
+    """Round-trip one tensor through int8; returns (dequantized, new residual)."""
+    corrected = g if residual is None else g + residual
+    scale = jnp.max(jnp.abs(corrected)) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(corrected / safe), -127, 127).astype(jnp.int8)
+    deq = (q.astype(corrected.dtype) * safe).astype(g.dtype)
+    return deq, corrected - deq
+
+
+def compress_decompress(grads: Any) -> Any:
+    """Simulate the all-reduce compression round-trip (no feedback)."""
+    return jax.tree.map(lambda g: _quantize_leaf(g)[0], grads)
+
+
+def compress_with_feedback(grads: Any, residuals: Optional[Any] = None):
+    """Quantize with error feedback.
+
+    Returns `(compressed_grads, new_residuals)`; pass the residuals back in
+    on the next call (None on the first step).  The residual bounds the
+    *accumulated* error by a single step's quantization error.
+    """
+    if residuals is None:
+        pairs = jax.tree.map(_quantize_leaf, grads)
+    else:
+        pairs = jax.tree.map(_quantize_leaf, grads, residuals)
+    out = jax.tree.map(lambda p: p[0], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda p: p[1], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return out, res

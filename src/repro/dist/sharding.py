@@ -1,0 +1,200 @@
+"""Sharding policy: map parameter/batch/cache trees to NamedShardings.
+
+`ShardingPolicy` decides which mesh axes carry tensor parallelism (TP),
+data parallelism (DP/FSDP), and expert parallelism (EP).  `param_spec`
+assigns a PartitionSpec per parameter from its tree path; indivisible
+assignments are dropped (`_drop_indivisible`) rather than erroring, so one
+policy covers every architecture in `repro.configs`.
+
+`MeshContext` is the activation half: entering it publishes the context to
+`repro.dist.context` and installs the `pshard` activation-sharding hook in
+`repro.models.layers`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.tree_util as jtu
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import context as _context
+
+# parameter names whose LAST dim is the TP (output-feature) dim
+_TP_LAST = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "unembed"}
+# parameter names whose SECOND-TO-LAST dim is the TP (input-feature) dim
+_TP_SECOND = {"wo", "w_down", "out_proj"}
+
+
+def path_str(path) -> str:
+    """'/'-joined tree path; accepts DictKey/SequenceKey/objects with .key."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+@dataclass
+class ShardingPolicy:
+    """Which mesh axes carry which kind of parallelism."""
+    tp_axis: str = "model"
+    dp_axes: tuple = ("data",)          # batch/activation axes
+    fsdp_axes: tuple = ("data",)        # parameter-sharding axes
+    ep_axes: tuple = ("data",)          # expert-parallel axes
+    seq_parallel: bool = False
+
+    @classmethod
+    def for_mesh(cls, mesh: Mesh, seq_parallel: bool = False,
+                 shard_params_on_pod: bool = False) -> "ShardingPolicy":
+        axes = tuple(mesh.axis_names)
+        tp = "model" if "model" in axes else axes[-1]
+        dp = tuple(a for a in axes if a != tp)
+        fsdp = tuple(a for a in dp if a != "pod" or shard_params_on_pod)
+        ep = tuple(a for a in dp if a != "pod") or dp
+        return cls(tp_axis=tp, dp_axes=dp, fsdp_axes=fsdp, ep_axes=ep,
+                   seq_parallel=seq_parallel)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def _drop_indivisible(spec: P, leaf, mesh: Mesh) -> P:
+    """Replace spec entries whose axis product doesn't divide the dim."""
+    shape = getattr(leaf, "shape", leaf)
+    out = []
+    for d, entry in enumerate(tuple(spec)):
+        if entry is not None and d < len(shape) \
+                and shape[d] % _axis_size(mesh, entry) == 0:
+            out.append(entry)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def param_spec(path, leaf, pol: ShardingPolicy, cfg=None) -> P:
+    """PartitionSpec for one parameter, from its name and rank.
+
+    Weights are (..., in, out), usually stacked over layers at dim 0.  TP
+    shards the feature dim named by `_TP_LAST`/`_TP_SECOND`; FSDP shards the
+    opposite matrix dim.  Vectors and norms replicate.
+    """
+    if leaf.ndim <= 1:
+        return P(*([None] * leaf.ndim))
+    name = path_str(path).rsplit("/", 1)[-1]
+    spec: list = [None] * leaf.ndim
+    fsdp = tuple(pol.fsdp_axes) or None
+    if name in _TP_LAST:
+        spec[-1] = pol.tp_axis
+        if fsdp:
+            spec[-2] = fsdp
+    elif name in _TP_SECOND:
+        spec[-2] = pol.tp_axis
+        if fsdp:
+            spec[-1] = fsdp
+    elif name == "embed":
+        if fsdp:
+            spec[0] = fsdp
+    else:
+        # unknown >=2D weight: FSDP on its largest dim
+        if fsdp:
+            spec[max(range(leaf.ndim), key=lambda d: leaf.shape[d])] = fsdp
+    return P(*spec)
+
+
+class MeshContext:
+    """Activate a (mesh, config, policy) triple.
+
+    Inside the `with` block, `repro.dist.context.current_ctx()` returns
+    this object and the model's `pshard` hook constrains activation batch
+    dims onto the DP axes.  Provides the sharding constructors the dry-run
+    driver and trainers need.
+    """
+
+    def __init__(self, mesh: Mesh, cfg: Any, pol: ShardingPolicy):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.pol = pol
+        self._prev_ctx = None
+
+    # -- constructors ---------------------------------------------------------
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    def _named(self, spec: P, leaf) -> NamedSharding:
+        return NamedSharding(self.mesh,
+                             _drop_indivisible(spec, leaf, self.mesh))
+
+    def param_shardings(self, tree_shape):
+        def one(path, leaf):
+            return self._named(param_spec(path, leaf, self.pol, self.cfg),
+                               leaf)
+        return jtu.tree_map_with_path(one, tree_shape)
+
+    def batch_sharding(self, batch):
+        """Shard the leading (batch) dim of every input leaf over DP."""
+        dp = tuple(self.pol.dp_axes)
+
+        def one(leaf):
+            if getattr(leaf, "ndim", 0) == 0 or not dp:
+                return self.replicated()
+            spec = P(*([dp] + [None] * (leaf.ndim - 1)))
+            return self._named(spec, leaf)
+        return jax.tree.map(one, batch)
+
+    def cache_sharding(self, cache_shape):
+        """KV/SSM cache: (L, B, heads, ...) — batch on DP, heads on TP."""
+        dp = tuple(self.pol.dp_axes)
+        tp = self.pol.tp_axis
+
+        def one(leaf):
+            nd = getattr(leaf, "ndim", 0)
+            if nd <= 1:
+                spec = P(*([dp] if nd == 1 and dp else [None] * nd))
+            else:
+                entries: list = [None] * nd
+                if dp:
+                    entries[1] = dp
+                if nd >= 4:
+                    entries[2] = tp
+                spec = P(*entries)
+            return self._named(spec, leaf)
+        return jax.tree.map(one, cache_shape)
+
+    # -- activation hook -------------------------------------------------------
+    def _shard_activation(self, x, kind: str):
+        dp = tuple(self.pol.dp_axes)
+        if not dp or getattr(x, "ndim", 0) == 0:
+            return x
+        spec = _drop_indivisible(
+            P(*([dp] + [None] * (x.ndim - 1))), x, self.mesh)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    # -- context protocol ------------------------------------------------------
+    def __enter__(self) -> "MeshContext":
+        from ..models.layers import install_shard_hook
+        self._prev_ctx = _context.current_ctx()
+        _context.set_ctx(self)
+        install_shard_hook(self._shard_activation)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        from ..models.layers import install_shard_hook
+        _context.set_ctx(self._prev_ctx)
+        install_shard_hook(None)

@@ -1,3 +1,13 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+
+def tpu_compiler_params(dimension_semantics: tuple):
+    """Pallas-TPU CompilerParams across jax renames (TPUCompilerParams
+    pre-0.6, CompilerParams after).  Raises if pallas.tpu is unavailable;
+    callers that must run on CPU wrap this in try/except."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(dimension_semantics=dimension_semantics)

@@ -114,6 +114,5 @@ def _scratch(shape):
 
 
 def _compiler_params():
-    from jax.experimental.pallas import tpu as pltpu
-    return pltpu.CompilerParams(
-        dimension_semantics=("parallel", "parallel", "arbitrary"))
+    from .. import tpu_compiler_params
+    return tpu_compiler_params(("parallel", "parallel", "arbitrary"))

@@ -155,9 +155,8 @@ def pl_scratch(shape):
 
 def _compiler_params():
     try:
-        from jax.experimental.pallas import tpu as pltpu
-        return pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary"))
+        from .. import tpu_compiler_params
+        return tpu_compiler_params(("parallel", "parallel", "parallel",
+                                    "arbitrary"))
     except Exception:  # pragma: no cover
         return None

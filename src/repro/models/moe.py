@@ -186,14 +186,16 @@ def _moe_shard_map(params, x: jax.Array, cfg: ModelConfig, ctx):
     extra_dp = tuple(a for a in dp if a not in ep)
     xspec = P(tuple(extra_dp) + tuple(ep) if extra_dp else ep, None, None)
     yspec = xspec
-    out = shard_map(
-        body, mesh=mesh,
+    specs = dict(
         in_specs=(P(), P(ep, None, tp), P(ep, None, tp), P(ep, tp, None),
                   xspec),
-        out_specs=(yspec, P()),
-        check_vma=False,
-    )(params["router"], params["w_gate"], params["w_up"], params["w_down"],
-      x)
+        out_specs=(yspec, P()))
+    try:
+        mapped = shard_map(body, mesh=mesh, check_vma=False, **specs)
+    except TypeError:  # pre-0.6 jax spells the kwarg check_rep
+        mapped = shard_map(body, mesh=mesh, check_rep=False, **specs)
+    out = mapped(params["router"], params["w_gate"], params["w_up"],
+                 params["w_down"], x)
     y, aux = out
     if "shared" in params:
         y = y + mlp(params["shared"], x, cfg.activation)

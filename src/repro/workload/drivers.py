@@ -1,0 +1,203 @@
+"""Load drivers running inside the discrete-event `Simulator`.
+
+Adapters translate a generator `Op` into one async call against a store's
+client library; drivers decide *when* ops are issued:
+
+- `ClosedLoopDriver`: N virtual clients, each with at most one op in
+  flight (the paper's §C methodology — load grows with the client count);
+- `OpenLoopDriver`: Poisson arrivals at a target rate, independent of
+  completion times — the driver that exposes latency collapse at
+  saturation and availability gaps during failures (Figs. 9-10).
+
+Both record completions into an `OpLog`.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from ..core.cluster import key_of
+from .generators import Op, OpKind, OpStream
+from .metrics import OpLog
+
+
+class SpinnakerAdapter:
+    """Maps Ops onto the Spinnaker client library.
+
+    reads: strong (leader) when `consistent`, else timeline with an
+    optional monotonic session guarantee; RMW = strong read then put;
+    COND = strong read then conditional_put at the version just seen.
+    """
+
+    def __init__(self, client, consistent: bool = True,
+                 monotonic: bool = False, colname: str = "c"):
+        self.client = client
+        self.consistent = consistent
+        self.monotonic = monotonic
+        self.colname = colname
+
+    def kind_name(self, op: Op) -> str:
+        if op.kind == OpKind.READ:
+            return "read" if self.consistent else "timeline_read"
+        return {OpKind.WRITE: "write", OpKind.RMW: "rmw",
+                OpKind.COND: "cond_put"}[op.kind]
+
+    def issue(self, op: Op, done: Callable[[bool], None]) -> None:
+        key = key_of(op.key_index)
+        col = self.colname
+        value = b"x" * op.value_size
+        c = self.client
+        if op.kind == OpKind.READ:
+            # NOT_FOUND is a successful read of an absent key
+            c.get(key, col, self.consistent,
+                  lambda r: done(r.ok or r.code.value == "not_found"),
+                  monotonic=self.monotonic)
+        elif op.kind == OpKind.WRITE:
+            c.put(key, col, value, lambda r: done(r.ok))
+        elif op.kind == OpKind.RMW:
+            c.get(key, col, True,
+                  lambda r: c.put(key, col, value, lambda r2: done(r2.ok))
+                  if r.ok or r.code.value == "not_found" else done(False))
+        else:  # COND: optimistic concurrency at the observed version
+            def after_read(r):
+                if not (r.ok or r.code.value == "not_found"):
+                    done(False)
+                    return
+                ver = r.version or 0
+                # a VERSION_MISMATCH is a *successful* CAS rejection
+                # (another client won the race), not unavailability
+                c.conditional_put(
+                    key, col, value, ver,
+                    lambda r2: done(r2.ok
+                                    or r2.code.value == "version_mismatch"))
+            c.get(key, col, True, after_read)
+
+
+class CassandraAdapter:
+    """Maps Ops onto the Cassandra baseline client; there is no CAS, so
+    COND degrades to read-then-write (the consistency gap §9 points at)."""
+
+    def __init__(self, client, quorum: bool = True, colname: str = "c"):
+        self.client = client
+        self.quorum = quorum
+        self.colname = colname
+
+    def kind_name(self, op: Op) -> str:
+        base = {OpKind.READ: "read", OpKind.WRITE: "write",
+                OpKind.RMW: "rmw", OpKind.COND: "cond_put"}[op.kind]
+        return base if self.quorum else f"eventual_{base}"
+
+    def issue(self, op: Op, done: Callable[[bool], None]) -> None:
+        key = key_of(op.key_index)
+        col = self.colname
+        value = b"x" * op.value_size
+        c = self.client
+        if op.kind == OpKind.READ:
+            c.read(key, col, self.quorum,
+                   lambda r: done(r.ok or r.code.value == "not_found"))
+        elif op.kind == OpKind.WRITE:
+            c.write(key, col, value, self.quorum, lambda r: done(r.ok))
+        else:  # RMW and COND both become read-then-write
+            c.read(key, col, self.quorum,
+                   lambda r: c.write(key, col, value, self.quorum,
+                                     lambda r2: done(r2.ok))
+                   if (r.ok or r.code.value == "not_found") else done(False))
+
+
+class ClosedLoopDriver:
+    """N clients, one outstanding op each; think_time inserts client-side
+    pauses between completion and the next issue."""
+
+    def __init__(self, sim, adapter, stream: OpStream, log: OpLog,
+                 n_clients: int = 8, think_time: float = 0.0):
+        self.sim = sim
+        self.adapter = adapter
+        self.stream = stream
+        self.log = log
+        self.n_clients = n_clients
+        self.think_time = think_time
+        self._t_end = 0.0
+        self.issued = 0
+
+    def run(self, duration: float, warmup: float = 0.0) -> None:
+        """Drive for warmup+duration sim-seconds; ops completing during
+        warmup are not recorded."""
+        t_rec = self.sim.now + warmup
+        self._t_end = t_rec + duration
+        for _ in range(self.n_clients):
+            self._loop(t_rec)
+        self.sim.run(until=self._t_end)
+
+    def _loop(self, t_rec: float) -> None:
+        if self.sim.now >= self._t_end:
+            return
+        op = self.stream.next_op()
+        kind = self.adapter.kind_name(op)
+        t0 = self.sim.now
+        self.issued += 1
+
+        def done(ok: bool):
+            if t0 >= t_rec and self.sim.now <= self._t_end:
+                self.log.record(self.sim.now, kind, ok, self.sim.now - t0)
+            if ok and op.kind != OpKind.READ:
+                self.stream.insert_horizon = max(
+                    self.stream.insert_horizon, op.key_index + 1)
+            if self.think_time > 0:
+                self.sim.schedule(self.think_time, self._loop, t_rec)
+            else:
+                self._loop(t_rec)
+
+        self.adapter.issue(op, done)
+
+
+class OpenLoopDriver:
+    """Poisson arrivals at `rate` ops/s; completions never gate arrivals.
+
+    `max_outstanding` bounds in-flight ops so a dead cluster cannot grow
+    the event heap without limit — arrivals past the bound are recorded as
+    failed (shed), which is what a real open-loop generator reports."""
+
+    def __init__(self, sim, adapter, stream: OpStream, log: OpLog,
+                 rate: float, max_outstanding: int = 10_000):
+        self.sim = sim
+        self.adapter = adapter
+        self.stream = stream
+        self.log = log
+        self.rate = rate
+        self.max_outstanding = max_outstanding
+        self.outstanding = 0
+        self.shed = 0
+        self._t_end = 0.0
+
+    def run(self, duration: float, warmup: float = 0.0) -> None:
+        t_rec = self.sim.now + warmup
+        self._t_end = t_rec + duration
+        self._arrive(t_rec)
+        self.sim.run(until=self._t_end)
+
+    def _arrive(self, t_rec: float) -> None:
+        if self.sim.now >= self._t_end:
+            return
+        gap = self.stream.next_gap(self.rate)
+        op = self.stream.next_op()
+        kind = self.adapter.kind_name(op)
+        t0 = self.sim.now
+
+        if self.outstanding >= self.max_outstanding:
+            self.shed += 1
+            if t0 >= t_rec:
+                self.log.record(t0, kind, False, 0.0)
+        else:
+            self.outstanding += 1
+
+            def done(ok: bool):
+                self.outstanding -= 1
+                if t0 >= t_rec and self.sim.now <= self._t_end:
+                    self.log.record(self.sim.now, kind, ok,
+                                    self.sim.now - t0)
+                if ok and op.kind != OpKind.READ:
+                    self.stream.insert_horizon = max(
+                        self.stream.insert_horizon, op.key_index + 1)
+
+            self.adapter.issue(op, done)
+        self.sim.schedule(gap, self._arrive, t_rec)

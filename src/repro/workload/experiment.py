@@ -1,0 +1,170 @@
+"""Experiment plumbing: build a cluster, preload the keyspace, drive a
+workload (optionally under a fault schedule), and emit a JSON-serializable
+result block.
+
+These are the functions `benchmarks/spinnaker_bench.py` composes into the
+paper's §9 comparisons; they are importable on their own so tests and
+notebooks can run one-off scenarios.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from ..baselines.cassandra import CassandraCluster, CassandraConfig
+from ..core.cluster import ClusterConfig, SpinnakerCluster, key_of
+from ..core.node import NodeConfig
+from ..core.replica import ReplicaConfig
+from ..core.sim import DiskParams, NetParams, Simulator
+from .drivers import (CassandraAdapter, ClosedLoopDriver, OpenLoopDriver,
+                      SpinnakerAdapter)
+from .generators import OpStream, WorkloadSpec
+from .metrics import OpLog
+from .scenario import FaultSchedule, parse_schedule
+
+_DISKS = {"hdd": DiskParams.hdd, "ssd": DiskParams.ssd,
+          "mem": DiskParams.memory}
+
+
+@dataclass
+class ExperimentConfig:
+    """Everything one run needs besides the WorkloadSpec."""
+    n_nodes: int = 5
+    disk: str = "ssd"                 # hdd | ssd | mem
+    seed: int = 0
+    commit_period: float = 0.05       # leader's periodic commit broadcast
+    # driver
+    driver: str = "closed"            # closed | open
+    n_clients: int = 16
+    open_rate: float = 2000.0         # ops/s, open-loop only
+    warmup: float = 1.0
+    duration: float = 5.0
+    window: float = 0.5               # timeline bucket width
+    preload_keys: int = 0             # 0 = spec.num_keys, capped below
+    preload_cap: int = 2000
+
+
+def build_spinnaker(cfg: ExperimentConfig):
+    sim = Simulator(seed=cfg.seed)
+    ccfg = ClusterConfig(
+        n_nodes=cfg.n_nodes,
+        node=NodeConfig(replica=ReplicaConfig(commit_period=cfg.commit_period),
+                        disk=_DISKS[cfg.disk]()))
+    cluster = SpinnakerCluster(sim, ccfg)
+    cluster.start()
+    cluster.settle()
+    return sim, cluster
+
+
+def build_cassandra(cfg: ExperimentConfig):
+    sim = Simulator(seed=cfg.seed)
+    cluster = CassandraCluster(
+        sim, CassandraConfig(n_nodes=cfg.n_nodes, disk=_DISKS[cfg.disk]()))
+    return sim, cluster
+
+
+def _preload(sim, put, n_keys: int, deadline: float = 120.0) -> None:
+    """Write keys 0..n_keys-1 so reads hit existing data."""
+    done = [0]
+    for i in range(n_keys):
+        put(key_of(i), lambda r: done.__setitem__(0, done[0] + 1))
+    limit = sim.now + deadline
+    while done[0] < n_keys and sim.now < limit:
+        sim.run(until=sim.now + 0.25)
+    if done[0] < n_keys:
+        raise RuntimeError(f"preload incomplete: {done[0]}/{n_keys}")
+
+
+def _drive(sim, adapter, spec: WorkloadSpec, cfg: ExperimentConfig,
+           schedule: Optional[FaultSchedule], cluster,
+           preloaded: int) -> tuple[OpLog, float]:
+    stream = OpStream(spec, seed=cfg.seed + 1)
+    if spec.key_dist == "latest":
+        # 'latest' skews toward recent inserts: start the horizon at the
+        # preloaded prefix; drivers advance it on successful writes
+        stream.insert_horizon = max(1, preloaded)
+    log = OpLog()
+    if schedule is not None:
+        # schedule times are relative to the measured interval's start
+        schedule.install(sim, cluster, at=sim.now + cfg.warmup)
+    if cfg.driver == "open":
+        drv = OpenLoopDriver(sim, adapter, stream, log, rate=cfg.open_rate)
+    else:
+        drv = ClosedLoopDriver(sim, adapter, stream, log,
+                               n_clients=cfg.n_clients)
+    t_start = sim.now + cfg.warmup
+    drv.run(cfg.duration, warmup=cfg.warmup)
+    return log, t_start
+
+
+def _result(log: OpLog, cfg: ExperimentConfig, read_kind: str,
+            write_kind: str, schedule: Optional[FaultSchedule],
+            t_start: float) -> dict:
+    out = {
+        "reads": log.summary(read_kind, duration=cfg.duration),
+        "writes": log.summary(write_kind, duration=cfg.duration),
+        "total_ops": len(log),
+        "duration_s": cfg.duration,
+        "throughput": sum(h.total for h in log.hists.values()) / cfg.duration,
+    }
+    if schedule is not None:
+        out["fault_events"] = list(schedule.applied)
+        out["timeline"] = {}
+        for kind in (read_kind, write_kind):
+            rows = []
+            for w in log.windows(cfg.window, kind=kind, t0=t_start,
+                                 t1=t_start + cfg.duration):
+                d = vars(w).copy()
+                # report windows relative to the measured interval's start
+                d["t_start"] = round(d["t_start"] - t_start, 6)
+                d["t_end"] = round(d["t_end"] - t_start, 6)
+                rows.append(d)
+            out["timeline"][kind] = rows
+    return out
+
+
+def run_spinnaker_workload(spec: WorkloadSpec,
+                           cfg: Optional[ExperimentConfig] = None,
+                           consistent_reads: bool = True,
+                           monotonic: bool = False,
+                           schedule: Optional[FaultSchedule | str] = None
+                           ) -> dict:
+    """One Spinnaker run; returns the JSON-ready result block."""
+    cfg = cfg or ExperimentConfig()
+    if isinstance(schedule, str):
+        schedule = parse_schedule(schedule)
+    sim, cluster = build_spinnaker(cfg)
+    loader = cluster.make_client("preload")
+    n_pre = min(cfg.preload_keys or spec.num_keys, cfg.preload_cap,
+                spec.num_keys)
+    _preload(sim, lambda k, cb: loader.put(k, "c", b"x" * spec.value_size,
+                                           cb), n_pre)
+    adapter = SpinnakerAdapter(cluster.make_client("bench"),
+                               consistent=consistent_reads,
+                               monotonic=monotonic)
+    log, t_start = _drive(sim, adapter, spec, cfg, schedule, cluster, n_pre)
+    read_kind = "read" if consistent_reads else "timeline_read"
+    return _result(log, cfg, read_kind, "write", schedule, t_start)
+
+
+def run_cassandra_workload(spec: WorkloadSpec,
+                           cfg: Optional[ExperimentConfig] = None,
+                           quorum: bool = True,
+                           schedule: Optional[FaultSchedule | str] = None
+                           ) -> dict:
+    """One Cassandra-baseline run (quorum or eventual consistency)."""
+    cfg = cfg or ExperimentConfig()
+    if isinstance(schedule, str):
+        schedule = parse_schedule(schedule)
+    sim, cluster = build_cassandra(cfg)
+    loader = cluster.make_client("preload")
+    n_pre = min(cfg.preload_keys or spec.num_keys, cfg.preload_cap,
+                spec.num_keys)
+    _preload(sim, lambda k, cb: loader.write(k, "c", b"x" * spec.value_size,
+                                             True, cb), n_pre)
+    adapter = CassandraAdapter(cluster.make_client("bench"), quorum=quorum)
+    log, t_start = _drive(sim, adapter, spec, cfg, schedule, cluster, n_pre)
+    prefix = "" if quorum else "eventual_"
+    return _result(log, cfg, f"{prefix}read", f"{prefix}write", schedule,
+                   t_start)

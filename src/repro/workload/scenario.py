@@ -1,0 +1,181 @@
+"""Declarative fault-schedule DSL.
+
+A scenario is a timeline of one-line directives, e.g.::
+
+    # Fig. 9: kill the leader mid-load, watch availability recover
+    at 10s   crash node 2 lose_disk
+    at 25s   restart node 2
+    at 40s   partition {0,1} | {2,3,4}
+    at 55s   heal
+    at 60s   crash leader of 0
+
+Grammar (one directive per line, '#' starts a comment):
+
+    at <T>[s] crash node <i> [lose_disk] [no_expire]
+    at <T>[s] crash leader of <rid> [lose_disk] [no_expire]
+    at <T>[s] restart node <i>
+    at <T>[s] restart crashed          # most recently crashed node
+    at <T>[s] partition {i,j,...} | {k,...} [| ...]
+    at <T>[s] heal
+
+`crash leader of <rid>` resolves *at fire time* — whoever leads cohort
+`rid` then is killed, so the same scenario file exercises every failover
+regime regardless of which node won the previous election.  Times are
+absolute sim-time seconds (offset by `install(at=...)`).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+_AT = re.compile(r"^at\s+([0-9.]+)s?\s+(.*)$")
+_CRASH_NODE = re.compile(r"^crash\s+node\s+(\d+)\s*(.*)$")
+_CRASH_LEADER = re.compile(r"^crash\s+leader\s+of\s+(\d+)\s*(.*)$")
+_RESTART = re.compile(r"^restart\s+(node\s+\d+|crashed)$")
+_PARTITION = re.compile(r"^partition\s+(.*)$")
+_GROUP = re.compile(r"\{([0-9,\s]*)\}")
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    t: float
+    action: str                  # crash | crash_leader | restart | partition | heal
+    node: Optional[int] = None
+    rid: Optional[int] = None
+    lose_disk: bool = False
+    expire_session: bool = True
+    groups: tuple = ()
+
+    def describe(self) -> str:
+        if self.action == "crash":
+            return f"t={self.t}: crash node {self.node}" + \
+                (" (disk lost)" if self.lose_disk else "")
+        if self.action == "crash_leader":
+            return f"t={self.t}: crash leader of range {self.rid}"
+        if self.action == "restart":
+            return f"t={self.t}: restart node {self.node}"
+        if self.action == "partition":
+            return f"t={self.t}: partition " + \
+                "|".join("{" + ",".join(map(str, g)) + "}"
+                         for g in self.groups)
+        return f"t={self.t}: heal"
+
+
+def _parse_flags(rest: str) -> dict:
+    flags = set(rest.split())
+    unknown = flags - {"lose_disk", "no_expire"}
+    if unknown:
+        raise ValueError(f"unknown crash flags: {sorted(unknown)}")
+    return {"lose_disk": "lose_disk" in flags,
+            "expire_session": "no_expire" not in flags}
+
+
+def parse_schedule(text: str) -> "FaultSchedule":
+    events = []
+    for lineno, raw in enumerate(text.splitlines(), 1):
+        line = raw.split("#", 1)[0].strip()
+        if not line:
+            continue
+        m = _AT.match(line)
+        if not m:
+            raise ValueError(f"line {lineno}: expected 'at <T>s ...': {raw!r}")
+        t, body = float(m.group(1)), m.group(2).strip()
+        if body == "heal":
+            events.append(FaultEvent(t, "heal"))
+            continue
+        cm = _CRASH_NODE.match(body)
+        if cm:
+            events.append(FaultEvent(t, "crash", node=int(cm.group(1)),
+                                     **_parse_flags(cm.group(2))))
+            continue
+        lm = _CRASH_LEADER.match(body)
+        if lm:
+            events.append(FaultEvent(t, "crash_leader", rid=int(lm.group(1)),
+                                     **_parse_flags(lm.group(2))))
+            continue
+        rm = _RESTART.match(body)
+        if rm:
+            tgt = rm.group(1)
+            node = None if tgt == "crashed" else int(tgt.split()[1])
+            events.append(FaultEvent(t, "restart", node=node))
+            continue
+        pm = _PARTITION.match(body)
+        if pm:
+            groups = tuple(
+                tuple(int(x) for x in g.split(",") if x.strip())
+                for g in _GROUP.findall(pm.group(1)))
+            if len(groups) < 2:
+                raise ValueError(
+                    f"line {lineno}: partition needs >=2 groups: {raw!r}")
+            events.append(FaultEvent(t, "partition", groups=groups))
+            continue
+        raise ValueError(f"line {lineno}: cannot parse {raw!r}")
+    return FaultSchedule(sorted(events, key=lambda e: e.t))
+
+
+@dataclass
+class FaultSchedule:
+    """Parsed timeline; `install` arms it on a simulator + cluster."""
+    events: list[FaultEvent] = field(default_factory=list)
+    applied: list[str] = field(default_factory=list)
+    last_crashed: Optional[int] = None
+
+    def install(self, sim, cluster, at: float = 0.0,
+                on_event: Optional[Callable[[str], None]] = None) -> None:
+        """Schedule every event at `at + event.t` against `cluster`.
+
+        Works with any cluster exposing crash_node/restart_node and a
+        `net` with partition support; `crash leader of` additionally needs
+        `leader_replica` (Spinnaker only)."""
+        for ev in self.events:
+            sim.at(at + ev.t, self._fire, ev, cluster, on_event)
+
+    def _crash(self, cluster, node: int, ev: FaultEvent) -> None:
+        if _takes_expire(cluster):
+            cluster.crash_node(node, lose_disk=ev.lose_disk,
+                               expire_session=ev.expire_session)
+        else:
+            cluster.crash_node(node, lose_disk=ev.lose_disk)
+        self.last_crashed = node
+
+    def _fire(self, ev: FaultEvent, cluster, on_event) -> None:
+        if ev.action == "crash":
+            self._crash(cluster, ev.node, ev)
+        elif ev.action == "crash_leader":
+            rep = cluster.leader_replica(ev.rid)
+            if rep is None:
+                # record the no-op honestly: an artifact claiming a kill
+                # that never happened would make recovery checks vacuous
+                msg = f"t={ev.t}: crash leader of range {ev.rid} " \
+                      "skipped (no open leader)"
+                self.applied.append(msg)
+                if on_event is not None:
+                    on_event(msg)
+                return
+            nid = rep.node.node_id
+            self._crash(cluster, nid, ev)
+            ev = FaultEvent(ev.t, "crash", node=nid, lose_disk=ev.lose_disk)
+        elif ev.action == "restart":
+            node = ev.node if ev.node is not None else self.last_crashed
+            if node is not None:
+                cluster.restart_node(node)
+                ev = FaultEvent(ev.t, "restart", node=node)
+        elif ev.action == "partition":
+            cluster.net.set_partition(ev.groups)
+        elif ev.action == "heal":
+            cluster.net.clear_partition()
+        msg = ev.describe()
+        self.applied.append(msg)
+        if on_event is not None:
+            on_event(msg)
+
+
+def _takes_expire(cluster) -> bool:
+    import inspect
+    try:
+        return "expire_session" in inspect.signature(
+            cluster.crash_node).parameters
+    except (TypeError, ValueError):
+        return False

@@ -30,10 +30,12 @@ def test_microbatch_accumulation_matches_full_batch():
     s1b, m1 = jax.jit(make_train_step(cfg, t1))(s1, batch)
     s4b, m4 = jax.jit(make_train_step(cfg, t4))(s4, batch)
     assert m4["loss"] == pytest.approx(float(m1["loss"]), rel=1e-5)
+    # atol covers f32 reduction-order noise in the per-microbatch grads,
+    # amplified by Adam's rsqrt on near-zero second moments at step 1
     for a, b in zip(jax.tree.leaves(s1b["params"]),
                     jax.tree.leaves(s4b["params"])):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                   rtol=2e-5, atol=2e-6)
+                                   rtol=2e-5, atol=2e-5)
 
 
 def test_grad_compression_step_trains():

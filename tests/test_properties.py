@@ -13,6 +13,8 @@ never violate Spinnaker's guarantees (§8.1):
 """
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core import (ClusterConfig, ErrorCode, NodeConfig, ReplicaConfig,

@@ -1,0 +1,102 @@
+"""Store.get tombstone contract and the compaction GC edge (§4.1, §6.1)."""
+
+from repro.core.storage import Store
+from repro.core.types import LogRecord, OpType
+
+
+def rec(lsn: int, key: str, value, version: int,
+        op: OpType = OpType.PUT) -> LogRecord:
+    return LogRecord(range_id=0, lsn=lsn, op=op, key=key,
+                     columns=(("c", value, version),))
+
+
+def put(store: Store, lsn: int, key: str, value, version: int) -> None:
+    store.apply(rec(lsn, key, value, version))
+
+
+def delete(store: Store, lsn: int, key: str, version: int) -> None:
+    store.apply(rec(lsn, key, None, version, op=OpType.DELETE))
+
+
+def test_get_returns_tombstone_not_none():
+    s = Store()
+    put(s, 1, "k", b"v1", 1)
+    delete(s, 2, "k", 2)
+    cell = s.get("k", "c")
+    assert cell is not None and cell.deleted and cell.value is None
+    # version arithmetic continues across the delete
+    assert s.current_version("k", "c") == 2
+    # a key never written is genuinely None
+    assert s.get("nope", "c") is None
+
+
+def test_tombstone_survives_flush_and_shadows_sstable_value():
+    s = Store(flush_threshold_bytes=1)
+    put(s, 1, "k", b"v1", 1)
+    s.flush(committed_lsn=1)           # value now durable in an SSTable
+    delete(s, 2, "k", 2)
+    s.flush(committed_lsn=2)           # tombstone in a newer SSTable
+    cell = s.get("k", "c")
+    assert cell is not None and cell.deleted
+    assert s.current_version("k", "c") == 2
+
+
+def test_compaction_gc_drops_tombstone_without_resurrection():
+    """The _maybe_compact GC edge: merging the oldest runs into the stack
+    bottom must drop tombstones *and* the values they shadow together —
+    a read afterwards is NOT_FOUND (None), never the old value."""
+    s = Store(flush_threshold_bytes=1, compact_fanin=2)
+    lsn = 0
+
+    def bump():
+        nonlocal lsn
+        lsn += 1
+        return lsn
+
+    put(s, bump(), "dead", b"old", 1)
+    s.flush(committed_lsn=lsn)
+    delete(s, bump(), "dead", 2)
+    s.flush(committed_lsn=lsn)
+    # pile up runs until size-tiered compaction fires (fanin*2 = 4 runs)
+    while s.compactions == 0:
+        put(s, bump(), f"fill{lsn}", b"x", 1)
+        s.flush(committed_lsn=lsn)
+    # value and tombstone were both in the merged bottom run: gone together
+    assert s.get("dead", "c") is None
+    assert s.current_version("dead", "c") == 0
+    # live fills are still readable after the merge
+    live = [k for k in range(3, lsn + 1)]
+    assert any(s.get(f"fill{k}", "c") is not None for k in live)
+
+
+def test_compaction_keeps_tombstone_needed_above_merged_run():
+    """A delete newer than the merged runs must keep shadowing their
+    values: the tombstone lives in a non-victim run and still wins."""
+    s = Store(flush_threshold_bytes=1, compact_fanin=2)
+    put(s, 1, "k", b"old", 1)
+    s.flush(committed_lsn=1)
+    put(s, 2, "fill_a", b"x", 1)
+    s.flush(committed_lsn=2)
+    put(s, 3, "fill_b", b"x", 1)
+    s.flush(committed_lsn=3)
+    delete(s, 4, "k", 2)
+    s.flush(committed_lsn=4)           # triggers compaction of runs 1+2
+    assert s.compactions >= 1
+    cell = s.get("k", "c")
+    # the old value must NOT have resurrected
+    assert cell is not None and cell.deleted and cell.value is None
+
+
+def test_compaction_newest_cell_wins_within_victims():
+    s = Store(flush_threshold_bytes=1, compact_fanin=2)
+    put(s, 1, "k", b"v1", 1)
+    s.flush(committed_lsn=1)
+    put(s, 2, "k", b"v2", 2)
+    s.flush(committed_lsn=2)
+    put(s, 3, "a", b"x", 1)
+    s.flush(committed_lsn=3)
+    put(s, 4, "b", b"x", 1)
+    s.flush(committed_lsn=4)
+    assert s.compactions >= 1
+    cell = s.get("k", "c")
+    assert cell is not None and cell.value == b"v2" and cell.version == 2
