@@ -1,6 +1,9 @@
 #!/usr/bin/env bash
 # Pre-merge gate: a short workload scenario against a 5-node cluster
-# (leader kill included) plus the tier-1 test suite.
+# (leader kill included), a perf-regression check against the committed
+# BENCH_spinnaker.json (fig8 write throughput + a capped saturation
+# quick-sweep must not regress >10% / lose the batching edge), plus the
+# tier-1 test suite.
 #
 #     bash benchmarks/smoke.sh
 set -euo pipefail
@@ -24,6 +27,10 @@ assert r["reads"]["count"] > 0 and r["writes"]["count"] > 0
 print(f"ok: {r['total_ops']} ops, reads p99={r['reads']['p99_ms']:.2f}ms, "
       f"writes resumed after leader kill")
 EOF
+
+echo "== perf-regression gate vs committed BENCH_spinnaker.json =="
+python benchmarks/spinnaker_bench.py --scenario regress --quick \
+    --out BENCH_spinnaker.json
 
 echo "== tier-1 suite =="
 python -m pytest -x -q

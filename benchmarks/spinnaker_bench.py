@@ -1,7 +1,7 @@
 """Paper-§9 experiment runner: Spinnaker vs the Cassandra baseline.
 
     PYTHONPATH=src python benchmarks/spinnaker_bench.py \
-        --scenario figs8-10 [--quick] [--out BENCH_spinnaker.json]
+        --scenario all [--quick] [--out BENCH_spinnaker.json]
 
 Scenarios:
 
@@ -13,11 +13,21 @@ Scenarios:
   without manual intervention once a follower takes over);
 - `fig10`   — same failure, timeline-read availability (reads keep being
   served by the surviving replicas throughout);
-- `figs8-10`— all of the above in one JSON artifact.
+- `saturation` — open-loop write-only rate ramps per disk class (§C
+  methodology): batch=off vs adaptive proposal-batching curves, locating
+  the saturation knee each way.  This is the measurement surface future
+  perf PRs regress against;
+- `figs8-10`— figs 8, 9, 10;
+- `all`     — everything above in one JSON artifact;
+- `regress` — re-measure fig8 write throughput and a capped saturation
+  sweep, compare against the committed `--out` file, exit 1 on a >10%
+  write-throughput regression (the smoke.sh gate; does not overwrite).
 
 Emits `BENCH_spinnaker.json` plus claim checks against the paper's
 headline: comparable read latency, writes within ~5-10% of eventual
-consistency's throughput cost envelope, and post-failover recovery.
+consistency's throughput cost envelope, post-failover recovery, and the
+batching win at the knee (peak write throughput ≥ 25% over batch=off
+with light-load p50 within 10%).
 """
 
 from __future__ import annotations
@@ -30,7 +40,8 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.workload import (ExperimentConfig, WorkloadSpec,  # noqa: E402
-                            run_cassandra_workload, run_spinnaker_workload)
+                            run_cassandra_workload,
+                            run_spinnaker_saturation, run_spinnaker_workload)
 
 LEADER_KILL = """
 # Fig. 9/10: kill whichever node currently leads range 0, mid-load;
@@ -74,6 +85,107 @@ def run_fig8(quick: bool) -> dict:
               f"writes p50={r['writes']['p50_ms']:.2f}ms "
               f"tput={r['throughput']:.0f}/s", flush=True)
     return out
+
+
+def sat_spec() -> WorkloadSpec:
+    """Write-only uniform mix: isolates the replication write path the way
+    §C's saturation runs do (reads would only dilute the knee)."""
+    return WorkloadSpec(num_keys=1000, key_dist="uniform",
+                        read_frac=0.0, write_frac=1.0, rmw_frac=0.0,
+                        cond_frac=0.0, value_size=1024)
+
+
+def sat_cfg(disk: str, batch: str, seed: int = 0) -> ExperimentConfig:
+    return ExperimentConfig(n_nodes=5, disk=disk, batch=batch, seed=seed,
+                            preload_cap=100)
+
+
+SAT_RATES_QUICK = [5000, 20000, 35000, 50000, 65000]
+SAT_RATES = [2000, 5000, 10000, 20000, 30000, 40000, 50000, 60000, 70000]
+
+
+def check_saturation(off: dict, adaptive: dict) -> dict:
+    """Acceptance surface: adaptive batching must buy >= 25% peak write
+    throughput at the knee without costing > 10% p50 at light load."""
+    p50_off = off["points"][0]["write_p50_ms"]
+    p50_ad = adaptive["points"][0]["write_p50_ms"]
+    gain = adaptive["peak_write_tput"] / max(off["peak_write_tput"], 1e-9)
+    ratio = p50_ad / max(p50_off, 1e-9)
+    return {
+        "peak_write_tput_off": off["peak_write_tput"],
+        "peak_write_tput_adaptive": adaptive["peak_write_tput"],
+        "peak_gain": gain,
+        "light_load_p50_off_ms": p50_off,
+        "light_load_p50_adaptive_ms": p50_ad,
+        "light_load_p50_ratio": ratio,
+        "mean_batch_records": adaptive["mean_batch_records"],
+        "ok": bool(gain >= 1.25 and ratio <= 1.10),
+    }
+
+
+def run_saturation(quick: bool) -> dict:
+    rates = SAT_RATES_QUICK if quick else SAT_RATES
+    dwell = 1.0 if quick else 2.0
+    out = {}
+    for disk in ("ssd", "mem", "hdd"):
+        curves = {}
+        for batch in ("off", "adaptive"):
+            print(f"saturation: disk={disk} batch={batch} ...", flush=True)
+            curves[batch] = run_spinnaker_saturation(
+                sat_spec(), sat_cfg(disk, batch), rates=rates,
+                dwell=dwell, settle=0.3)
+        check = check_saturation(curves["off"], curves["adaptive"])
+        out[disk] = {"off": curves["off"], "adaptive": curves["adaptive"],
+                     "check": check}
+        print(f"  {disk}: knee off={check['peak_write_tput_off']:.0f}/s "
+              f"adaptive={check['peak_write_tput_adaptive']:.0f}/s "
+              f"(gain {check['peak_gain']:.2f}x, "
+              f"light p50 ratio {check['light_load_p50_ratio']:.2f}, "
+              f"meanB={check['mean_batch_records']:.1f}) "
+              f"{'ok' if check['ok'] else 'FAIL'}", flush=True)
+    return out
+
+
+def run_regression_gate(committed_path: str) -> int:
+    """smoke.sh gate: compare a fresh fig8 write-throughput measurement and
+    a capped saturation quick-sweep against the committed artifact."""
+    path = Path(committed_path)
+    if not path.exists():
+        print(f"regress: no committed {committed_path}; nothing to gate")
+        return 0
+    committed = json.loads(path.read_text())
+    rc = 0
+    # 1. fig8 write throughput, same config as the committed quick run
+    want = committed.get("fig8", {}).get("spinnaker_strong", {}) \
+        .get("writes", {}).get("throughput")
+    if want:
+        spec, cfg = base_spec(True), base_cfg(True)
+        got = run_spinnaker_workload(spec, cfg, consistent_reads=True)
+        tput = got["writes"]["throughput"]
+        print(f"regress fig8: write tput {tput:.0f}/s vs committed "
+              f"{want:.0f}/s ({tput / want:.2f}x)")
+        if tput < 0.9 * want:
+            print("FAIL: fig8 write throughput regressed >10%")
+            rc = 1
+    # 2. capped saturation quick-sweep: batching must still buy throughput
+    rates = SAT_RATES_QUICK[:3]
+    off = run_spinnaker_saturation(sat_spec(), sat_cfg("ssd", "off"),
+                                   rates=rates, dwell=0.6, settle=0.2)
+    ad = run_spinnaker_saturation(sat_spec(), sat_cfg("ssd", "adaptive"),
+                                  rates=rates, dwell=0.6, settle=0.2)
+    print(f"regress saturation (capped @ {rates[-1]}/s): "
+          f"off={off['peak_write_tput']:.0f}/s "
+          f"adaptive={ad['peak_write_tput']:.0f}/s")
+    if ad["peak_write_tput"] < 1.15 * off["peak_write_tput"]:
+        print("FAIL: adaptive batching lost its throughput edge")
+        rc = 1
+    want_sat = committed.get("saturation", {}).get("ssd", {}) \
+        .get("check", {}).get("peak_write_tput_adaptive")
+    if want_sat and ad["peak_write_tput"] < 0.9 * min(want_sat, rates[-1]):
+        print(f"FAIL: capped adaptive peak {ad['peak_write_tput']:.0f}/s "
+              f"regressed >10% vs committed {want_sat:.0f}/s (capped)")
+        rc = 1
+    return rc
 
 
 def run_failover(quick: bool, consistent_reads: bool) -> dict:
@@ -126,34 +238,46 @@ def check_paper_claims(fig8: dict) -> list[str]:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--scenario", default="figs8-10",
-                    choices=["fig8", "fig9", "fig10", "figs8-10"])
+    ap.add_argument("--scenario", default="all",
+                    choices=["fig8", "fig9", "fig10", "saturation",
+                             "figs8-10", "all", "regress"])
     ap.add_argument("--quick", action="store_true",
                     help="short runs (CI / smoke mode)")
     ap.add_argument("--out", default="BENCH_spinnaker.json")
     args = ap.parse_args(argv)
 
+    if args.scenario == "regress":
+        return run_regression_gate(args.out)
+
     rec: dict = {"scenario": args.scenario, "quick": args.quick}
-    if args.scenario in ("fig8", "figs8-10"):
+    if args.scenario in ("fig8", "figs8-10", "all"):
         rec["fig8"] = run_fig8(args.quick)
         rec["claims"] = check_paper_claims(rec["fig8"])
-    if args.scenario in ("fig9", "figs8-10"):
+    if args.scenario in ("fig9", "figs8-10", "all"):
         print("fig9: leader kill under write load ...", flush=True)
         rec["fig9"] = run_failover(args.quick, consistent_reads=True)
         rec["fig9_check"] = check_writes_resume(rec["fig9"])
         print(f"  {rec['fig9_check']}", flush=True)
-    if args.scenario in ("fig10", "figs8-10"):
+    if args.scenario in ("fig10", "figs8-10", "all"):
         print("fig10: leader kill under timeline reads ...", flush=True)
         rec["fig10"] = run_failover(args.quick, consistent_reads=False)
+    if args.scenario in ("saturation", "all"):
+        rec["saturation"] = run_saturation(args.quick)
 
     Path(args.out).write_text(json.dumps(rec, indent=2))
     print(f"wrote {args.out}")
     for c in rec.get("claims", []):
         print("claim:", c)
+    rc = 0
     if "fig9_check" in rec and not rec["fig9_check"]["writes_resumed"]:
         print("FAIL: writes did not resume after leader crash")
-        return 1
-    return 0
+        rc = 1
+    for disk, curves in rec.get("saturation", {}).items():
+        if not curves["check"]["ok"]:
+            print(f"FAIL: {disk} saturation check (>=25% peak gain, <=10% "
+                  "light-load p50 cost) did not hold")
+            rc = 1
+    return rc
 
 
 if __name__ == "__main__":

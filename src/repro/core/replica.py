@@ -5,12 +5,21 @@ One `CohortReplica` instance exists per (node, key-range).  The node wires
 replicas to its shared WAL, CPU server, network, and coordination session.
 
 Protocol summary (steady state, Fig. 4):
-  client write -> leader: assign LSN (epoch.seq) + versions, append+force
-  own log ∥ send PROPOSE to in-sync followers; followers force + ACK;
-  leader commits once 2 of 3 logs hold the record (its own force counts),
-  applies to memtable, replies to client.  A periodic async COMMIT message
-  advances followers (the *commit period*); commit LSNs are persisted with
-  non-forced log writes.
+  client write -> leader: assign LSN (epoch.seq) + versions, append to the
+  cohort's *batch accumulator*; the batch flushes (immediately when the
+  CPU is idle, else on a record-count/byte/deadline trigger) as ONE
+  multi-record PROPOSE per in-sync follower ∥ one WAL force covering the
+  whole batch; followers force the batch once and reply with a single
+  *cumulative* ACK (their durability watermark, superseding all lower
+  acks); the leader commits once 2 of 3 logs hold a record (its own force
+  counts), applies to memtable, replies to clients.  A periodic async
+  COMMIT message advances followers (the *commit period*, skipped while
+  cmt is idle); commit LSNs are persisted with non-forced log writes.
+
+  Batching is the paper's "leader batches writes" lever (§5, §C): it
+  amortises per-message CPU and per-force disk cost, which is what moves
+  the §C saturation knee.  With `batch="off"` every record flushes alone
+  and the wire protocol degenerates to the per-operation original.
 
 Recovery (Fig. 5/6, App. B): follower local recovery replays (flushed,
 f.cmt], catch-up pulls committed writes (f.cmt, l.cmt] from the leader
@@ -55,6 +64,16 @@ class ReplicaConfig:
     commit_period: float = 1.0          # §D.1 default
     piggyback_commit: bool = False      # §D.1: piggy-back commit LSN on proposes
     flush_threshold: int = 4 << 20
+    # -- leader-side proposal batching -------------------------------------
+    # "adaptive": a write flushes immediately while the node's CPU queue is
+    # empty (light load keeps per-op latency), and accumulates under queuing
+    # until a record-count/byte/deadline trigger fires — so batch size grows
+    # exactly when the per-message costs start to dominate.  "off": flush
+    # after every record (the strictly per-operation protocol).
+    batch: str = "adaptive"             # "adaptive" | "off"
+    batch_max_records: int = 32
+    batch_max_bytes: int = 256 << 10
+    batch_deadline: float = 0.5e-3      # max extra latency bought for batching
 
 
 class CohortReplica:
@@ -88,6 +107,13 @@ class CohortReplica:
         self._commit_timer = None
         self._takeover_hi = 0    # l.lst at takeover; writes open when cmt >= this
         self._election_round = 0
+        self._last_commit_bcast = -1   # cmt at the last on_commit broadcast
+
+        # leader-side batch accumulator (records queued + WAL-buffered but
+        # not yet covered by a force / proposed to followers)
+        self._batch: list[LogRecord] = []
+        self._batch_bytes = 0
+        self._batch_timer = None
 
         # follower-side
         self._announced_leader_epoch = 0
@@ -96,6 +122,9 @@ class CohortReplica:
         self.commits = 0
         self.writes_served = 0
         self.reads_served = 0
+        self.batches_flushed = 0       # leader: batch forces issued
+        self.batched_records = 0       # leader: records covered by them
+        self.acks_sent = 0             # follower: cumulative acks sent
 
     # ------------------------------------------------------------------ utils
     @property
@@ -126,6 +155,7 @@ class CohortReplica:
                 self.store.apply(r)
         self.queue = {r.lsn: r for r in records if r.lsn > self.cmt}
         self._follower_forced = self.lst   # durable log scanned
+        self._reset_batch()
         self.pending_reply.clear()
         self.acked = {p: 0 for p in self.peers}
         self.insync.clear()
@@ -139,6 +169,17 @@ class CohortReplica:
         if self._commit_timer is not None:
             self._commit_timer.cancel()
             self._commit_timer = None
+        self._reset_batch()
+
+    def _reset_batch(self) -> None:
+        """Drop the accumulated (not yet proposed) batch.  The records stay
+        in `queue`/`pending_reply`/the WAL buffer; regime-change paths
+        (`_drop_uncommitted_tail`, crash volatility) settle their fate."""
+        self._batch = []
+        self._batch_bytes = 0
+        if self._batch_timer is not None:
+            self._batch_timer.cancel()
+            self._batch_timer = None
 
     # ======================================================== election (§7.2)
     def _join_or_elect(self) -> None:
@@ -268,6 +309,8 @@ class CohortReplica:
         # (rebuilt from the durable log in start(), or live from before)
         self.forced_upto = self.lst        # everything local is durable or inflight->refused on crash
         self._takeover_hi = self.lst
+        self._reset_batch()
+        self._last_commit_bcast = -1   # first tick re-announces cmt
         # rebuild version map from committed state + unresolved queue
         self.proposed_version.clear()
         for lsn in sorted(self.queue):
@@ -325,6 +368,7 @@ class CohortReplica:
     def _step_down(self) -> None:
         if self.role in (Role.LEADER, Role.TAKEOVER):
             self.open_for_writes = False
+            self._reset_batch()
             if self._commit_timer is not None:
                 self._commit_timer.cancel()
                 self._commit_timer = None
@@ -388,12 +432,17 @@ class CohortReplica:
         self.insync.add(follower)
         self.acked[follower] = max(self.acked.get(follower, 0), upto)
         # close the in-flight gap: forward pending proposals this follower
-        # has not seen (they were proposed while it was out-of-sync); FIFO
-        # links order these before any subsequent propose
-        for lsn in sorted(l for l in self.queue if l > upto):
-            rec = self.queue[lsn]
-            self._send(follower, "on_propose", nbytes=rec.nbytes() + 64,
-                       epoch=self.epoch, record=rec,
+        # has not seen (they were proposed while it was out-of-sync) as one
+        # batched propose; FIFO links order it before any subsequent propose.
+        # Records still sitting in the un-flushed accumulator are excluded —
+        # the follower is in-sync now, so the coming flush covers them.
+        staged = {r.lsn for r in self._batch}
+        pending = [self.queue[l] for l in sorted(self.queue)
+                   if l > upto and l not in staged]
+        if pending:
+            nbytes = sum(r.nbytes() for r in pending) + 64
+            self._send(follower, "on_propose", nbytes=nbytes,
+                       epoch=self.epoch, records=pending,
                        commit_lsn=self._piggyback())
         self.log(f"follower n{follower} in-sync @ {fmt_lsn(upto)}")
         self._after_quorum_progress()
@@ -497,13 +546,66 @@ class CohortReplica:
         self.queue[lsn] = rec
         self.pending_reply[lsn] = reply
         self.writes_served += 1
-        # parallel: force own log ∥ propose to in-sync followers (Fig. 4)
-        self.node.wal.append(rec, force=True,
-                             cb=lambda: self._on_self_forced(lsn))
+        self._batch_append(rec)
+        self._maybe_flush_batch()
+
+    # --- leader-side proposal batching (§5 "batches writes", §C) -----------
+    def _batch_append(self, rec: LogRecord) -> None:
+        """Stage a record: WAL-buffered (rides along with the next force)
+        and queued for the next multi-record propose."""
+        self.node.wal.append(rec, force=False)
+        self._batch.append(rec)
+        self._batch_bytes += rec.nbytes()
+
+    def _maybe_flush_batch(self) -> None:
+        cfg = self.cfg
+        if not self._batch:
+            return
+        if cfg.batch != "adaptive" \
+                or len(self._batch) >= cfg.batch_max_records \
+                or self._batch_bytes >= cfg.batch_max_bytes \
+                or self.node.cpu.busy_until <= self.node.sim.now + 1e-12:
+            # CPU queue empty -> no load to amortise against: flush now and
+            # keep the unbatched latency profile.  Otherwise writes are
+            # arriving faster than they are served; let the batch grow.
+            self._flush_batch()
+        elif self._batch_timer is None:
+            self._batch_timer = self.node.sim.schedule(
+                cfg.batch_deadline, self._on_batch_deadline)
+
+    def _on_batch_deadline(self) -> None:
+        self._batch_timer = None
+        self._flush_batch()
+
+    def _flush_batch(self) -> None:
+        """One multi-record propose per in-sync follower ∥ one WAL force
+        covering the whole batch (Fig. 4's two parallel arrows, amortised)."""
+        if self._batch_timer is not None:
+            self._batch_timer.cancel()
+            self._batch_timer = None
+        batch, self._batch = self._batch, []
+        self._batch_bytes = 0
+        if not batch or self.role not in (Role.LEADER, Role.TAKEOVER):
+            return
+        tail = batch[-1].lsn
+        e0 = self.epoch
+        self.batches_flushed += 1
+        self.batched_records += len(batch)
+
+        def on_forced():
+            # EPOCH-BOUND like the follower path: a force in flight across
+            # a regime change must not advance the new regime's watermark
+            if self.epoch != e0 or self.role not in (Role.LEADER,
+                                                     Role.TAKEOVER):
+                return
+            self._on_self_forced(tail)
+            self._maybe_flush_batch()   # drain what queued during the force
+
+        self.node.wal.force(cb=on_forced)
+        nbytes = sum(r.nbytes() for r in batch) + 64
         for f in self.insync:
-            self._send(f, "on_propose", nbytes=rec.nbytes() + 64,
-                       epoch=self.epoch, record=rec,
-                       commit_lsn=self._piggyback())
+            self._send(f, "on_propose", nbytes=nbytes, epoch=self.epoch,
+                       records=list(batch), commit_lsn=self._piggyback())
 
     def client_transaction(self, ops: list, reply: Callable) -> None:
         """Multi-operation transaction (§8.2, the paper's sketched
@@ -546,20 +648,13 @@ class CohortReplica:
             self.queue[lsn] = rec
             records.append(rec)
         self.writes_served += 1
-        # client acked on the LAST record's commit (atomic prefix rule)
+        # client acked on the LAST record's commit (atomic prefix rule);
+        # the records ride the shared batch accumulator — atomicity comes
+        # from txn_tail in _apply_committed, not from sharing one force
         self.pending_reply[records[-1].lsn] = reply
-        for i, rec in enumerate(records):
-            force = i == len(records) - 1  # one group force for the batch
-            self.node.wal.append(
-                rec, force=force,
-                cb=(lambda lsn=rec.lsn: self._on_self_forced(lsn))
-                if force else None)
-        for f in self.insync:
-            nbytes = sum(r.nbytes() for r in records) + 64
-            for rec in records:
-                self._send(f, "on_propose", nbytes=nbytes // len(records),
-                           epoch=self.epoch, record=rec,
-                           commit_lsn=self._piggyback())
+        for rec in records:
+            self._batch_append(rec)
+        self._maybe_flush_batch()
 
     def _bump_version(self, key: str, colname: str) -> int:
         cur = self.proposed_version.get((key, colname))
@@ -574,22 +669,36 @@ class CohortReplica:
         self.forced_upto = max(self.forced_upto, lsn)
         self._advance_commit()
 
-    def on_propose(self, epoch: int, record: LogRecord,
+    def on_propose(self, epoch: int, records: list[LogRecord],
                    commit_lsn: Optional[int]) -> None:
+        """A leader batch: log every fresh record, force ONCE covering the
+        whole batch, reply with one cumulative ack (the durability
+        watermark — it supersedes every lower ack)."""
         if self.role is not Role.FOLLOWER or epoch != self.epoch:
             return
-        if record.lsn <= self._follower_forced or record.lsn <= self.cmt:
-            # durable duplicate (gap-forward overlap): plain re-ack
-            self._ack(record.lsn)
-        elif record.lsn in self.queue:
-            pass  # logged already; the in-flight force's ack covers it
-        else:
-            self.queue[record.lsn] = record
-            self.lst = max(self.lst, record.lsn)
+        fresh: list[LogRecord] = []
+        dup = False
+        for record in records:
+            if record.lsn <= self._follower_forced or record.lsn <= self.cmt:
+                dup = True      # durable duplicate (gap-forward overlap)
+            elif record.lsn in self.queue:
+                pass  # logged already; that batch's in-flight force acks it
+            else:
+                self.queue[record.lsn] = record
+                self.lst = max(self.lst, record.lsn)
+                fresh.append(record)
+        if fresh:
             e0 = self.epoch
-            self.node.wal.append(record, force=True,
-                                 cb=lambda: self._on_follower_forced(
-                                     record.lsn, e0))
+            tail = fresh[-1].lsn
+            for i, record in enumerate(fresh):
+                last = i == len(fresh) - 1
+                self.node.wal.append(
+                    record, force=last,
+                    cb=(lambda: self._on_follower_forced(tail, e0))
+                    if last else None)
+        elif dup:
+            # nothing new to force: re-ack the watermark
+            self._ack(max(self._follower_forced, self.cmt))
         if commit_lsn is not None:
             self._apply_committed(min(commit_lsn, self.lst))
 
@@ -604,15 +713,21 @@ class CohortReplica:
         if epoch != self.epoch:
             return
         self._follower_forced = max(self._follower_forced, lsn)
-        self._ack(lsn)
+        # forces are FIFO and proposes arrive in LSN order, so the
+        # watermark is the highest *contiguous* durable LSN: ack it once
+        # for the whole batch instead of once per record
+        self._ack(self._follower_forced)
 
     def _ack(self, lsn: int) -> None:
         if self.role is not Role.FOLLOWER:
             return
+        self.acks_sent += 1
         self._send(self.leader_id, "on_ack", epoch=self.epoch,
                    follower=self.node.node_id, lsn=lsn, nbytes=96)
 
     def on_ack(self, epoch: int, follower: int, lsn: int) -> None:
+        """Cumulative: `lsn` is the follower's durability watermark; it
+        covers everything at or below it, so max() is the whole merge."""
         if self.role not in (Role.LEADER, Role.TAKEOVER) or epoch != self.epoch:
             return
         if follower not in self.insync:
@@ -673,20 +788,43 @@ class CohortReplica:
         self._commit_timer = self.node.sim.schedule(
             self.cfg.commit_period, self._commit_tick)
 
+    _IDLE_REBCAST_TICKS = 20   # slow keepalive so a dropped broadcast heals
+
     def _commit_tick(self) -> None:
         if self.role not in (Role.LEADER, Role.TAKEOVER):
             return
-        self.node.wal.append(CommitMarker(self.rid, self.cmt), force=False)
-        for f in self.insync:
-            self._send(f, "on_commit", epoch=self.epoch, commit_lsn=self.cmt,
-                       nbytes=96)
+        if self.cmt != self._last_commit_bcast:
+            # progress: persist the marker and broadcast
+            self._last_commit_bcast = self.cmt
+            self._idle_ticks = 0
+            self.node.wal.append(CommitMarker(self.rid, self.cmt), force=False)
+            for f in self.insync:
+                self._send(f, "on_commit", epoch=self.epoch,
+                           commit_lsn=self.cmt, nbytes=96)
+        else:
+            # idle range: skip the marker append and the broadcast, except
+            # for a slow keepalive rebroadcast (messages only, no append) so
+            # a follower that missed the single progress broadcast — e.g.
+            # through a brief partition — still converges
+            self._idle_ticks += 1
+            if self._idle_ticks >= self._IDLE_REBCAST_TICKS:
+                self._idle_ticks = 0
+                for f in self.insync:
+                    self._send(f, "on_commit", epoch=self.epoch,
+                               commit_lsn=self.cmt, nbytes=96)
         self._arm_commit_timer()
+
+    _idle_ticks = 0
 
     def on_commit(self, epoch: int, commit_lsn: int) -> None:
         if self.role is not Role.FOLLOWER or epoch != self.epoch:
             return
+        before = self.cmt
         self._apply_committed(min(commit_lsn, self.lst))
-        self.node.wal.append(CommitMarker(self.rid, self.cmt), force=False)
+        if self.cmt > before:
+            # persist only actual progress; a duplicate broadcast must not
+            # re-append an identical marker
+            self.node.wal.append(CommitMarker(self.rid, self.cmt), force=False)
 
     # ===================================================== reads (§3, §5)
     def client_read(self, key: str, colname: str, consistent: bool,

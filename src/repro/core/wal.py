@@ -68,19 +68,31 @@ class WAL:
                 sk.discard(entry.lsn)
         self._buffer.append(_Pending(entry, force, cb))
         if force:
-            batch = self._buffer
-            self._buffer = []
-            nbytes = sum(self._entry_bytes(p.entry) for p in batch)
+            self.force()
 
-            def on_durable():
-                for p in batch:
-                    self.durable.append(p.entry)
-                    self.durable_bytes += self._entry_bytes(p.entry)
-                for p in batch:
-                    if p.cb is not None:
-                        p.cb()
+    def force(self, cb: Optional[Callable] = None) -> None:
+        """Force the buffered tail to disk with one device write; `cb()`
+        fires when every buffered entry (and everything forced before it —
+        the device is FIFO) is durable.  This is the leader-side batch
+        force: a batch is appended record-by-record with `force=False` and
+        covered by a single `force(cb)` at flush time.  An empty buffer
+        still issues a zero-byte barrier so `cb` orders after any force
+        already in flight."""
+        batch = self._buffer
+        self._buffer = []
+        nbytes = sum(self._entry_bytes(p.entry) for p in batch)
 
-            self.disk.force(nbytes, on_durable)
+        def on_durable():
+            for p in batch:
+                self.durable.append(p.entry)
+                self.durable_bytes += self._entry_bytes(p.entry)
+            for p in batch:
+                if p.cb is not None:
+                    p.cb()
+            if cb is not None:
+                cb()
+
+        self.disk.force(nbytes, on_durable)
 
     @staticmethod
     def _entry_bytes(entry: Entry) -> int:

@@ -20,7 +20,7 @@ from .generators import Op, OpKind, OpStream, WorkloadSpec
 from .metrics import LatencyHistogram, OpLog, WindowSummary
 from .scenario import FaultEvent, FaultSchedule, parse_schedule
 from .experiment import (ExperimentConfig, run_cassandra_workload,
-                         run_spinnaker_workload)
+                         run_spinnaker_saturation, run_spinnaker_workload)
 
 __all__ = [
     "CassandraAdapter",
@@ -39,5 +39,6 @@ __all__ = [
     "WorkloadSpec",
     "parse_schedule",
     "run_cassandra_workload",
+    "run_spinnaker_saturation",
     "run_spinnaker_workload",
 ]

@@ -34,6 +34,10 @@ class ExperimentConfig:
     disk: str = "ssd"                 # hdd | ssd | mem
     seed: int = 0
     commit_period: float = 0.05       # leader's periodic commit broadcast
+    # proposal/mutation batching (both systems, so comparisons stay fair)
+    batch: str = "adaptive"           # adaptive | off
+    batch_max_records: int = 32
+    batch_deadline: float = 0.5e-3
     # driver
     driver: str = "closed"            # closed | open
     n_clients: int = 16
@@ -45,12 +49,21 @@ class ExperimentConfig:
     preload_cap: int = 2000
 
 
-def build_spinnaker(cfg: ExperimentConfig):
+def build_spinnaker(cfg: ExperimentConfig, num_keys: Optional[int] = None):
+    """`num_keys` overrides the range-boundary pre-split: pass the
+    workload's keyspace size to spread load across all cohorts (with the
+    default 100k boundaries a small-keyspace workload lands entirely in
+    range 0 and measures one cohort, not the cluster)."""
     sim = Simulator(seed=cfg.seed)
     ccfg = ClusterConfig(
         n_nodes=cfg.n_nodes,
-        node=NodeConfig(replica=ReplicaConfig(commit_period=cfg.commit_period),
+        node=NodeConfig(replica=ReplicaConfig(
+            commit_period=cfg.commit_period, batch=cfg.batch,
+            batch_max_records=cfg.batch_max_records,
+            batch_deadline=cfg.batch_deadline),
                         disk=_DISKS[cfg.disk]()))
+    if num_keys is not None:
+        ccfg.num_keys = num_keys
     cluster = SpinnakerCluster(sim, ccfg)
     cluster.start()
     cluster.settle()
@@ -60,7 +73,10 @@ def build_spinnaker(cfg: ExperimentConfig):
 def build_cassandra(cfg: ExperimentConfig):
     sim = Simulator(seed=cfg.seed)
     cluster = CassandraCluster(
-        sim, CassandraConfig(n_nodes=cfg.n_nodes, disk=_DISKS[cfg.disk]()))
+        sim, CassandraConfig(n_nodes=cfg.n_nodes, disk=_DISKS[cfg.disk](),
+                             batch=cfg.batch,
+                             batch_max_records=cfg.batch_max_records,
+                             batch_deadline=cfg.batch_deadline))
     return sim, cluster
 
 
@@ -146,6 +162,63 @@ def run_spinnaker_workload(spec: WorkloadSpec,
     log, t_start = _drive(sim, adapter, spec, cfg, schedule, cluster, n_pre)
     read_kind = "read" if consistent_reads else "timeline_read"
     return _result(log, cfg, read_kind, "write", schedule, t_start)
+
+
+def run_spinnaker_saturation(spec: WorkloadSpec,
+                             cfg: Optional[ExperimentConfig] = None,
+                             rates: Optional[list[float]] = None,
+                             dwell: float = 2.0,
+                             settle: float = 0.3) -> dict:
+    """Open-loop rate-ramp on ONE cluster (§C saturation methodology).
+
+    For each offered rate, Poisson arrivals are driven for `settle+dwell`
+    sim-seconds (the settle prefix at the new rate is not recorded) and the
+    achieved write throughput + latency percentiles are sampled.  The
+    saturation knee is where achieved throughput stops tracking the offered
+    rate and the latency percentiles collapse; comparing curves with
+    `cfg.batch` "off" vs "adaptive" isolates what proposal batching buys.
+    """
+    cfg = cfg or ExperimentConfig()
+    rates = rates or [1000, 2000, 5000, 10000, 20000, 40000]
+    # align range boundaries with the workload keyspace so the ramp loads
+    # every cohort, not just range 0
+    sim, cluster = build_spinnaker(cfg, num_keys=spec.num_keys)
+    loader = cluster.make_client("preload")
+    n_pre = min(cfg.preload_keys or spec.num_keys, cfg.preload_cap,
+                spec.num_keys)
+    _preload(sim, lambda k, cb: loader.put(k, "c", b"x" * spec.value_size,
+                                           cb), n_pre)
+    adapter = SpinnakerAdapter(cluster.make_client("bench"), consistent=True)
+    stream = OpStream(spec, seed=cfg.seed + 1)
+    stream.insert_horizon = max(1, n_pre)
+    points = []
+    for rate in rates:
+        log = OpLog()
+        drv = OpenLoopDriver(sim, adapter, stream, log, rate=rate)
+        drv.run(dwell, warmup=settle)
+        w = log.summary("write", duration=dwell)
+        points.append({
+            "offered_rate": rate,
+            "achieved_tput": w["count"] / dwell,
+            "write_p50_ms": w["p50_ms"],
+            "write_p99_ms": w["p99_ms"],
+            "errors": w["errors"],
+            "shed": drv.shed,
+        })
+    # leader-side batching telemetry, aggregated over the whole ramp
+    flushes = records = 0
+    for node in cluster.nodes.values():
+        for rep in node.replicas.values():
+            flushes += rep.batches_flushed
+            records += rep.batched_records
+    return {
+        "batch": cfg.batch,
+        "disk": cfg.disk,
+        "points": points,
+        "peak_write_tput": max((p["achieved_tput"] for p in points),
+                               default=0.0),
+        "mean_batch_records": records / flushes if flushes else 0.0,
+    }
 
 
 def run_cassandra_workload(spec: WorkloadSpec,

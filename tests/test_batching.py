@@ -1,0 +1,281 @@
+"""Batched replication protocol tests: adaptive leader-side proposal
+batching, cumulative acks, idle-commit suppression, and batch behaviour
+across failover (the perf_opt PR's correctness surface)."""
+
+import pytest
+
+from repro.core import (ClusterConfig, ErrorCode, NodeConfig, ReplicaConfig,
+                        Simulator, SpinnakerCluster, key_of)
+from repro.core.replica import Role
+from repro.core.sim import DiskParams
+from repro.core.types import CommitMarker
+
+
+def make_cluster(n=5, seed=0, batch="adaptive", commit_period=0.05,
+                 disk="ssd", **replica_kw):
+    sim = Simulator(seed=seed)
+    cfg = ClusterConfig(
+        n_nodes=n,
+        node=NodeConfig(
+            replica=ReplicaConfig(commit_period=commit_period, batch=batch,
+                                  **replica_kw),
+            disk=getattr(DiskParams, disk)()))
+    cluster = SpinnakerCluster(sim, cfg)
+    cluster.start()
+    cluster.settle()
+    return sim, cluster
+
+
+def burst(sim, c, key, n, prefix="v"):
+    results = []
+    for i in range(n):
+        c.put(key, "c", f"{prefix}{i}".encode(), lambda r: results.append(r))
+    sim.run_for(10.0)
+    return results
+
+
+# ---------------------------------------------------------------------------
+# batch formation and equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_pipelined_burst_forms_batches_and_serializes():
+    sim, cluster = make_cluster(batch="adaptive")
+    c = cluster.make_client()
+    key = key_of(5)
+    results = burst(sim, c, key, 100)
+    assert len(results) == 100 and all(r.ok for r in results)
+    assert sorted(r.version for r in results) == list(range(1, 101))
+    rep = cluster.leader_replica(cluster.range_of(key))
+    # batching actually engaged: fewer flushes than records
+    assert rep.batches_flushed < rep.batched_records
+    assert rep.batched_records >= 100
+
+
+def test_batch_off_flushes_per_record():
+    sim, cluster = make_cluster(batch="off")
+    c = cluster.make_client()
+    key = key_of(5)
+    results = burst(sim, c, key, 30)
+    assert all(r.ok for r in results)
+    rep = cluster.leader_replica(cluster.range_of(key))
+    assert rep.batches_flushed == rep.batched_records
+
+
+def test_adaptive_and_off_reach_identical_state():
+    finals = {}
+    for mode in ("adaptive", "off"):
+        sim, cluster = make_cluster(batch=mode, seed=7)
+        c = cluster.make_client()
+        for i in range(40):
+            c.put(key_of(i % 8), "c", f"m{i}".encode(), lambda r: None)
+        sim.run_for(10.0)
+        finals[mode] = {
+            i: (c.sync_get(key_of(i), "c").value,
+                c.sync_get(key_of(i), "c").version)
+            for i in range(8)
+        }
+    assert finals["adaptive"] == finals["off"]
+
+
+def test_cumulative_ack_supersedes_per_record_acks():
+    """A follower acks once per batch with its durability watermark, so
+    under a pipelined burst it sends far fewer acks than records."""
+    sim, cluster = make_cluster(batch="adaptive")
+    c = cluster.make_client()
+    key = key_of(5)
+    rid = cluster.range_of(key)
+    results = burst(sim, c, key, 100)
+    assert all(r.ok for r in results)
+    leader = cluster.leader_replica(rid)
+    followers = [cluster.nodes[m].replicas[rid] for m in cluster.cohort(rid)
+                 if cluster.nodes[m].replicas[rid].role is Role.FOLLOWER]
+    assert followers
+    for f in followers:
+        assert f.acks_sent < 100          # cumulative, not per record
+        # the watermark converged to everything the leader proposed
+        assert f._follower_forced == leader.lst
+
+
+# ---------------------------------------------------------------------------
+# conditional writes inside one batch (satellite: proposed_version checks)
+# ---------------------------------------------------------------------------
+
+
+def test_pipelined_conditionals_same_batch_serialize_via_proposed_version():
+    """put + conditional_put pipelined back-to-back land in one batch; the
+    conditional must validate against the *proposed* (not yet committed)
+    version and succeed."""
+    sim, cluster = make_cluster(batch="adaptive")
+    c = cluster.make_client()
+    key = key_of(5)
+    results = []
+    c.put(key, "c", b"base", lambda r: results.append(("put", r)))
+    # expected_version=1 only holds if the pipelined put's proposed version
+    # is visible to the conditional check
+    c.conditional_put(key, "c", b"cas", 1, lambda r: results.append(("cas", r)))
+    sim.run_for(5.0)
+    assert dict(results)["put"].ok
+    assert dict(results)["cas"].ok and dict(results)["cas"].version == 2
+    got = c.sync_get(key, "c")
+    assert got.value == b"cas" and got.version == 2
+
+
+def test_conditional_mismatch_in_batch_rejected_without_consuming_lsn():
+    sim, cluster = make_cluster(batch="adaptive")
+    c = cluster.make_client()
+    key = key_of(5)
+    rid = cluster.range_of(key)
+    assert c.sync_put(key, "c", b"v1").version == 1
+    leader = cluster.leader_replica(rid)
+    lst_before = leader.lst
+    seq_before = leader._next_seq
+    results = []
+    # two CAS's expecting version 1, pipelined: only the first can win; the
+    # loser is rejected synchronously, consuming no LSN
+    c.conditional_put(key, "c", b"a", 1, lambda r: results.append(r))
+    c.conditional_put(key, "c", b"b", 1, lambda r: results.append(r))
+    sim.run_for(5.0)
+    codes = sorted((r.code for r in results), key=lambda e: e.value)
+    assert codes == [ErrorCode.OK, ErrorCode.VERSION_MISMATCH]
+    assert leader._next_seq == seq_before + 1       # exactly one LSN consumed
+    assert leader.lst == lst_before + 1
+    got = c.sync_get(key, "c")
+    assert got.value == b"a" and got.version == 2
+
+
+# ---------------------------------------------------------------------------
+# idle-commit suppression (satellites: _commit_tick / on_commit)
+# ---------------------------------------------------------------------------
+
+
+def test_commit_tick_silent_while_cmt_idle():
+    sim, cluster = make_cluster(commit_period=0.05)
+    c = cluster.make_client()
+    key = key_of(5)
+    rid = cluster.range_of(key)
+    assert c.sync_put(key, "c", b"x").ok
+    sim.run_for(1.0)        # let the post-write broadcast round happen
+    leader = cluster.leader_replica(rid)
+    markers_before = sum(
+        1 for e in leader.node.wal.durable + [p.entry for p in
+                                              leader.node.wal._buffer]
+        if isinstance(e, CommitMarker) and e.range_id == rid)
+    appends_before = leader.node.wal.appends
+    msgs_before = cluster.net.msgs_sent
+    sim.run_for(5.0)        # 100 commit periods with zero writes
+    markers_after = sum(
+        1 for e in leader.node.wal.durable + [p.entry for p in
+                                              leader.node.wal._buffer]
+        if isinstance(e, CommitMarker) and e.range_id == rid)
+    assert markers_after == markers_before, "idle range appended markers"
+    assert leader.node.wal.appends == appends_before
+    # the only steady-state traffic left is heartbeats, not on_commit spam:
+    # 5s of 0.05s commit periods over 5 ranges would be >1000 messages
+    assert cluster.net.msgs_sent - msgs_before < 300
+
+
+def test_follower_skips_redundant_commit_marker():
+    sim, cluster = make_cluster(commit_period=0.05)
+    c = cluster.make_client()
+    key = key_of(5)
+    rid = cluster.range_of(key)
+    assert c.sync_put(key, "c", b"x").ok
+    sim.run_for(1.0)
+    follower = next(cluster.nodes[m].replicas[rid]
+                    for m in cluster.cohort(rid)
+                    if cluster.nodes[m].replicas[rid].role is Role.FOLLOWER)
+    appends_before = follower.node.wal.appends
+    # duplicate broadcast of the same commit LSN must not re-append
+    follower.on_commit(follower.epoch, follower.cmt)
+    follower.on_commit(follower.epoch, follower.cmt)
+    assert follower.node.wal.appends == appends_before
+
+
+def test_idle_keepalive_heals_missed_commit_broadcast():
+    """A follower that holds a committed record but missed the (single)
+    progress broadcast through a brief partition must still converge via
+    the slow idle keepalive — idle-skip must not mean stale-forever."""
+    sim, cluster = make_cluster(commit_period=0.05)
+    c = cluster.make_client()
+    key = key_of(5)
+    rid = cluster.range_of(key)
+    follower_id = next(m for m in cluster.cohort(rid)
+                       if cluster.nodes[m].replicas[rid].role is Role.FOLLOWER)
+    # commit a write (followers hold + acked the record), then cut the
+    # follower off before the commit broadcast fires
+    assert c.sync_put(key, "c", b"x").ok
+    others = {n for n in range(5) if n != follower_id}
+    cluster.partition({follower_id}, others)
+    sim.run_for(0.3)            # progress broadcast dropped on the floor
+    cluster.heal()
+    sim.run_for(3.0)            # > _IDLE_REBCAST_TICKS * commit_period
+    rep = cluster.nodes[follower_id].replicas[rid]
+    cell = rep.store.get(key, "c")
+    assert cell is not None and cell.value == b"x", \
+        "follower never learned the commit despite the idle keepalive"
+
+
+# ---------------------------------------------------------------------------
+# failover with batches in flight (Fig. 9 correctness)
+# ---------------------------------------------------------------------------
+
+
+def test_leader_kill_with_inflight_batches_no_acked_write_lost():
+    sim, cluster = make_cluster(batch="adaptive", seed=11)
+    c = cluster.make_client()
+    key = key_of(5)
+    rid = cluster.range_of(key)
+    old_leader = cluster.leader_replica(rid)
+    acked = []
+    for i in range(60):
+        c.put(key, "c", f"w{i}".encode(), lambda r, i=i: acked.append((i, r)))
+    sim.run_for(0.02)   # mid-burst: batches staged/in flight
+    cluster.crash_node(old_leader.node.node_id)
+    sim.run_for(20.0)
+    new_leader = cluster.leader_replica(rid)
+    assert new_leader is not None
+    assert new_leader.node.node_id != old_leader.node.node_id
+    committed = [i for i, r in acked if r.ok]
+    assert committed, "no write survived the failover burst"
+    got = c.sync_get(key, "c", consistent=True)
+    assert got.ok
+    # every acked write is durable: version count matches acked count and
+    # the latest acked value (or a later one the new regime re-committed)
+    # is visible
+    assert got.version >= len(committed)
+    # monotonic versions: re-proposed batch must not double-apply
+    assert sorted(r.version for _, r in acked if r.ok) == \
+        sorted(set(r.version for _, r in acked if r.ok))
+
+
+def test_crash_drops_staged_batch_cleanly():
+    """Crash a leader with a record still staged in the accumulator (the
+    deadline flush never fired): the staged batch dies with the leader's
+    volatile state and the cohort keeps a single consistent history."""
+    from repro.core.types import OpType, WriteOp
+
+    sim, cluster = make_cluster(batch="adaptive", seed=3,
+                                batch_deadline=50e-3)
+    c = cluster.make_client()
+    key = key_of(5)
+    rid = cluster.range_of(key)
+    leader = cluster.leader_replica(rid)
+    assert c.sync_put(key, "c", b"committed").ok
+    # stage a record while the CPU looks queued so it accumulates instead
+    # of flushing immediately (direct call: the point is protocol state)
+    leader.node.cpu.busy_until = sim.now + 1.0      # simulate queueing
+    replies = []
+    leader.client_write(WriteOp(OpType.PUT, key, "c", b"staged"),
+                        lambda r: replies.append(r))
+    assert len(leader._batch) == 1, "record should be staged, not flushed"
+    # crash before the deadline flush: the batch dies with the leader
+    cluster.crash_node(leader.node.node_id)
+    sim.run_for(20.0)
+    new_leader = cluster.leader_replica(rid)
+    assert new_leader is not None
+    assert not any(r.ok for r in replies), "staged write must not ack"
+    got = c.sync_get(key, "c", consistent=True)
+    assert got.ok and got.value == b"committed" and got.version == 1
+    res = c.sync_put(key, "c", b"after")
+    assert res.ok and res.version == 2

@@ -87,6 +87,72 @@ def test_logical_truncation_and_unskip_on_reappend():
     assert make_lsn(1, 3) not in [r.lsn for r in records]
 
 
+def test_batch_riders_lost_on_crash_before_force():
+    """A leader batch is appended record-by-record with force=False; if the
+    node crashes before the covering force, EVERY rider is lost."""
+    sim, wal = make_wal()
+    wal.append(rec(0, make_lsn(1, 1)), force=True)
+    sim.run_for(1.0)
+    for s in (2, 3, 4):
+        wal.append(rec(0, make_lsn(1, s)), force=False)   # staged batch
+    wal.crash()
+    records, _ = wal.recover_range(0)
+    assert [r.lsn for r in records] == [make_lsn(1, 1)]
+
+
+def test_batch_force_makes_all_riders_durable_atomically():
+    sim, wal = make_wal()
+    done = []
+    for s in (1, 2, 3):
+        wal.append(rec(0, make_lsn(1, s)), force=False)
+    wal.force(cb=lambda: done.append(1))
+    # nothing durable until the single device force completes ...
+    assert not done and not wal.durable
+    sim.run_for(1.0)
+    # ... then the whole batch is durable at once, with ONE device force
+    assert done
+    records, _ = wal.recover_range(0)
+    assert [r.lsn for r in records] == [make_lsn(1, s) for s in (1, 2, 3)]
+    assert wal.disk.forces == 1
+
+
+def test_batch_crash_mid_force_then_reappend_supersedes_truncation():
+    """Crash with a batch force in flight: riders are lost, the force cb
+    never fires.  After recovery the surviving regime logically truncates
+    the window, and a catch-up re-append of one of those LSNs supersedes
+    the skip (the fresh durable copy must replay)."""
+    sim, wal = make_wal()
+    wal.append(rec(0, make_lsn(1, 1)), force=True)
+    sim.run_for(1.0)
+    fired = []
+    for s in (2, 3):
+        wal.append(rec(0, make_lsn(1, s)), force=False)
+    wal.force(cb=lambda: fired.append(1))
+    wal.crash()                      # force in flight: riders + cb die
+    sim.run_for(1.0)
+    assert not fired
+    records, _ = wal.recover_range(0)
+    assert [r.lsn for r in records] == [make_lsn(1, 1)]
+    # new regime truncates the ambiguous window ...
+    wal.logically_truncate(0, [make_lsn(1, 2), make_lsn(1, 3)])
+    # ... then catch-up re-sends 1.2 and it must be replayable again
+    wal.append(rec(0, make_lsn(1, 2)), force=True)
+    sim.run_for(1.0)
+    records, _ = wal.recover_range(0)
+    assert make_lsn(1, 2) in [r.lsn for r in records]
+    assert make_lsn(1, 3) not in [r.lsn for r in records]
+
+
+def test_empty_force_is_a_barrier_after_prior_force():
+    """force() on an empty buffer still orders after in-flight forces."""
+    sim, wal = make_wal()
+    order = []
+    wal.append(rec(0, make_lsn(1, 1)), force=True, cb=lambda: order.append("a"))
+    wal.force(cb=lambda: order.append("barrier"))
+    sim.run_for(1.0)
+    assert order == ["a", "barrier"]
+
+
 def test_gc_drops_flushed_segments_and_catchup_falls_back():
     sim, wal = make_wal(segment_bytes=500)
     for s in range(1, 40):
