@@ -1,6 +1,8 @@
 #!/usr/bin/env bash
 # Pre-merge gate: a short workload scenario against a 5-node cluster
-# (leader kill included), a perf-regression check against the committed
+# (leader kill included), a fast rebalance gate (a capped zipfian run with
+# one forced live split must keep write availability >= 99% and end with
+# >= 2 non-empty ranges), a perf-regression check against the committed
 # BENCH_spinnaker.json (fig8 write throughput + a capped saturation
 # quick-sweep must not regress >10% / lose the batching edge), plus the
 # tier-1 test suite.
@@ -26,6 +28,32 @@ assert max(w["throughput"] for w in post) > 0, "writes never resumed"
 assert r["reads"]["count"] > 0 and r["writes"]["count"] > 0
 print(f"ok: {r['total_ops']} ops, reads p99={r['reads']['p99_ms']:.2f}ms, "
       f"writes resumed after leader kill")
+EOF
+
+echo "== rebalance gate: forced live split under capped zipfian load =="
+python - <<'EOF'
+import warnings
+warnings.filterwarnings("ignore")
+from repro.workload import (ExperimentConfig, WorkloadSpec,
+                            run_spinnaker_rebalance)
+
+spec = WorkloadSpec(num_keys=300, key_dist="zipfian", zipf_theta=0.99,
+                    read_frac=0.2, write_frac=0.8, rmw_frac=0, cond_frac=0,
+                    value_size=512)
+cfg = ExperimentConfig(n_nodes=5, disk="mem", driver="open", open_rate=1000,
+                       warmup=0.5, duration=5.0, window=0.5, preload_cap=200)
+r = run_spinnaker_rebalance(spec, cfg, kill_leader=False)
+rb = r["rebalance"]
+assert not rb["lost_acked_writes"], rb["lost_acked_writes"]
+assert rb["write_availability"] >= 0.99, rb["write_availability"]
+assert rb["n_ranges_end"] >= rb["n_ranges_start"] + 1, rb["n_ranges_end"]
+assert rb["all_ranges_serving_writes"], rb["serving"]
+# >= 2 non-empty ranges: the split boundary has data on both sides
+assert rb["non_empty_ranges"] >= 2, rb["non_empty_ranges"]
+assert rb["acked_writes_ledgered"] > 0
+print(f"ok: ranges {rb['n_ranges_start']} -> {rb['n_ranges_end']}, "
+      f"write availability {rb['write_availability']:.4f}, "
+      f"{rb['acked_writes_ledgered']} acked writes audited, 0 lost")
 EOF
 
 echo "== perf-regression gate vs committed BENCH_spinnaker.json =="

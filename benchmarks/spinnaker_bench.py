@@ -15,8 +15,14 @@ Scenarios:
   served by the surviving replicas throughout);
 - `saturation` — open-loop write-only rate ramps per disk class (§C
   methodology): batch=off vs adaptive proposal-batching curves, locating
-  the saturation knee each way.  This is the measurement surface future
-  perf PRs regress against;
+  the saturation knee each way, plus an overload-tail check (post-knee
+  throughput must not collapse — client retry backoff's job).  This is
+  the measurement surface future perf PRs regress against;
+- `rebalance` — elastic range management under zipfian write load: the
+  hottest range live-splits, one replica migrates, and the range leader
+  is killed mid-migration.  Gates: no lost acknowledged writes, writes
+  continuing on both child ranges, the migration resolving unaided, and
+  write availability >= 99% through it all;
 - `figs8-10`— figs 8, 9, 10;
 - `all`     — everything above in one JSON artifact;
 - `regress` — re-measure fig8 write throughput and a capped saturation
@@ -40,7 +46,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.workload import (ExperimentConfig, WorkloadSpec,  # noqa: E402
-                            run_cassandra_workload,
+                            run_cassandra_workload, run_spinnaker_rebalance,
                             run_spinnaker_saturation, run_spinnaker_workload)
 
 LEADER_KILL = """
@@ -106,11 +112,18 @@ SAT_RATES = [2000, 5000, 10000, 20000, 30000, 40000, 50000, 60000, 70000]
 
 def check_saturation(off: dict, adaptive: dict) -> dict:
     """Acceptance surface: adaptive batching must buy >= 25% peak write
-    throughput at the knee without costing > 10% p50 at light load."""
+    throughput at the knee without costing > 10% p50 at light load, and
+    the overload tail (throughput at the highest offered rate, past the
+    knee) must hold >= 60% of the peak — retry backoff keeps overload
+    from collapsing into congestive retry storms."""
     p50_off = off["points"][0]["write_p50_ms"]
     p50_ad = adaptive["points"][0]["write_p50_ms"]
     gain = adaptive["peak_write_tput"] / max(off["peak_write_tput"], 1e-9)
     ratio = p50_ad / max(p50_off, 1e-9)
+    tail_off = off["points"][-1]["achieved_tput"] / \
+        max(off["peak_write_tput"], 1e-9)
+    tail_ad = adaptive["points"][-1]["achieved_tput"] / \
+        max(adaptive["peak_write_tput"], 1e-9)
     return {
         "peak_write_tput_off": off["peak_write_tput"],
         "peak_write_tput_adaptive": adaptive["peak_write_tput"],
@@ -119,7 +132,11 @@ def check_saturation(off: dict, adaptive: dict) -> dict:
         "light_load_p50_adaptive_ms": p50_ad,
         "light_load_p50_ratio": ratio,
         "mean_batch_records": adaptive["mean_batch_records"],
-        "ok": bool(gain >= 1.25 and ratio <= 1.10),
+        "overload_tail_off": tail_off,
+        "overload_tail_adaptive": tail_ad,
+        "tail_ok": bool(tail_off >= 0.6 and tail_ad >= 0.6),
+        "ok": bool(gain >= 1.25 and ratio <= 1.10
+                   and tail_off >= 0.6 and tail_ad >= 0.6),
     }
 
 
@@ -188,6 +205,56 @@ def run_regression_gate(committed_path: str) -> int:
     return rc
 
 
+def rebalance_spec(quick: bool) -> WorkloadSpec:
+    """Write-heavy zipfian mix: the shape that concentrates load on one
+    range and makes it worth splitting."""
+    return WorkloadSpec(
+        num_keys=1000 if quick else 5000,
+        key_dist="zipfian", zipf_theta=0.99,
+        read_frac=0.2, write_frac=0.8, rmw_frac=0.0, cond_frac=0.0,
+        value_size=1024)
+
+
+def run_rebalance(quick: bool) -> dict:
+    cfg = ExperimentConfig(
+        n_nodes=5, disk="ssd", seed=2, driver="open",
+        open_rate=1500 if quick else 3000,
+        warmup=0.5 if quick else 1.0,
+        duration=8.0 if quick else 20.0,
+        window=0.5, preload_cap=500 if quick else 2000)
+    print("rebalance: live split + migration + leader kill under zipfian "
+          "write load ...", flush=True)
+    r = run_spinnaker_rebalance(rebalance_spec(quick), cfg, kill_leader=True)
+    rb = r["rebalance"]
+    wins = [w for w in r["timeline"]["write"] if w["throughput"] > 0]
+    rb["min_window_write_tput"] = min(
+        (w["throughput"] for w in r["timeline"]["write"]), default=0.0)
+    rb["write_p99_ms"] = r["writes"]["p99_ms"]
+    rb["nonzero_write_windows"] = len(wins)
+    rb["total_write_windows"] = len(r["timeline"]["write"])
+    print(f"  ranges {rb['n_ranges_start']} -> {rb['n_ranges_end']}, "
+          f"availability {rb['write_availability']:.4f}, "
+          f"write p99 {rb['write_p99_ms']:.1f}ms, "
+          f"lost acked writes: {len(rb['lost_acked_writes'])}", flush=True)
+    return r
+
+
+def check_rebalance(r: dict) -> dict:
+    rb = r["rebalance"]
+    return {
+        "no_lost_acked_writes": not rb["lost_acked_writes"],
+        "split_completed": rb["n_ranges_end"] > rb["n_ranges_start"],
+        "all_ranges_serving_writes": rb["all_ranges_serving_writes"],
+        "migration_resolved": not rb["unresolved_migrations"],
+        "availability_ok": rb["write_availability"] >= 0.99,
+        "ok": bool(not rb["lost_acked_writes"]
+                   and rb["n_ranges_end"] > rb["n_ranges_start"]
+                   and rb["all_ranges_serving_writes"]
+                   and not rb["unresolved_migrations"]
+                   and rb["write_availability"] >= 0.99),
+    }
+
+
 def run_failover(quick: bool, consistent_reads: bool) -> dict:
     cfg = base_cfg(quick, seed=1)
     cfg.duration = 8.0 if quick else 30.0
@@ -240,7 +307,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scenario", default="all",
                     choices=["fig8", "fig9", "fig10", "saturation",
-                             "figs8-10", "all", "regress"])
+                             "rebalance", "figs8-10", "all", "regress"])
     ap.add_argument("--quick", action="store_true",
                     help="short runs (CI / smoke mode)")
     ap.add_argument("--out", default="BENCH_spinnaker.json")
@@ -263,6 +330,10 @@ def main(argv=None) -> int:
         rec["fig10"] = run_failover(args.quick, consistent_reads=False)
     if args.scenario in ("saturation", "all"):
         rec["saturation"] = run_saturation(args.quick)
+    if args.scenario in ("rebalance", "all"):
+        rec["rebalance"] = run_rebalance(args.quick)
+        rec["rebalance_check"] = check_rebalance(rec["rebalance"])
+        print(f"  {rec['rebalance_check']}", flush=True)
 
     Path(args.out).write_text(json.dumps(rec, indent=2))
     print(f"wrote {args.out}")
@@ -277,6 +348,14 @@ def main(argv=None) -> int:
             print(f"FAIL: {disk} saturation check (>=25% peak gain, <=10% "
                   "light-load p50 cost) did not hold")
             rc = 1
+        if not curves["check"].get("tail_ok", True):
+            print(f"FAIL: {disk} overload tail collapsed below 60% of the "
+                  "knee (retry backoff regression)")
+            rc = 1
+    if "rebalance_check" in rec and not rec["rebalance_check"]["ok"]:
+        print("FAIL: rebalance scenario gate "
+              f"{rec['rebalance_check']}")
+        rc = 1
     return rc
 
 

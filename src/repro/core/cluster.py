@@ -1,5 +1,11 @@
 """Cluster assembly (Fig. 2), range partitioning with chained declustering
 (§4), and the client library (routing, retries, consistency levels).
+
+Ranges are *elastic* (core/ranges.py): the table built here is only the
+initial pre-split.  Live splits and replica migrations rewrite the
+registered metadata; the cluster mirrors it into `ranges`/`members` as
+ground truth for tests and the balancer, while clients route through
+their own RangeTable cache and chase WRONG_RANGE redirects.
 """
 
 from __future__ import annotations
@@ -8,8 +14,10 @@ import bisect
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
+from . import ranges as ranges_mod
 from .coordination import Coordination, NoNode
 from .node import NodeConfig, SpinnakerNode
+from .ranges import BalancerConfig, RangeBalancer, RangeTable
 from .sim import LatencyStats, NetParams, Network, Simulator
 from .types import ErrorCode, KeyRange, OpType, Result, WriteOp
 
@@ -42,29 +50,106 @@ class SpinnakerCluster:
         n = self.cfg.n_nodes
         if n < 3:
             raise ValueError("Spinnaker needs >= 3 nodes for 3-way replication")
-        # range boundaries: uniform pre-split of the key space
-        self.boundaries = [key_of(i * self.cfg.num_keys // n) for i in range(n)]
-        self.ranges: list[KeyRange] = []
+        self.n_base_ranges = n
+        # initial range table: uniform pre-split of the key space, one base
+        # range per node, chained declustering cohort(r) = {r, r+1, r+2}
+        boundaries = [key_of(i * self.cfg.num_keys // n) for i in range(n)]
+        self.ranges: dict[int, KeyRange] = {}
+        self.members: dict[int, tuple[int, ...]] = {}
         for i in range(n):
-            hi = self.boundaries[i + 1] if i + 1 < n else ""
-            self.ranges.append(KeyRange(range_id=i, lo=self.boundaries[i], hi=hi))
+            hi = boundaries[i + 1] if i + 1 < n else ""
+            self.ranges[i] = KeyRange(range_id=i, lo=boundaries[i], hi=hi)
+            self.members[i] = tuple(sorted((i, (i + 1) % n, (i + 2) % n)))
+        self._rebuild_routing()
+        # register the table in coordination: clients route from these
+        # znodes, and splits/migrations rewrite them
+        self.zk.create(ranges_mod.VERSION_PATH, data=0)
+        self.zk.create(ranges_mod.NEXT_RID_PATH, data=n - 1)
+        for rid, kr in self.ranges.items():
+            ranges_mod.set_range_meta(self.zk, rid, kr.lo, kr.hi,
+                                      self.members[rid])
 
         for i in range(n):
             self.nodes[i] = SpinnakerNode(self, i, self.cfg.node)
-        # chained declustering: cohort(r) = {r, r+1, r+2}
-        for r in range(n):
-            members = self.cohort(r)
-            for m in members:
-                peers = tuple(x for x in members if x != m)
-                self.nodes[m].add_range(self.ranges[r], peers)  # type: ignore[arg-type]
+        for rid, kr in self.ranges.items():
+            for m in self.members[rid]:
+                peers = tuple(x for x in self.members[rid] if x != m)
+                self.nodes[m].add_range(kr, peers)
+        self.balancer: Optional[RangeBalancer] = None
 
-    def cohort(self, rid: int) -> tuple[int, int, int]:
-        n = self.cfg.n_nodes
-        return (rid, (rid + 1) % n, (rid + 2) % n)
+    def cohort(self, rid: int) -> tuple[int, ...]:
+        return self.members[rid]
+
+    def _rebuild_routing(self) -> None:
+        table = sorted((kr.lo, rid) for rid, kr in self.ranges.items())
+        self._route_los = [lo for lo, _ in table]
+        self._route_rids = [rid for _, rid in table]
 
     def range_of(self, key: str) -> int:
-        idx = bisect.bisect_right(self.boundaries, key) - 1
-        return max(0, idx)
+        """Ground-truth routing oracle (tests, preload).  Live clients use
+        their own RangeTable cache + WRONG_RANGE redirects instead."""
+        idx = bisect.bisect_right(self._route_los, key) - 1
+        return self._route_rids[max(0, idx)]
+
+    def on_range_table_changed(self) -> None:
+        """Mirror registered range metadata into cluster ground truth and
+        reconcile live nodes (create replicas they just joined — migration
+        destinations, split children — retire ones they left).  Idempotent;
+        invoked by replicas whenever they rewrite `/ranges/*` metadata."""
+        rmap = ranges_mod.load_range_map(self.zk)
+        if not rmap:
+            return
+        self.ranges = {rid: KeyRange(rid, lo, hi)
+                       for rid, (lo, hi, _m) in rmap.items()}
+        self.members = {rid: tuple(sorted(m))
+                        for rid, (_lo, _hi, m) in rmap.items()}
+        self._rebuild_routing()
+        for node in self.nodes.values():
+            if not node.up:
+                continue   # down nodes reconcile at boot
+            for rid, (_lo, _hi, members) in rmap.items():
+                if node.node_id in members:
+                    node.ensure_replica(rid)
+                elif rid in node.replicas:
+                    node.retire_replica(rid)
+
+    # -- range administration (split / migrate / rebalance) --------------------
+    def admin_split(self, rid: int, split_key: Optional[str] = None) -> bool:
+        """Propose a live split of `rid` (at its median key by default)."""
+        rep = self.leader_replica(rid)
+        return rep.propose_split(split_key) if rep is not None else False
+
+    def admin_move(self, rid: int, src: Optional[int] = None,
+                   dst: Optional[int] = None) -> bool:
+        """Migrate one replica of `rid` from `src` to `dst`.  Defaults:
+        src = first follower member, dst = first up non-member node."""
+        rep = self.leader_replica(rid)
+        if rep is None:
+            return False
+        members = self.members.get(rid, ())
+        if src is None:
+            followers = [m for m in members if m != rep.node.node_id]
+            src = followers[0] if followers else None
+        if dst is None:
+            cands = [i for i, node in sorted(self.nodes.items())
+                     if node.up and i not in members]
+            dst = cands[0] if cands else None
+        if src is None or dst is None:
+            return False
+        return rep.start_migration(src, dst)
+
+    def set_autobalance(self, on: bool,
+                        cfg: Optional[BalancerConfig] = None) -> None:
+        if on:
+            if self.balancer is not None and cfg is not None \
+                    and self.balancer.cfg is not cfg:
+                self.balancer.stop()     # never leave two tickers running
+                self.balancer = None
+            if self.balancer is None:
+                self.balancer = RangeBalancer(self, cfg)
+            self.balancer.start()
+        elif self.balancer is not None:
+            self.balancer.stop()
 
     def start(self) -> None:
         for node in self.nodes.values():
@@ -74,23 +159,24 @@ class SpinnakerCluster:
         """Drive the sim until every cohort has an open leader (test helper)."""
         deadline = self.sim.now + timeout
         while self.sim.now < deadline:
-            if all(self.leader_replica(r) is not None for r in range(self.cfg.n_nodes)):
+            if all(self.leader_replica(r) is not None
+                   for r in list(self.ranges)):
                 return
             before = self.sim.now
             self.sim.run(until=min(deadline, before + 0.05))
             if not self.sim._heap and self.sim.now >= deadline:
                 break
-        leaders = [self.leader_replica(r) for r in range(self.cfg.n_nodes)]
-        missing = [r for r, l in enumerate(leaders) if l is None]
+        missing = [r for r in sorted(self.ranges)
+                   if self.leader_replica(r) is None]
         if missing:
             raise RuntimeError(f"cohorts without open leader: {missing}")
 
     def leader_replica(self, rid: int):
         from .replica import Role
-        for m in self.cohort(rid):
-            rep = self.nodes[m].replicas[rid]
-            if rep.role is Role.LEADER and rep.open_for_writes \
-                    and self.nodes[m].has_session():
+        for m in self.members.get(rid, ()):
+            rep = self.nodes[m].replicas.get(rid)
+            if rep is not None and rep.role is Role.LEADER \
+                    and rep.open_for_writes and self.nodes[m].has_session():
                 return rep
         return None
 
@@ -121,10 +207,18 @@ class SpinnakerCluster:
 
 class Client:
     """Closed-loop client: routes ops to cohort leaders (strong) or round-
-    robin replicas (timeline), retries on NOT_LEADER/UNAVAILABLE."""
+    robin replicas (timeline), retries on NOT_LEADER/UNAVAILABLE with
+    capped exponential backoff, and re-routes on WRONG_RANGE redirects.
+
+    Routing is dynamic: the range table is cached from the coordination
+    metadata (`core/ranges.py`), invalidated by a data-change watch on the
+    table version znode or by a WRONG_RANGE reply from a replica whose
+    range no longer covers the key (live splits move keys between cohorts
+    mid-flight)."""
 
     MAX_RETRIES = 60
-    RETRY_DELAY = 0.05
+    BACKOFF_BASE = 0.02      # first retry delay; doubles per retry ...
+    BACKOFF_CAP = 1.0        # ... up to this cap (±50% jitter throughout)
     ATTEMPT_TIMEOUT = 1.0    # per-attempt; lost messages (dead node) retry
 
     def __init__(self, cluster: SpinnakerCluster, client_id: str):
@@ -132,6 +226,8 @@ class Client:
         self.sim = cluster.sim
         self.id = client_id
         self.leader_cache: dict[int, int] = {}
+        self.range_table = RangeTable(cluster.zk)
+        self.wrong_range_redirects = 0
         self._rr = 0
         self.stats = LatencyStats()
         self.stats_by_kind: dict[str, LatencyStats] = {}
@@ -142,6 +238,15 @@ class Client:
         self.op_hook: Optional[Callable[[str, Result], None]] = None
 
     # -- routing -----------------------------------------------------------------
+    def _retry_delay(self, tries: int) -> float:
+        """Capped exponential backoff with jitter.  The old fixed 50 ms
+        retry loop synchronized every blocked client into periodic bursts
+        — past the saturation knee those bursts are what collapses
+        throughput (congestion collapse); spreading and spacing retries
+        keeps the overload tail flat."""
+        exp = min(self.BACKOFF_CAP, self.BACKOFF_BASE * (2 ** tries))
+        return exp * (0.5 + self.sim.rng.random())
+
     def _lookup_leader(self, rid: int) -> Optional[int]:
         cached = self.leader_cache.get(rid)
         if cached is not None:
@@ -153,8 +258,10 @@ class Client:
         except NoNode:
             return None
 
-    def _any_replica(self, rid: int) -> int:
-        members = self.cluster.cohort(rid)
+    def _any_replica(self, rid: int) -> Optional[int]:
+        members = self.range_table.members(rid)
+        if not members:
+            return None
         self._rr += 1
         return members[self._rr % len(members)]
 
@@ -241,7 +348,7 @@ class Client:
     def transaction(self, ops: list[WriteOp], cb: Callable) -> None:
         """Multi-operation transaction (§8.2): scope limited to a single
         cohort, exactly as the paper limits transactions to one node."""
-        rids = {self.cluster.range_of(op.key) for op in ops}
+        rids = {self.range_table.lookup(op.key) for op in ops}
         if len(rids) != 1:
             cb(Result(ErrorCode.UNAVAILABLE))
             return
@@ -251,7 +358,6 @@ class Client:
     # -- engine --------------------------------------------------------------------
     def _op(self, kind: str, key: str, kw: dict, cb: Callable,
             consistent: bool, t0: float, tries: int) -> None:
-        rid = self.cluster.range_of(key)
         if tries > self.MAX_RETRIES:
             self.errors += 1
             res = Result(ErrorCode.TIMEOUT, latency=self.sim.now - t0)
@@ -259,24 +365,32 @@ class Client:
                 self.op_hook(kind, res)
             cb(res)
             return
+        rid = self.range_table.lookup(key)
         if kind == "read" and not consistent:
-            target = self._any_replica(rid)
+            target = self._any_replica(rid) if rid is not None else None
         else:
-            target = self._lookup_leader(rid)
-            if target is None:
-                self.sim.schedule(self.RETRY_DELAY, self._op, kind, key, kw,
-                                  cb, consistent, t0, tries + 1)
-                return
+            target = self._lookup_leader(rid) if rid is not None else None
+        if target is None:
+            if rid is None:
+                self.range_table.invalidate()
+            self.sim.schedule(self._retry_delay(tries), self._op, kind, key,
+                              kw, cb, consistent, t0, tries + 1)
+            return
 
         settled = [False]
 
         def retry(res: Optional[Result]):
             self.leader_cache.pop(rid, None)
+            if res is not None and res.code == ErrorCode.WRONG_RANGE:
+                # the range table moved under us (live split / migration):
+                # reload it before re-routing
+                self.wrong_range_redirects += 1
+                self.range_table.invalidate()
             if res is not None and res.leader_hint is not None \
                     and res.code == ErrorCode.NOT_LEADER:
                 self.leader_cache[rid] = res.leader_hint
-            self.sim.schedule(self.RETRY_DELAY, self._op, kind, key, kw,
-                              cb, consistent, t0, tries + 1)
+            self.sim.schedule(self._retry_delay(tries), self._op, kind, key,
+                              kw, cb, consistent, t0, tries + 1)
 
         def on_reply(res: Optional[Result]):
             if settled[0]:
@@ -284,7 +398,8 @@ class Client:
             settled[0] = True
             timeout_ev.cancel()
             if res is None or res.code in (ErrorCode.NOT_LEADER,
-                                           ErrorCode.UNAVAILABLE):
+                                           ErrorCode.UNAVAILABLE,
+                                           ErrorCode.WRONG_RANGE):
                 retry(res)
                 return
             res.latency = self.sim.now - t0

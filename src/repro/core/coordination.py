@@ -183,6 +183,10 @@ class Coordination:
         if node is None:
             raise NoNode(path)
         node.data = data
+        self._zxid += 1
+        # NodeDataChanged: ZK delivers data-change events to exists watches;
+        # range-table version bumps rely on this to invalidate client caches
+        self._fire_exists_watches(path)
 
     def exists(self, path: str) -> bool:
         try:

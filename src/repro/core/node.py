@@ -8,8 +8,10 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Optional, TYPE_CHECKING
 
+from . import ranges as ranges_mod
 from .replica import CohortReplica, ReplicaConfig, Role
 from .sim import Disk, DiskParams, FifoServer
+from .storage import Store
 from .types import KeyRange
 from .wal import WAL
 
@@ -75,9 +77,99 @@ class SpinnakerNode:
         self.up = False
 
     # -- wiring ----------------------------------------------------------------
-    def add_range(self, key_range: KeyRange, peers: tuple[int, int]) -> None:
+    def add_range(self, key_range: KeyRange, peers: tuple[int, ...]) -> None:
         self.replicas[key_range.range_id] = CohortReplica(
             self, key_range, peers, self.cfg.replica)
+
+    # -- range lifecycle (core/ranges.py) ---------------------------------------
+    def fork_child_replica(self, child_range: KeyRange,
+                           peers: tuple[int, ...], store: Store,
+                           fork_lsn: int) -> None:
+        """Local zero-copy fork while applying a SPLIT: adopt the detached
+        child store, durably seed the child's log state at the fork point,
+        and join the child cohort's election."""
+        rid = child_range.range_id
+        if rid in self.replicas:
+            return   # replayed split; the child already exists here
+        rep = CohortReplica(self, child_range, peers, self.cfg.replica)
+        rep.store = store
+        self.wal.seed_range(rid, fork_lsn)
+        self.replicas[rid] = rep
+        if self.up:
+            rep.start()
+
+    def retire_replica(self, rid: int) -> None:
+        """Drop a replica this node no longer hosts (migration retire or
+        deposed straggler): stop it, clear its candidacies, forget its log
+        state, and free the store."""
+        rep = self.replicas.pop(rid, None)
+        if rep is None:
+            return
+        rep.stop()
+        for name, (data, _cz) in list(
+                self.zk.get_children(f"/ranges/{rid}/candidates").items()):
+            if data[0] == self.node_id:
+                try:
+                    self.zk.delete(f"/ranges/{rid}/candidates/{name}")
+                except Exception:
+                    pass
+        self.wal.forget_range(rid)
+
+    def ensure_replica(self, rid: int) -> None:
+        """Host a replica for `rid` if the registered member set includes
+        this node and no local replica exists yet (migration destination,
+        or a split that happened while this node was down).  The blank
+        store is filled by snapshot + WAL catch-up from the range leader."""
+        if rid in self.replicas:
+            return
+        meta = ranges_mod.get_range_meta(self.zk, rid)
+        if meta is None:
+            return
+        lo, hi, members = meta
+        if self.node_id not in members:
+            return
+        if self._hosts_overlapping(lo, hi, rid):
+            # a local parent replica still covers these keys: the SPLIT it
+            # has yet to apply will fork the child locally, with its data —
+            # don't preempt that with an empty snapshot-fed replica
+            return
+        rep = CohortReplica(self, KeyRange(rid, lo, hi),
+                            tuple(m for m in members if m != self.node_id),
+                            self.cfg.replica)
+        self.replicas[rid] = rep
+        if self.up:
+            rep.start()
+
+    def _hosts_overlapping(self, lo: str, hi: str, rid: int) -> bool:
+        for other in self.replicas.values():
+            if other.rid == rid:
+                continue
+            o_lo, o_hi = other.range.lo, other.range.hi
+            if (hi == "" or o_lo < hi) and (o_hi == "" or lo < o_hi):
+                return True
+        return False
+
+    def reconcile_ranges(self) -> None:
+        """Boot-time alignment with coordination metadata: ranges narrowed
+        or members changed while this node was down.  Narrow/retire first,
+        then create missing replicas (ordering matters: a narrowed parent
+        no longer shadows the child it must now host)."""
+        rmap = ranges_mod.load_range_map(self.zk)
+        if not rmap:
+            return
+        for rid, (lo, hi, members) in rmap.items():
+            rep = self.replicas.get(rid)
+            if rep is None:
+                continue
+            if self.node_id not in members:
+                self.retire_replica(rid)
+                continue
+            rep.peers = tuple(sorted(m for m in members if m != self.node_id))
+            if (lo, hi) != (rep.range.lo, rep.range.hi):
+                rep.range = KeyRange(rid, lo, hi)
+                rep.store.restrict(lo, hi)
+        for rid in rmap:
+            self.ensure_replica(rid)
 
     def has_session(self) -> bool:
         return self.session is not None and self.zk.session_alive(self.session)
@@ -94,9 +186,14 @@ class SpinnakerNode:
         except Exception:
             pass
         self._heartbeat()
-        # local recovery of all 3 cohorts (shared log scan, §6), then join
-        for replica in self.replicas.values():
-            replica.start()
+        # reconcile hosted replicas with the registered range table first:
+        # splits/member changes may have happened while this node was down
+        # (replicas created here start themselves, hence the OFFLINE check)
+        self.reconcile_ranges()
+        # local recovery of the surviving cohorts (shared log scan, §6)
+        for replica in list(self.replicas.values()):
+            if replica.role is Role.OFFLINE:
+                replica.start()
 
     def _heartbeat(self) -> None:
         if not self.up:
@@ -126,6 +223,7 @@ class SpinnakerNode:
             self.wal.durable_bytes = 0
             self.wal.skipped.clear()
             self.wal.flushed_upto.clear()
+            self.wal._gc_dropped_upto.clear()
         if expire_session and self.session is not None:
             self.zk.expire_session(self.session)
         self.session = None

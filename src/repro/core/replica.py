@@ -41,10 +41,11 @@ import enum
 from dataclasses import dataclass
 from typing import Callable, Optional, TYPE_CHECKING
 
+from . import ranges as ranges_mod
 from .coordination import NodeExists, NoNode
 from .storage import Store
 from .types import (CommitMarker, ErrorCode, KeyRange, LogRecord, OpType,
-                    Result, WriteOp, fmt_lsn, lsn_seq, make_lsn)
+                    Result, WriteOp, fmt_lsn, lsn_epoch, lsn_seq, make_lsn)
 
 if TYPE_CHECKING:
     from .node import SpinnakerNode
@@ -78,11 +79,11 @@ class ReplicaConfig:
 
 class CohortReplica:
     def __init__(self, node: "SpinnakerNode", key_range: KeyRange,
-                 peers: tuple[int, int], cfg: ReplicaConfig):
+                 peers: tuple[int, ...], cfg: ReplicaConfig):
         self.node = node
-        self.range = key_range
+        self.range = key_range                 # narrows on live splits
         self.rid = key_range.range_id
-        self.peers = peers                     # the other 2 node ids
+        self.peers = tuple(sorted(peers))      # other member node ids
         self.cfg = cfg
         self.store = Store(flush_threshold_bytes=cfg.flush_threshold)
 
@@ -108,6 +109,11 @@ class CohortReplica:
         self._takeover_hi = 0    # l.lst at takeover; writes open when cmt >= this
         self._election_round = 0
         self._last_commit_bcast = -1   # cmt at the last on_commit broadcast
+        # range management (core/ranges.py): a proposed-but-unapplied SPLIT
+        # gates writes above the split point; one member change in flight max
+        self.pending_split: Optional[tuple[str, int]] = None  # (key, child rid)
+        self._pending_member_change = False
+        self._watched_peers: set[int] = set()
 
         # leader-side batch accumulator (records queued + WAL-buffered but
         # not yet covered by a force / proposed to followers)
@@ -147,12 +153,19 @@ class CohortReplica:
     def start(self) -> None:
         """Called after the node's local recovery pass for this range."""
         records, cmt = self.node.wal.recover_range(self.rid)
-        self.lst = max((r.lsn for r in records), default=0)
+        # lst floor: records below the SSTable-flush watermark were GC'd
+        # from the log (and a forked child's whole prefix lives only in its
+        # fork SSTable), so the durable position is at least that watermark
+        self.lst = max(max((r.lsn for r in records), default=0),
+                       self.node.wal.flushed_upto.get(self.rid, 0))
         self.cmt = min(cmt, self.lst)
         # local recovery: re-apply (flushed, f.cmt] idempotently (§6.1)
         for r in records:
             if self.store.flushed_upto < r.lsn <= self.cmt:
                 self.store.apply(r)
+        # drop cells outside our range: a SPLIT applied in a prior life
+        # detached them, but replaying the shared log re-admits them
+        self.store.restrict(self.range.lo, self.range.hi)
         self.queue = {r.lsn: r for r in records if r.lsn > self.cmt}
         self._follower_forced = self.lst   # durable log scanned
         self._reset_batch()
@@ -161,6 +174,8 @@ class CohortReplica:
         self.insync.clear()
         self.open_for_writes = False
         self.proposed_version.clear()
+        self.pending_split = None
+        self._pending_member_change = False
         self.role = Role.ELECTING
         self._join_or_elect()
 
@@ -207,8 +222,34 @@ class CohortReplica:
         except NoNode:
             return 0
 
+    def _majority(self) -> int:
+        """Cohort majority; cohorts are briefly 4-wide mid-migration (add
+        before remove), where majorities of the old and new member sets
+        always intersect — that is what makes single-change
+        reconfiguration safe."""
+        return (len(self.peers) + 1) // 2 + 1
+
+    def _refresh_membership(self) -> bool:
+        """Adopt the registered member set before electing: a replica that
+        slept through a MEMBER_CHANGE must not vote under a stale cohort
+        (or at all, if it was retired).  Returns False when this replica
+        deregistered itself."""
+        meta = ranges_mod.get_range_meta(self.zk, self.rid)
+        if meta is None:
+            return True
+        _lo, _hi, members = meta
+        me = self.node.node_id
+        if me not in members:
+            self.log("not in registered member set; deregistering")
+            self.node.retire_replica(self.rid)
+            return False
+        self.peers = tuple(sorted(m for m in members if m != me))
+        return True
+
     def _run_election(self) -> None:
         if self.role == Role.OFFLINE:
+            return
+        if not self._refresh_membership():
             return
         self.role = Role.ELECTING
         self._election_round = self._current_round()
@@ -249,7 +290,7 @@ class CohortReplica:
                   self.zk.get_children(f"{self.base}/candidates").items()}
         # lines 5-6: wait for a majority; winner = max n.lst, znode sequence
         # number breaks ties
-        if len(cands) < 2:
+        if len(cands) < self._majority():
             self.zk.watch_children(f"{self.base}/candidates",
                                    self._evaluate_election)
             return
@@ -311,12 +352,23 @@ class CohortReplica:
         self._takeover_hi = self.lst
         self._reset_batch()
         self._last_commit_bcast = -1   # first tick re-announces cmt
-        # rebuild version map from committed state + unresolved queue
+        self._watched_peers.clear()
+        # rebuild version map + range-op gates from the unresolved queue:
+        # an in-flight SPLIT must keep gating writes above the split point
+        # across the regime change, else post-takeover writes to moved keys
+        # would land above the barrier and be detached away
         self.proposed_version.clear()
+        self.pending_split = None
+        self._pending_member_change = False
         for lsn in sorted(self.queue):
             rec = self.queue[lsn]
-            for colname, _value, version in rec.columns:
-                self.proposed_version[(rec.key, colname)] = version
+            if rec.op is OpType.SPLIT:
+                self.pending_split = (rec.key, rec.columns[0][1])
+            elif rec.op is OpType.MEMBER_CHANGE:
+                self._pending_member_change = True
+            else:
+                for colname, _value, version in rec.columns:
+                    self.proposed_version[(rec.key, colname)] = version
         self._next_seq = lsn_seq(self.lst) + 1
         self.log(f"takeover: cmt={fmt_lsn(self.cmt)} lst={fmt_lsn(self.lst)} "
                  f"unresolved={len(self.queue)}")
@@ -328,7 +380,14 @@ class CohortReplica:
 
     def _watch_peer_sessions(self) -> None:
         for p in self.peers:
+            if p in self._watched_peers:
+                continue  # re-invoked after member changes; arm once each
+            self._watched_peers.add(p)
+
             def on_change(_p, peer=p):
+                if peer not in self.peers:
+                    self._watched_peers.discard(peer)  # retired mid-watch
+                    return
                 if self.role not in (Role.LEADER, Role.TAKEOVER):
                     return
                 if not self.zk.exists(f"/nodes/{peer}"):
@@ -393,6 +452,11 @@ class CohortReplica:
                           f_lst: int) -> None:
         if self.role not in (Role.LEADER, Role.TAKEOVER) or epoch != self.epoch:
             return
+        if follower not in self.peers:
+            # a replica retired by a MEMBER_CHANGE it slept through is
+            # rejoining: tell it to deregister instead of feeding it data
+            self._send(follower, "on_deposed", epoch=self.epoch)
+            return
         # a restarted follower must re-sync from scratch
         self.insync.discard(follower)
         self.acked[follower] = 0
@@ -446,6 +510,7 @@ class CohortReplica:
                        commit_lsn=self._piggyback())
         self.log(f"follower n{follower} in-sync @ {fmt_lsn(upto)}")
         self._after_quorum_progress()
+        self._check_migration()   # a just-synced dst unblocks phase 2
 
     def _after_quorum_progress(self) -> None:
         if self.role == Role.TAKEOVER and self.insync:
@@ -467,6 +532,15 @@ class CohortReplica:
         self.open_for_writes = True
         self._next_seq = max(self._next_seq, lsn_seq(self.lst) + 1)
         self.log(f"open for writes (next lsn {self.epoch}.{self._next_seq})")
+        # self-heal range metadata: a dead leader may have applied a range
+        # op without publishing it (idempotent — no version churn when the
+        # registered state already matches), then resume any interrupted
+        # migration from its intent znode
+        ranges_mod.set_range_meta(
+            self.zk, self.rid, self.range.lo, self.range.hi,
+            tuple(sorted((self.node.node_id,) + self.peers)))
+        self.node.cluster.on_range_table_changed()
+        self.node.sim.schedule(0.0, self._check_migration)
         blocked, self.blocked_writes = self.blocked_writes, []
         for op, cb in blocked:
             if isinstance(op, list):                # blocked transaction
@@ -512,13 +586,34 @@ class CohortReplica:
             last = i == len(fresh) - 1
             self.node.wal.append(rec, force=last, cb=complete if last else None)
 
+    def on_deposed(self, epoch: int) -> None:
+        """The leader says we are not in this cohort's member set (we
+        missed a MEMBER_CHANGE retiring us while down): drop the replica."""
+        if self.role is Role.OFFLINE:
+            return
+        self.log("deposed: not in the cohort member set; deregistering")
+        self.node.retire_replica(self.rid)
+
     # ===================================================== steady state (§5)
     def _piggyback(self) -> Optional[int]:
         return self.cmt if self.cfg.piggyback_commit else None
 
+    def _owns(self, key: str) -> bool:
+        """Does this replica currently serve `key`?  False once the range
+        narrowed under a split, or (leader only) once a SPLIT above the
+        key is proposed — the barrier must not admit writes that would
+        land past it and then be detached away."""
+        if not self.range.contains(key):
+            return False
+        ps = self.pending_split
+        return ps is None or key < ps[0]
+
     def client_write(self, op: WriteOp, reply: Callable) -> None:
         if self.role != Role.LEADER or not self.node.has_session():
             reply(Result(ErrorCode.NOT_LEADER, leader_hint=self.leader_id))
+            return
+        if not self._owns(op.key):
+            reply(Result(ErrorCode.WRONG_RANGE))
             return
         if not self.open_for_writes:
             self.blocked_writes.append((op, reply))
@@ -618,6 +713,9 @@ class CohortReplica:
         sweep only after quorum covers the tail record)."""
         if self.role != Role.LEADER or not self.node.has_session():
             reply(Result(ErrorCode.NOT_LEADER, leader_hint=self.leader_id))
+            return
+        if not all(self._owns(op.key) for op in ops):
+            reply(Result(ErrorCode.WRONG_RANGE))
             return
         if not self.open_for_writes:
             self.blocked_writes.append((ops, reply))
@@ -737,15 +835,19 @@ class CohortReplica:
 
     def _advance_commit(self) -> None:
         """Commit rule (Fig. 4): a write commits once the *leader's* log
-        force completed AND at least one follower acked — i.e.
-        min(own forced, max follower ack).  (A more aggressive any-2-of-3
-        rule is also safe Paxos-wise, but the paper's leader-anchored rule
-        is what produces its §9.2 latency profile; see EXPERIMENTS.md.)
-        Acks and forces are per-node prefix-closed (FIFO links, in-order
-        forces)."""
-        best_follower = max([self.acked.get(f, 0) for f in self.insync],
-                            default=0)
-        new_cmt = min(self.forced_upto, best_follower)
+        force completed AND enough followers acked that a majority of the
+        cohort holds it — for the paper's 3-replica cohorts that is
+        min(own forced, max follower ack); mid-migration the cohort is
+        briefly 4-wide and the rule generalizes to the (majority-1)-th
+        highest follower ack.  Acks and forces are per-node prefix-closed
+        (FIFO links, in-order forces)."""
+        if self.role not in (Role.LEADER, Role.TAKEOVER):
+            return  # may arrive deferred, after a step-down
+        acks = sorted((self.acked.get(f, 0) for f in self.insync),
+                      reverse=True)
+        need = self._majority() - 1          # follower acks beside our force
+        best = acks[need - 1] if len(acks) >= need else 0
+        new_cmt = min(self.forced_upto, best)
         if new_cmt <= self.cmt:
             return
         self._apply_committed(new_cmt)
@@ -770,7 +872,15 @@ class CohortReplica:
             return
         for lsn in sorted(l for l in self.queue if self.cmt < l <= upto):
             rec = self.queue.pop(lsn)
-            self.store.apply(rec)
+            self.cmt = lsn   # range ops read cmt; keep it current in-loop
+            if rec.op is OpType.SPLIT:
+                self._apply_split(rec)
+            elif rec.op is OpType.MEMBER_CHANGE:
+                self._apply_member_change(rec)
+                if self.role is Role.OFFLINE:
+                    return   # the change retired this very replica
+            else:
+                self.store.apply(rec)
             self.commits += 1
             cb = self.pending_reply.pop(lsn, None)
             if cb is not None:
@@ -780,6 +890,220 @@ class CohortReplica:
         flushed = self.store.maybe_flush(self.cmt)
         if flushed is not None:
             self.node.wal.note_flushed(self.rid, flushed)
+
+    # ============================================ range management (ranges.py)
+    def propose_split(self, split_key: Optional[str] = None) -> bool:
+        """Live range split: run a SPLIT record through the normal Paxos
+        pipeline as a barrier.  Every replica that applies it forks the
+        child range locally with zero data copy; the child cohort (same
+        members) then elects its own leader.  Returns False when this
+        replica cannot split right now (not an open leader, another range
+        op in flight, or nothing to split)."""
+        if self.role is not Role.LEADER or not self.open_for_writes \
+                or not self.node.has_session():
+            return False
+        if self.pending_split is not None or self._pending_member_change \
+                or self.zk.exists(ranges_mod.migration_path(self.rid)):
+            return False
+        if split_key is None:
+            split_key = self.store.median_key(self.range.lo, self.range.hi)
+        if split_key is None or split_key <= self.range.lo \
+                or not self.range.contains(split_key):
+            return False
+        child_rid = ranges_mod.alloc_range_id(
+            self.zk, self.node.cluster.n_base_ranges)
+        ranges_mod.seed_child_epoch(self.zk, child_rid, self.epoch)
+        lsn = make_lsn(self.epoch, self._next_seq)
+        self._next_seq += 1
+        rec = LogRecord(self.rid, lsn, OpType.SPLIT, split_key,
+                        (("child_rid", child_rid, 0),))
+        self.pending_split = (split_key, child_rid)
+        self.lst = max(self.lst, lsn)
+        self.queue[lsn] = rec
+        self._batch_append(rec)
+        self._maybe_flush_batch()
+        self.log(f"SPLIT proposed at {split_key!r} -> child r{child_rid}")
+        return True
+
+    def _propose_member_change(self, members: tuple[int, ...]) -> bool:
+        """One committed membership change at a time (Raft-style single-
+        server reconfiguration: old/new majorities always intersect)."""
+        if self.role is not Role.LEADER or not self.open_for_writes \
+                or not self.node.has_session():
+            return False
+        if self.pending_split is not None or self._pending_member_change:
+            return False
+        members = tuple(sorted(set(members)))
+        if self.node.node_id not in members or len(members) < 2:
+            return False
+        lsn = make_lsn(self.epoch, self._next_seq)
+        self._next_seq += 1
+        rec = LogRecord(self.rid, lsn, OpType.MEMBER_CHANGE, "",
+                        (("members", members, 0),))
+        self._pending_member_change = True
+        self.lst = max(self.lst, lsn)
+        self.queue[lsn] = rec
+        self._batch_append(rec)
+        self._maybe_flush_batch()
+        self.log(f"MEMBER_CHANGE proposed: {members}")
+        return True
+
+    def start_migration(self, src: int, dst: int) -> bool:
+        """Move this range's replica from `src` to `dst` (§6 machinery as
+        a migration primitive): record the intent in coordination, ADD dst
+        (snapshot + WAL catch-up brings it in-sync), then — gated on dst
+        being in-sync — RETIRE src.  A leader elected mid-migration picks
+        the intent back up in `_check_migration`."""
+        me = self.node.node_id
+        if self.role is not Role.LEADER or not self.open_for_writes \
+                or not self.node.has_session():
+            return False
+        if src == me or src not in self.peers or dst == me \
+                or dst in self.peers or dst not in self.node.cluster.nodes:
+            return False
+        if self.pending_split is not None or self._pending_member_change:
+            return False
+        try:
+            self.zk.create(ranges_mod.migration_path(self.rid),
+                           data=(src, dst))
+        except NodeExists:
+            return False   # a migration is already in flight
+        if not self._propose_member_change((me,) + self.peers + (dst,)):
+            try:
+                self.zk.delete(ranges_mod.migration_path(self.rid))
+            except NoNode:
+                pass
+            return False
+        self.log(f"migration started: n{src} -> n{dst}")
+        return True
+
+    def _check_migration(self) -> None:
+        """Drive a recorded migration one step forward.  Idempotent and
+        cheap; called after member changes apply, after followers sync,
+        and from the commit tick so a freshly elected leader resumes an
+        interrupted move unaided."""
+        if self.role is not Role.LEADER or not self.open_for_writes \
+                or not self.node.has_session():
+            return
+        try:
+            src, dst = self.zk.get(ranges_mod.migration_path(self.rid))
+        except NoNode:
+            return
+        if self._pending_member_change or self.pending_split is not None:
+            return
+        me = self.node.node_id
+        members = (me,) + self.peers
+        if src == me:
+            # failover elected the retire target itself: abort the move by
+            # removing the half-joined destination, never ourselves
+            try:
+                self.zk.delete(ranges_mod.migration_path(self.rid))
+            except NoNode:
+                pass
+            self.log(f"migration aborted (leader is retire target n{src})")
+            if dst in self.peers:
+                self._propose_member_change(
+                    tuple(m for m in members if m != dst))
+            return
+        if dst not in members:
+            # phase 1 (ADD) was lost with the old leader: re-propose it
+            self._propose_member_change(members + (dst,))
+            return
+        if src in members:
+            # phase 2 gate: retire src only once dst holds everything
+            # committed — otherwise a post-migration majority could exclude
+            # every holder of acknowledged writes
+            if dst in self.insync and self.acked.get(dst, 0) >= self.cmt:
+                self._propose_member_change(
+                    tuple(m for m in members if m != src))
+            return
+        # both phases committed: the move is complete
+        try:
+            self.zk.delete(ranges_mod.migration_path(self.rid))
+        except NoNode:
+            pass
+        self.log(f"migration complete: n{src} -> n{dst}")
+
+    def _apply_split(self, rec: LogRecord) -> None:
+        """Apply a committed SPLIT: narrow our range, fork the child range
+        locally (zero copy), and register the child's metadata.  Runs on
+        every replica at the same log position, so all three forks carry
+        identical state."""
+        split_key = rec.key
+        child_rid = rec.columns[0][1]
+        if self.pending_split is not None \
+                and self.pending_split[1] == child_rid:
+            self.pending_split = None
+        if split_key <= self.range.lo or not self.range.contains(split_key):
+            return   # replay of a split this replica already performed
+        child_hi = self.range.hi
+        members = tuple(sorted((self.node.node_id,) + self.peers))
+        self.range = KeyRange(self.rid, self.range.lo, split_key)
+        child_range = KeyRange(child_rid, split_key, child_hi)
+        child_store = self.store.detach_range(split_key, child_hi,
+                                              fork_lsn=rec.lsn)
+        for kc in [kc for kc in self.proposed_version
+                   if not self.range.contains(kc[0])]:
+            del self.proposed_version[kc]
+        self.log(f"SPLIT applied at {split_key!r}: forked child r{child_rid}"
+                 f" [{split_key!r}, {child_hi!r})")
+        # registration is idempotent — the first applier wins, later
+        # repliers (and the leader's open-writes self-heal) no-op
+        ranges_mod.seed_child_epoch(self.zk, child_rid, lsn_epoch(rec.lsn))
+        ranges_mod.set_range_meta(self.zk, child_rid, split_key, child_hi,
+                                  members)
+        ranges_mod.set_range_meta(self.zk, self.rid, self.range.lo,
+                                  split_key, members)
+        self.node.fork_child_replica(child_range, self.peers, child_store,
+                                     fork_lsn=rec.lsn)
+        self.node.cluster.on_range_table_changed()
+
+    def _apply_member_change(self, rec: LogRecord) -> None:
+        """Apply a committed MEMBER_CHANGE: adopt the new member set, or
+        retire this replica if it is no longer part of it."""
+        members = tuple(rec.columns[0][1])
+        me = self.node.node_id
+        self._pending_member_change = False
+        if me not in members:
+            meta = ranges_mod.get_range_meta(self.zk, self.rid)
+            if meta is not None and me in meta[2]:
+                # stale record replayed through catch-up, superseded by a
+                # later re-add: adopt the registered set instead
+                self.peers = tuple(sorted(m for m in meta[2] if m != me))
+                return
+            self.log(f"retired from cohort (members now {members})")
+            if self.role in (Role.LEADER, Role.TAKEOVER):
+                # abdicate cleanly so the cohort elects without waiting
+                # out our session
+                try:
+                    self.zk.delete(f"{self.base}/leader")
+                except NoNode:
+                    pass
+            ranges_mod.set_range_meta(self.zk, self.rid, self.range.lo,
+                                      self.range.hi, members)
+            self.node.cluster.on_range_table_changed()
+            self.node.retire_replica(self.rid)
+            return
+        new_peers = tuple(sorted(m for m in members if m != me))
+        removed = set(self.peers) - set(new_peers)
+        added = set(new_peers) - set(self.peers)
+        self.peers = new_peers
+        self.log(f"member change applied: members={members}")
+        if self.role in (Role.LEADER, Role.TAKEOVER):
+            for r in removed:
+                self.insync.discard(r)
+                self.acked.pop(r, None)
+            for a in added:
+                self.acked.setdefault(a, 0)
+            ranges_mod.set_range_meta(self.zk, self.rid, self.range.lo,
+                                      self.range.hi, members)
+            self.node.cluster.on_range_table_changed()
+            self._watch_peer_sessions()
+            # the quorum size may have shrunk (commit can advance) and the
+            # migration may have its next phase due; both re-enter the
+            # commit path, so run them after this apply sweep finishes
+            self.node.sim.schedule(0.0, self._advance_commit)
+            self.node.sim.schedule(0.0, self._check_migration)
 
     # --- periodic async commit messages (§5) -----------------------------------
     def _arm_commit_timer(self) -> None:
@@ -812,6 +1136,7 @@ class CohortReplica:
                 for f in self.insync:
                     self._send(f, "on_commit", epoch=self.epoch,
                                commit_lsn=self.cmt, nbytes=96)
+        self._check_migration()   # heartbeat-paced migration resume
         self._arm_commit_timer()
 
     _idle_ticks = 0
@@ -840,6 +1165,13 @@ class CohortReplica:
             if self.role is Role.OFFLINE:
                 reply(Result(ErrorCode.UNAVAILABLE))
                 return
+        if not self.range.contains(key):
+            # the key moved to a child range (split narrowed this range);
+            # the client must refresh its range table.  A merely *pending*
+            # split does not gate reads — the data is still here and the
+            # barrier only has to keep writes from landing above it.
+            reply(Result(ErrorCode.WRONG_RANGE))
+            return
         self.reads_served += 1
         # Store.get contract: deletes surface as tombstone cells, not None
         # — report NOT_FOUND but keep the tombstone's version so clients

@@ -12,7 +12,17 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Iterator, Optional
 
-from .types import Cell, LogRecord, OpType
+from .types import Cell, LogRecord, OpType, RANGE_OPS
+
+
+def _in_range(key: str, lo: str, hi: str) -> bool:
+    """[lo, hi) membership; hi == "" means +inf (tail range)."""
+    return key >= lo and (hi == "" or key < hi)
+
+
+def _cell_bytes(colname: str, cell: Cell) -> int:
+    return 48 + len(colname) + (
+        len(cell.value) if isinstance(cell.value, (bytes, str)) else 16)
 
 
 class Memtable:
@@ -83,6 +93,8 @@ class Store:
 
     # -- write path -----------------------------------------------------------
     def apply(self, rec: LogRecord) -> None:
+        if rec.op in RANGE_OPS:
+            return  # range-management barriers carry no row data
         self.memtable.apply(rec)
 
     def maybe_flush(self, committed_lsn: int) -> Optional[int]:
@@ -168,6 +180,93 @@ class Store:
                 if prev is None or cell.lsn > prev.lsn:
                     out[(k, c)] = cell
         return [(k, c, cell) for (k, c), cell in sorted(out.items())]
+
+    # -- range lifecycle (live splits / migration, core/ranges.py) -------------
+    def iter_range(self, lo: str, hi: str) -> Iterator[tuple[str, str, Cell]]:
+        """Newest-wins cells with key in [lo, hi), sorted by (key, colname).
+        Tombstones are included (a migrating replica must learn deletes)."""
+        out: dict[tuple[str, str], Cell] = {}
+        for t in self.sstables:
+            for (k, c), cell in t.cells.items():
+                if _in_range(k, lo, hi):
+                    prev = out.get((k, c))
+                    if prev is None or cell.lsn > prev.lsn:
+                        out[(k, c)] = cell
+        for k, c, cell in self.memtable.items():
+            if _in_range(k, lo, hi):
+                prev = out.get((k, c))
+                if prev is None or cell.lsn > prev.lsn:
+                    out[(k, c)] = cell
+        for (k, c), cell in sorted(out.items()):
+            yield k, c, cell
+
+    def keys_in_range(self, lo: str, hi: str) -> list[str]:
+        keys: set[str] = set()
+        for t in self.sstables:
+            keys.update(k for (k, _c) in t.cells if _in_range(k, lo, hi))
+        keys.update(k for k in self.memtable.rows if _in_range(k, lo, hi))
+        return sorted(keys)
+
+    def median_key(self, lo: str, hi: str) -> Optional[str]:
+        """Median stored key strictly above `lo` — the default split point.
+        None when the range has fewer than 2 distinct keys (unsplittable)."""
+        keys = self.keys_in_range(lo, hi)
+        if len(keys) < 2:
+            return None
+        return keys[len(keys) // 2]   # index >= 1, so strictly above lo
+
+    def detach_range(self, lo: str, hi: str, fork_lsn: int = 0) -> "Store":
+        """Fork [lo, hi) out into a new child Store with zero data copy:
+        SSTable cells move by reference into one LSN-tagged child run, and
+        the child's durable watermark covers everything forked (the fork
+        rides the durable SPLIT record that triggered it, so a restarted
+        child recovers via snapshot catch-up, not from its empty log)."""
+        moved: dict[tuple[str, str], Cell] = {}
+        for t in self.sstables:
+            take = {(k, c): cell for (k, c), cell in t.cells.items()
+                    if _in_range(k, lo, hi)}
+            if take:
+                for kc in take:
+                    del t.cells[kc]
+                for kc, cell in take.items():
+                    prev = moved.get(kc)
+                    if prev is None or cell.lsn > prev.lsn:
+                        moved[kc] = cell
+        mt = self.memtable
+        for key in [k for k in mt.rows if _in_range(k, lo, hi)]:
+            for colname, cell in mt.rows.pop(key).items():
+                prev = moved.get((key, colname))
+                if prev is None or cell.lsn > prev.lsn:
+                    moved[(key, colname)] = cell
+        # recompute parent memtable byte accounting after the eviction
+        mt.bytes = sum(_cell_bytes(c, cell)
+                       for row in mt.rows.values()
+                       for c, cell in row.items())
+        child = Store(flush_threshold_bytes=self.flush_threshold,
+                      compact_fanin=self.compact_fanin)
+        if moved:
+            lsns = [cell.lsn for cell in moved.values()]
+            child.sstables = [SSTable(cells=moved, min_lsn=min(lsns),
+                                      max_lsn=max(lsns))]
+        child.flushed_upto = max(fork_lsn,
+                                 max((c.lsn for c in moved.values()),
+                                     default=0))
+        return child
+
+    def restrict(self, lo: str, hi: str) -> None:
+        """Drop every cell outside [lo, hi) — boot-time reconciliation when
+        coordination metadata says this replica's range narrowed while the
+        node was down (the data lives in the child cohort now)."""
+        for t in self.sstables:
+            for kc in [kc for kc in t.cells if not _in_range(kc[0], lo, hi)]:
+                del t.cells[kc]
+        self.sstables = [t for t in self.sstables if t.cells]
+        mt = self.memtable
+        for key in [k for k in mt.rows if not _in_range(k, lo, hi)]:
+            del mt.rows[key]
+        mt.bytes = sum(_cell_bytes(c, cell)
+                       for row in mt.rows.values()
+                       for c, cell in row.items())
 
     # -- crash ------------------------------------------------------------------
     def crash_volatile(self) -> None:

@@ -42,6 +42,14 @@ class OpType(enum.Enum):
     COND_DELETE = "cond_delete"
     # multi-column variant of put (§3: "multi-column versions of its API")
     MULTI_PUT = "multi_put"
+    # range-management records (core/ranges.py): replicated through the
+    # normal Paxos pipeline so every replica changes ranges at the same
+    # log position.  They never touch the memtable (Store.apply ignores
+    # them); CohortReplica._apply_committed intercepts them instead.
+    SPLIT = "split"                  # key = split point; columns carry child rid
+    MEMBER_CHANGE = "member_change"  # columns carry the new member tuple
+
+RANGE_OPS = (OpType.SPLIT, OpType.MEMBER_CHANGE)
 
 
 @dataclass(frozen=True)
@@ -102,6 +110,10 @@ class ErrorCode(enum.Enum):
     VERSION_MISMATCH = "version_mismatch"
     NOT_FOUND = "not_found"
     TIMEOUT = "timeout"
+    # the key no longer belongs to the range the client addressed (it
+    # moved to a child range, or the replica's range narrowed after a
+    # split); the client must refresh its cached range table and re-route
+    WRONG_RANGE = "wrong_range"
 
 
 @dataclass

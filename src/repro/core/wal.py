@@ -123,6 +123,33 @@ class WAL:
                 cmt = max(cmt, e.commit_lsn)
         return records, cmt
 
+    def seed_range(self, range_id: int, fork_lsn: int) -> None:
+        """Durably seed a forked child range's log state (§4-style live
+        split).  Called while applying the parent's SPLIT record — which is
+        already durable on this node — so the seed is modeled as riding
+        that force: a commit marker at `fork_lsn` plus watermarks that send
+        any catch-up request below `fork_lsn` to the SSTable/snapshot path
+        (the child's log holds nothing below the fork point)."""
+        self.durable.append(CommitMarker(range_id, fork_lsn))
+        self.durable_bytes += 16
+        self.flushed_upto[range_id] = max(
+            self.flushed_upto.get(range_id, 0), fork_lsn)
+        self._gc_dropped_upto[range_id] = max(
+            self._gc_dropped_upto.get(range_id, 0), fork_lsn)
+
+    def forget_range(self, range_id: int) -> None:
+        """Drop a range's log state after its replica left this node
+        (migration retire): records, markers, and watermarks."""
+        keep = [e for e in self.durable if getattr(e, "range_id", None) != range_id]
+        self.durable_bytes -= sum(self._entry_bytes(e) for e in self.durable
+                                  if getattr(e, "range_id", None) == range_id)
+        self.durable = keep
+        self._buffer = [p for p in self._buffer
+                        if getattr(p.entry, "range_id", None) != range_id]
+        self.skipped.pop(range_id, None)
+        self.flushed_upto.pop(range_id, None)
+        self._gc_dropped_upto.pop(range_id, None)
+
     # -- logical truncation ---------------------------------------------------
     def logically_truncate(self, range_id: int, lsns: Iterable[int]) -> None:
         self.skipped.setdefault(range_id, set()).update(lsns)

@@ -14,15 +14,17 @@ Layers:
 - `experiment`— build-cluster/preload/drive/collect, one call per curve.
 """
 
-from .drivers import (CassandraAdapter, ClosedLoopDriver, OpenLoopDriver,
-                      SpinnakerAdapter)
+from .drivers import (AckLedgerAdapter, CassandraAdapter, ClosedLoopDriver,
+                      OpenLoopDriver, SpinnakerAdapter)
 from .generators import Op, OpKind, OpStream, WorkloadSpec
 from .metrics import LatencyHistogram, OpLog, WindowSummary
 from .scenario import FaultEvent, FaultSchedule, parse_schedule
 from .experiment import (ExperimentConfig, run_cassandra_workload,
-                         run_spinnaker_saturation, run_spinnaker_workload)
+                         run_spinnaker_rebalance, run_spinnaker_saturation,
+                         run_spinnaker_workload)
 
 __all__ = [
+    "AckLedgerAdapter",
     "CassandraAdapter",
     "ClosedLoopDriver",
     "ExperimentConfig",
@@ -39,6 +41,7 @@ __all__ = [
     "WorkloadSpec",
     "parse_schedule",
     "run_cassandra_workload",
+    "run_spinnaker_rebalance",
     "run_spinnaker_saturation",
     "run_spinnaker_workload",
 ]

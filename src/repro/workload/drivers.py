@@ -73,6 +73,35 @@ class SpinnakerAdapter:
             c.get(key, col, True, after_read)
 
 
+class AckLedgerAdapter(SpinnakerAdapter):
+    """SpinnakerAdapter that additionally records the highest acknowledged
+    version per written key.
+
+    The ledger is the audit trail behind the rebalance scenarios' "no lost
+    acknowledged writes" check: after a run that splits/migrates ranges
+    under load (with leader kills mixed in), every ledger entry must be
+    readable at >= its acked version — a write the cluster confirmed can
+    never disappear, no matter where its key lives now."""
+
+    def __init__(self, client, ledger: dict, **kw):
+        super().__init__(client, **kw)
+        self.ledger = ledger            # key_index -> max acked version
+
+    def issue(self, op: Op, done: Callable[[bool], None]) -> None:
+        if op.kind != OpKind.WRITE:
+            super().issue(op, done)
+            return
+        key = key_of(op.key_index)
+
+        def on_put(r):
+            if r.ok and r.version is not None:
+                prev = self.ledger.get(op.key_index, 0)
+                self.ledger[op.key_index] = max(prev, r.version)
+            done(r.ok)
+
+        self.client.put(key, self.colname, b"x" * op.value_size, on_put)
+
+
 class CassandraAdapter:
     """Maps Ops onto the Cassandra baseline client; there is no CAS, so
     COND degrades to read-then-write (the consistency gap §9 points at)."""

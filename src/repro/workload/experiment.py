@@ -9,16 +9,18 @@ notebooks can run one-off scenarios.
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Optional
 
 from ..baselines.cassandra import CassandraCluster, CassandraConfig
+from ..core import ranges as ranges_mod
 from ..core.cluster import ClusterConfig, SpinnakerCluster, key_of
 from ..core.node import NodeConfig
 from ..core.replica import ReplicaConfig
 from ..core.sim import DiskParams, NetParams, Simulator
-from .drivers import (CassandraAdapter, ClosedLoopDriver, OpenLoopDriver,
-                      SpinnakerAdapter)
+from .drivers import (AckLedgerAdapter, CassandraAdapter, ClosedLoopDriver,
+                      OpenLoopDriver, SpinnakerAdapter)
 from .generators import OpStream, WorkloadSpec
 from .metrics import OpLog
 from .scenario import FaultSchedule, parse_schedule
@@ -47,6 +49,10 @@ class ExperimentConfig:
     window: float = 0.5               # timeline bucket width
     preload_keys: int = 0             # 0 = spec.num_keys, capped below
     preload_cap: int = 2000
+    # align the cluster's range pre-split with the workload keyspace (on
+    # mismatch the whole workload lands in range 0 and measures one cohort,
+    # not the cluster); set False to keep the static default pre-split
+    align_presplit: bool = True
 
 
 def build_spinnaker(cfg: ExperimentConfig, num_keys: Optional[int] = None):
@@ -80,6 +86,31 @@ def build_cassandra(cfg: ExperimentConfig):
     return sim, cluster
 
 
+def _aligned_presplit(cfg: ExperimentConfig,
+                      spec: WorkloadSpec) -> Optional[int]:
+    """Pre-split footgun guard: with the default 100k boundaries a smaller
+    workload keyspace lands entirely in range 0, silently measuring one
+    cohort.  By default the pre-split is auto-aligned to the workload's
+    keyspace (with a warning); `cfg.align_presplit=False` keeps the static
+    default for experiments that want the mismatch on purpose."""
+    default_presplit = ClusterConfig.num_keys
+    if spec.num_keys == default_presplit:
+        return None
+    if not cfg.align_presplit:
+        warnings.warn(
+            f"workload keyspace ({spec.num_keys} keys) does not match the "
+            f"cluster pre-split ({default_presplit}); the load will "
+            "concentrate in range 0 (align_presplit=False keeps this)",
+            stacklevel=3)
+        return None
+    warnings.warn(
+        f"aligning cluster pre-split to the workload keyspace "
+        f"({spec.num_keys} keys, default pre-split {default_presplit}); "
+        "set align_presplit=False to keep the static pre-split",
+        stacklevel=3)
+    return spec.num_keys
+
+
 def _preload(sim, put, n_keys: int, deadline: float = 120.0) -> None:
     """Write keys 0..n_keys-1 so reads hit existing data."""
     done = [0]
@@ -94,7 +125,7 @@ def _preload(sim, put, n_keys: int, deadline: float = 120.0) -> None:
 
 def _drive(sim, adapter, spec: WorkloadSpec, cfg: ExperimentConfig,
            schedule: Optional[FaultSchedule], cluster,
-           preloaded: int) -> tuple[OpLog, float]:
+           preloaded: int) -> tuple[OpLog, float, object]:
     stream = OpStream(spec, seed=cfg.seed + 1)
     if spec.key_dist == "latest":
         # 'latest' skews toward recent inserts: start the horizon at the
@@ -111,7 +142,7 @@ def _drive(sim, adapter, spec: WorkloadSpec, cfg: ExperimentConfig,
                                n_clients=cfg.n_clients)
     t_start = sim.now + cfg.warmup
     drv.run(cfg.duration, warmup=cfg.warmup)
-    return log, t_start
+    return log, t_start, drv
 
 
 def _result(log: OpLog, cfg: ExperimentConfig, read_kind: str,
@@ -150,7 +181,7 @@ def run_spinnaker_workload(spec: WorkloadSpec,
     cfg = cfg or ExperimentConfig()
     if isinstance(schedule, str):
         schedule = parse_schedule(schedule)
-    sim, cluster = build_spinnaker(cfg)
+    sim, cluster = build_spinnaker(cfg, num_keys=_aligned_presplit(cfg, spec))
     loader = cluster.make_client("preload")
     n_pre = min(cfg.preload_keys or spec.num_keys, cfg.preload_cap,
                 spec.num_keys)
@@ -159,7 +190,8 @@ def run_spinnaker_workload(spec: WorkloadSpec,
     adapter = SpinnakerAdapter(cluster.make_client("bench"),
                                consistent=consistent_reads,
                                monotonic=monotonic)
-    log, t_start = _drive(sim, adapter, spec, cfg, schedule, cluster, n_pre)
+    log, t_start, _drv = _drive(sim, adapter, spec, cfg, schedule, cluster,
+                                n_pre)
     read_kind = "read" if consistent_reads else "timeline_read"
     return _result(log, cfg, read_kind, "write", schedule, t_start)
 
@@ -221,6 +253,105 @@ def run_spinnaker_saturation(spec: WorkloadSpec,
     }
 
 
+def run_spinnaker_rebalance(spec: WorkloadSpec,
+                            cfg: Optional[ExperimentConfig] = None,
+                            schedule: Optional[FaultSchedule | str] = None,
+                            kill_leader: bool = True,
+                            autobalance: bool = False) -> dict:
+    """Elastic-range scenario: drive zipfian write-heavy load while the
+    hottest range live-splits, one of its replicas migrates to the least
+    loaded node, and (by default) the range leader is killed mid-migration.
+
+    Every acknowledged write is ledgered (key -> max acked version); after
+    the run the ledger is audited with strong reads — a single lost
+    acknowledged write fails the scenario.  The result block also records
+    write availability through the events, tail latency, the final range
+    table, and whether the migration resolved unaided.
+    """
+    cfg = cfg or ExperimentConfig()
+    if isinstance(schedule, str):
+        schedule = parse_schedule(schedule)
+    sim, cluster = build_spinnaker(cfg, num_keys=_aligned_presplit(cfg, spec))
+    n_base = len(cluster.ranges)
+    loader = cluster.make_client("preload")
+    n_pre = min(cfg.preload_keys or spec.num_keys, cfg.preload_cap,
+                spec.num_keys)
+    _preload(sim, lambda k, cb: loader.put(k, "c", b"x" * spec.value_size,
+                                           cb), n_pre)
+    # zipfian's hottest key is index 0; its range is the one to shed
+    hot_rid = cluster.range_of(key_of(0))
+    if schedule is None:
+        d = cfg.duration
+        lines = [f"at {d * 0.2:.2f}s split range {hot_rid}",
+                 f"at {d * 0.45:.2f}s move range {hot_rid}"]
+        if kill_leader:
+            # mid-migration: right after the move starts, before the
+            # destination can be in-sync and the source retired
+            lines.append(f"at {d * 0.45 + 0.25:.2f}s crash leader of "
+                         f"{hot_rid}")
+            lines.append(f"at {d * 0.8:.2f}s restart crashed")
+        if autobalance:
+            lines.insert(0, "at 0.0s autobalance on")
+        schedule = parse_schedule("\n".join(lines))
+
+    ledger: dict[int, int] = {}
+    adapter = AckLedgerAdapter(cluster.make_client("bench"), ledger,
+                               consistent=True)
+    log, t_start, drv = _drive(sim, adapter, spec, cfg, schedule, cluster,
+                               n_pre)
+    out = _result(log, cfg, "read", "write", schedule, t_start)
+    # ops still in flight when the run ended: with capped-backoff retries
+    # an op stuck on an unavailable range never reaches its retry budget
+    # inside a short run, so it would otherwise vanish from the error count
+    # and leave the availability gate vacuous.  A healthy run carries only
+    # the natural in-flight tail (a handful of ops).
+    stalled = getattr(drv, "outstanding", 0)
+
+    # -- post-run audit ------------------------------------------------------
+    sim.run_for(3.0)          # let in-flight recovery/migration finish
+    cluster.settle(timeout=30.0)
+    auditor = cluster.make_client("audit")
+    lost = []
+    for idx, ver in sorted(ledger.items()):
+        r = auditor.sync_get(key_of(idx), "c", consistent=True)
+        if not r.ok or (r.version or 0) < ver:
+            lost.append({"key": idx, "acked_version": ver,
+                         "read": r.code.value, "read_version": r.version})
+    # writes must land on both sides of every split boundary
+    serving = {}
+    for rid, kr in sorted(cluster.ranges.items()):
+        r = auditor.sync(auditor.put, kr.lo, "c", b"probe")
+        serving[rid] = bool(r.ok)
+    intents = [rid for rid in cluster.ranges
+               if cluster.zk.exists(ranges_mod.migration_path(rid))]
+    non_empty = 0
+    for rid, kr in cluster.ranges.items():
+        rep = cluster.leader_replica(rid)
+        if rep is not None and rep.store.keys_in_range(kr.lo, kr.hi):
+            non_empty += 1
+    w = out["writes"]
+    attempts = w["count"] + w["errors"] + stalled
+    out["rebalance"] = {
+        "n_ranges_start": n_base,
+        "n_ranges_end": len(cluster.ranges),
+        "range_table": {rid: [kr.lo, kr.hi, list(cluster.members[rid])]
+                        for rid, kr in sorted(cluster.ranges.items())},
+        "hot_rid": hot_rid,
+        "acked_writes_ledgered": len(ledger),
+        "lost_acked_writes": lost,
+        "all_ranges_serving_writes": all(serving.values()),
+        "serving": serving,
+        "non_empty_ranges": non_empty,
+        "unresolved_migrations": intents,
+        "stalled_ops_at_end": stalled,
+        "write_availability": (w["count"] / attempts) if attempts else 1.0,
+        "wrong_range_redirects": adapter.client.wrong_range_redirects,
+        "balancer_actions": list(cluster.balancer.actions)
+        if cluster.balancer is not None else [],
+    }
+    return out
+
+
 def run_cassandra_workload(spec: WorkloadSpec,
                            cfg: Optional[ExperimentConfig] = None,
                            quorum: bool = True,
@@ -237,7 +368,8 @@ def run_cassandra_workload(spec: WorkloadSpec,
     _preload(sim, lambda k, cb: loader.write(k, "c", b"x" * spec.value_size,
                                              True, cb), n_pre)
     adapter = CassandraAdapter(cluster.make_client("bench"), quorum=quorum)
-    log, t_start = _drive(sim, adapter, spec, cfg, schedule, cluster, n_pre)
+    log, t_start, _drv = _drive(sim, adapter, spec, cfg, schedule, cluster,
+                                n_pre)
     prefix = "" if quorum else "eventual_"
     return _result(log, cfg, f"{prefix}read", f"{prefix}write", schedule,
                    t_start)

@@ -17,11 +17,18 @@ Grammar (one directive per line, '#' starts a comment):
     at <T>[s] restart crashed          # most recently crashed node
     at <T>[s] partition {i,j,...} | {k,...} [| ...]
     at <T>[s] heal
+    at <T>[s] split range <rid> [at <key>]       # live split (median default)
+    at <T>[s] move range <rid> [from <i>] [to <j>]   # replica migration
+    at <T>[s] autobalance on|off                 # hotspot balancer
 
 `crash leader of <rid>` resolves *at fire time* — whoever leads cohort
 `rid` then is killed, so the same scenario file exercises every failover
-regime regardless of which node won the previous election.  Times are
-absolute sim-time seconds (offset by `install(at=...)`).
+regime regardless of which node won the previous election.  The range
+events likewise resolve at fire time (`move range` picks a follower
+source and an up non-member destination when omitted) and require a
+cluster with elastic range management (Spinnaker); they are recorded as
+honest no-ops elsewhere.  Times are absolute sim-time seconds (offset by
+`install(at=...)`).
 """
 
 from __future__ import annotations
@@ -36,17 +43,26 @@ _CRASH_LEADER = re.compile(r"^crash\s+leader\s+of\s+(\d+)\s*(.*)$")
 _RESTART = re.compile(r"^restart\s+(node\s+\d+|crashed)$")
 _PARTITION = re.compile(r"^partition\s+(.*)$")
 _GROUP = re.compile(r"\{([0-9,\s]*)\}")
+_SPLIT = re.compile(r"^split\s+range\s+(\d+)(?:\s+at\s+(\S+))?$")
+_MOVE = re.compile(
+    r"^move\s+range\s+(\d+)(?:\s+from\s+(\d+))?(?:\s+to\s+(\d+))?$")
+_AUTOBALANCE = re.compile(r"^autobalance\s+(on|off)$")
 
 
 @dataclass(frozen=True)
 class FaultEvent:
     t: float
-    action: str                  # crash | crash_leader | restart | partition | heal
+    action: str   # crash | crash_leader | restart | partition | heal |
+                  # split | move | autobalance
     node: Optional[int] = None
     rid: Optional[int] = None
     lose_disk: bool = False
     expire_session: bool = True
     groups: tuple = ()
+    key: Optional[str] = None    # split point ('split range ... at <key>')
+    src: Optional[int] = None    # move source node
+    dst: Optional[int] = None    # move destination node
+    on: bool = True              # autobalance on/off
 
     def describe(self) -> str:
         if self.action == "crash":
@@ -60,6 +76,15 @@ class FaultEvent:
             return f"t={self.t}: partition " + \
                 "|".join("{" + ",".join(map(str, g)) + "}"
                          for g in self.groups)
+        if self.action == "split":
+            at = f" at {self.key}" if self.key else ""
+            return f"t={self.t}: split range {self.rid}{at}"
+        if self.action == "move":
+            src = f" from {self.src}" if self.src is not None else ""
+            dst = f" to {self.dst}" if self.dst is not None else ""
+            return f"t={self.t}: move range {self.rid}{src}{dst}"
+        if self.action == "autobalance":
+            return f"t={self.t}: autobalance {'on' if self.on else 'off'}"
         return f"t={self.t}: heal"
 
 
@@ -110,6 +135,23 @@ def parse_schedule(text: str) -> "FaultSchedule":
                 raise ValueError(
                     f"line {lineno}: partition needs >=2 groups: {raw!r}")
             events.append(FaultEvent(t, "partition", groups=groups))
+            continue
+        sm = _SPLIT.match(body)
+        if sm:
+            events.append(FaultEvent(t, "split", rid=int(sm.group(1)),
+                                     key=sm.group(2)))
+            continue
+        mm = _MOVE.match(body)
+        if mm:
+            src = int(mm.group(2)) if mm.group(2) is not None else None
+            dst = int(mm.group(3)) if mm.group(3) is not None else None
+            events.append(FaultEvent(t, "move", rid=int(mm.group(1)),
+                                     src=src, dst=dst))
+            continue
+        am = _AUTOBALANCE.match(body)
+        if am:
+            events.append(FaultEvent(t, "autobalance",
+                                     on=am.group(1) == "on"))
             continue
         raise ValueError(f"line {lineno}: cannot parse {raw!r}")
     return FaultSchedule(sorted(events, key=lambda e: e.t))
@@ -166,10 +208,35 @@ class FaultSchedule:
             cluster.net.set_partition(ev.groups)
         elif ev.action == "heal":
             cluster.net.clear_partition()
+        elif ev.action in ("split", "move", "autobalance"):
+            ok = self._fire_range_event(ev, cluster)
+            if not ok:
+                msg = f"{ev.describe()} skipped (not accepted)"
+                self.applied.append(msg)
+                if on_event is not None:
+                    on_event(msg)
+                return
         msg = ev.describe()
         self.applied.append(msg)
         if on_event is not None:
             on_event(msg)
+
+    @staticmethod
+    def _fire_range_event(ev: FaultEvent, cluster) -> bool:
+        """Range-management events need the elastic-range cluster API;
+        record an honest skip on clusters (or states) that lack it."""
+        if ev.action == "split":
+            if not hasattr(cluster, "admin_split"):
+                return False
+            return cluster.admin_split(ev.rid, ev.key)
+        if ev.action == "move":
+            if not hasattr(cluster, "admin_move"):
+                return False
+            return cluster.admin_move(ev.rid, ev.src, ev.dst)
+        if not hasattr(cluster, "set_autobalance"):
+            return False
+        cluster.set_autobalance(ev.on)
+        return True
 
 
 def _takes_expire(cluster) -> bool:

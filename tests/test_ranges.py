@@ -1,0 +1,445 @@
+"""Elastic range management: live splits, replica migration, hotspot
+rebalancing, and dynamic client routing (core/ranges.py)."""
+
+import warnings
+
+import pytest
+
+from repro.core import (ClusterConfig, ErrorCode, Simulator,
+                        SpinnakerCluster, key_of)
+from repro.core import ranges as ranges_mod
+from repro.core.ranges import BalancerConfig
+from repro.core.replica import Role
+from repro.workload import parse_schedule
+
+
+def make_cluster(n=5, seed=0, num_keys=100, **kw):
+    sim = Simulator(seed=seed)
+    cfg = ClusterConfig(n_nodes=n, num_keys=num_keys, **kw)
+    cluster = SpinnakerCluster(sim, cfg)
+    cluster.start()
+    cluster.settle()
+    return sim, cluster
+
+
+def preload(cluster, n, prefix=b"v"):
+    c = cluster.make_client("pre")
+    acked = {}
+    for i in range(n):
+        r = c.sync_put(key_of(i), "c", prefix + str(i).encode())
+        assert r.ok
+        acked[i] = r.version
+    return acked
+
+
+# ---------------------------------------------------------------------- split
+
+def test_live_split_routes_all_keys():
+    sim, cluster = make_cluster()
+    preload(cluster, 100)
+    n_before = len(cluster.ranges)
+    assert cluster.admin_split(0)
+    sim.run_for(2.0)
+    cluster.settle()
+    assert len(cluster.ranges) == n_before + 1
+    child_rid = max(cluster.ranges)
+    # child metadata registered with the parent cohort's members
+    meta = ranges_mod.get_range_meta(cluster.zk, child_rid)
+    assert meta is not None
+    lo, hi, members = meta
+    assert members == cluster.members[0]
+    assert cluster.ranges[0].hi == lo      # contiguous boundary
+    # every key readable and writable after the move
+    c = cluster.make_client()
+    for i in range(100):
+        r = c.sync_get(key_of(i), "c")
+        assert r.ok and r.value == b"v" + str(i).encode(), (i, r)
+    # writes land on both sides of the boundary
+    assert c.sync_put(cluster.ranges[0].lo, "c", b"parent").ok
+    assert c.sync_put(lo, "c", b"child").ok
+    assert cluster.range_of(lo) == child_rid
+
+
+def test_split_uses_median_by_default():
+    sim, cluster = make_cluster(n=3, num_keys=60)
+    preload(cluster, 60)
+    kr = cluster.ranges[0]
+    leader = cluster.leader_replica(0)
+    median = leader.store.median_key(kr.lo, kr.hi)
+    assert cluster.admin_split(0)
+    sim.run_for(2.0)
+    assert cluster.ranges[0].hi == median
+
+
+def test_parent_replica_redirects_moved_keys():
+    sim, cluster = make_cluster()
+    preload(cluster, 100)
+    child_before = set(cluster.ranges)
+    assert cluster.admin_split(0)
+    sim.run_for(2.0)
+    child_rid = (set(cluster.ranges) - child_before).pop()
+    moved_key = cluster.ranges[child_rid].lo
+    leader = cluster.leader_replica(0)
+    out = []
+    leader.client_read(moved_key, "c", True, out.append)
+    assert out and out[0].code == ErrorCode.WRONG_RANGE
+    out2 = []
+    from repro.core.types import OpType, WriteOp
+    leader.client_write(WriteOp(OpType.PUT, moved_key, "c", b"x"),
+                        out2.append)
+    assert out2 and out2[0].code == ErrorCode.WRONG_RANGE
+
+
+def test_no_lost_acked_writes_through_split_under_load():
+    """Writes keep flowing while the split commits; every acknowledged
+    version stays readable afterwards."""
+    sim, cluster = make_cluster(seed=3)
+    acked = preload(cluster, 100)
+    c = cluster.make_client("load")
+    inflight = []
+
+    def put(i):
+        def done(r):
+            if r.ok:
+                acked[i] = max(acked.get(i, 0), r.version)
+            inflight.remove(i)
+        inflight.append(i)
+        c.put(key_of(i), "c", b"post-split-%d" % i, done)
+
+    # pipeline writes across the split point without waiting in between
+    assert cluster.admin_split(0)
+    for i in range(100):
+        put(i)
+        sim.run_for(0.002)
+    sim.run_for(5.0)
+    assert not inflight
+    cluster.settle()
+    reader = cluster.make_client("check")
+    for i, ver in acked.items():
+        r = reader.sync_get(key_of(i), "c")
+        assert r.ok and r.version >= ver, (i, ver, r)
+
+
+def test_timeline_monotonic_across_split():
+    """Session monotonicity survives the key moving to a child range: the
+    client never observes versions going backwards (satellite)."""
+    sim, cluster = make_cluster(seed=4)
+    preload(cluster, 100)
+    c = cluster.make_client("mono")
+    k = key_of(30)            # upper half of range 0's [0, 20) ... range 1
+    rid = cluster.range_of(k)
+    for _ in range(3):
+        assert c.sync_put(k, "c", b"bump").ok
+    # observe the latest version through a monotonic timeline read
+    seen = []
+    while not seen or seen[-1] < 4:  # preload wrote v1; 3 bumps -> v4
+        r = c.sync(c.get, k, "c", False)
+        assert r.ok
+        seen.append(r.version)
+    assert cluster.admin_split(rid, k)   # k becomes the child's first key
+    sim.run_for(2.0)
+    cluster.settle()
+    assert cluster.range_of(k) != rid
+    for _ in range(20):
+        r = c.sync(c.get, k, "c", False)
+        assert r.ok and r.version >= seen[-1], (r.version, seen[-1])
+        seen.append(r.version)
+    assert c.sync_put(k, "c", b"bump5").ok
+    r = c.sync(c.get, k, "c", False)
+    assert r.ok and r.version >= seen[-1]
+
+
+def test_pipelined_conditional_puts_across_split_boundary():
+    """A chain of conditional puts pipelined across the split barrier
+    serializes without spurious VERSION_MISMATCH: versions continue on the
+    child exactly where the parent left off (satellite)."""
+    sim, cluster = make_cluster(seed=5)
+    preload(cluster, 100)
+    k = key_of(10)
+    rid = cluster.range_of(k)
+    c = cluster.make_client("cas")
+    assert c.sync_get(k, "c").version == 1
+    results = []
+    # issue CAS v1->2, split at k, CAS v2->3 — all without draining the sim
+    c.conditional_put(k, "c", b"cas2", 1, results.append)
+    assert cluster.admin_split(rid, k)
+    c.conditional_put(k, "c", b"cas3", 2, results.append)
+    sim.run_for(5.0)
+    assert len(results) == 2
+    assert [r.code for r in results] == [ErrorCode.OK, ErrorCode.OK]
+    assert [r.version for r in results] == [2, 3]
+    cluster.settle()
+    r = c.sync_get(k, "c")
+    assert r.ok and r.version == 3 and r.value == b"cas3"
+    assert cluster.range_of(k) != rid
+
+
+# ------------------------------------------------------------------ migration
+
+def test_replica_migration_snapshot_install():
+    sim, cluster = make_cluster(n=4, seed=1, num_keys=80)
+    preload(cluster, 80)
+    leader = cluster.leader_replica(0)
+    src = [m for m in cluster.members[0] if m != leader.node.node_id][0]
+    assert cluster.admin_move(0, src, 3)
+    sim.run_for(5.0)
+    assert cluster.members[0] == tuple(sorted(
+        set(cluster.members[0]) | {3}))  # dst joined
+    assert src not in cluster.members[0]
+    assert len(cluster.members[0]) == 3
+    assert not cluster.zk.exists(ranges_mod.migration_path(0))
+    assert 0 not in cluster.nodes[src].replicas        # src retired
+    dst_rep = cluster.nodes[3].replicas[0]
+    assert dst_rep.role is Role.FOLLOWER
+    # destination holds the data: kill everyone else in the cohort and
+    # timeline-read from the migrated replica
+    for m in cluster.members[0]:
+        if m != 3:
+            cluster.crash_node(m)
+    sim.run_for(0.5)
+    c = cluster.make_client()
+    r = c.sync(c.get, cluster.ranges[0].lo, "c", False)
+    assert r.ok and r.value.startswith(b"v")
+
+
+def test_leader_kill_mid_migration_recovers_unaided():
+    sim, cluster = make_cluster(n=4, seed=2, num_keys=60)
+    acked = preload(cluster, 60)
+    leader = cluster.leader_replica(0)
+    lid = leader.node.node_id
+    src = [m for m in cluster.members[0] if m != lid][0]
+    assert cluster.admin_move(0, src, 3)
+    sim.run_for(0.2)                     # mid-migration ...
+    cluster.crash_node(lid)              # ... kill the leader
+    sim.run_for(10.0)
+    cluster.settle(timeout=20.0)
+    # the new leader resumed (or cleanly aborted) the migration from the
+    # intent znode: cohort back to 3 members, no intent left
+    assert len(cluster.members[0]) == 3
+    assert not cluster.zk.exists(ranges_mod.migration_path(0))
+    c = cluster.make_client()
+    for i, ver in acked.items():
+        r = c.sync_get(key_of(i), "c")
+        assert r.ok and r.version >= ver, (i, ver, r)
+
+
+def test_migration_guards():
+    sim, cluster = make_cluster(n=4, seed=6, num_keys=40)
+    preload(cluster, 40)
+    leader = cluster.leader_replica(0)
+    lid = leader.node.node_id
+    members = cluster.members[0]
+    # cannot move the leader's own replica, a non-member, or onto a member
+    assert not leader.start_migration(lid, 3)
+    assert not leader.start_migration(3, lid)
+    follower = [m for m in members if m != lid][0]
+    other = [m for m in members if m not in (lid, follower)][0]
+    assert not leader.start_migration(follower, other)
+    # a second concurrent migration is refused
+    assert cluster.admin_move(0, follower, 3)
+    assert not cluster.admin_move(0, other, 3)
+    sim.run_for(5.0)
+    assert not cluster.zk.exists(ranges_mod.migration_path(0))
+
+
+# ---------------------------------------------------- recovery after a split
+
+def test_node_down_through_split_rejoins_both_cohorts():
+    """A node that sleeps through a split reconciles at boot: narrowed
+    parent, a fresh child replica, data via snapshot catch-up."""
+    sim, cluster = make_cluster(seed=7)
+    preload(cluster, 100)
+    victim = [m for m in cluster.members[0]
+              if cluster.leader_replica(0).node.node_id != m][0]
+    cluster.crash_node(victim)
+    sim.run_for(0.5)
+    assert cluster.admin_split(0)
+    sim.run_for(3.0)
+    child_rid = max(cluster.ranges)
+    assert victim in cluster.members[child_rid]
+    cluster.restart_node(victim)
+    sim.run_for(5.0)
+    cluster.settle()
+    node = cluster.nodes[victim]
+    assert child_rid in node.replicas
+    rep = node.replicas[child_rid]
+    assert rep.role in (Role.FOLLOWER, Role.LEADER)
+    # narrowed parent replica on the restarted node
+    assert node.replicas[0].range.hi == cluster.ranges[0].hi
+    # the rejoined replica holds the forked data: serve a timeline read
+    # from it after crashing the other members
+    for m in cluster.members[child_rid]:
+        if m != victim:
+            cluster.crash_node(m)
+    sim.run_for(2.0)
+    c = cluster.make_client()
+    r = c.sync(c.get, cluster.ranges[child_rid].lo, "c", False)
+    assert r.ok and r.value.startswith(b"v")
+
+
+def test_child_cohort_survives_leader_kill():
+    sim, cluster = make_cluster(seed=8)
+    acked = preload(cluster, 100)
+    assert cluster.admin_split(0)
+    sim.run_for(2.0)
+    cluster.settle()
+    child_rid = max(cluster.ranges)
+    child_leader = cluster.leader_replica(child_rid)
+    cluster.crash_node(child_leader.node.node_id)
+    sim.run_for(8.0)
+    cluster.settle(timeout=20.0)
+    c = cluster.make_client()
+    for i, ver in acked.items():
+        r = c.sync_get(key_of(i), "c")
+        assert r.ok and r.version >= ver, (i, ver, r)
+
+
+# ------------------------------------------------------------------ balancer
+
+def test_balancer_splits_hot_range():
+    sim, cluster = make_cluster(seed=9)
+    preload(cluster, 100)
+    cluster.set_autobalance(True, BalancerConfig(
+        period=0.2, split_threshold=100.0, cooldown=0.3,
+        min_node_load=1e9))   # moves disabled; splits only
+    c = cluster.make_client("hot")
+    n_before = len(cluster.ranges)
+    done = [0]
+
+    def hammer(i=0):
+        # hot keys all inside range 0
+        c.put(key_of(i % 15), "c", b"hot", lambda r: done.__setitem__(
+            0, done[0] + 1) or hammer(i + 1))
+
+    for _ in range(4):
+        hammer()
+    sim.run_for(4.0)
+    cluster.set_autobalance(False)
+    assert len(cluster.ranges) > n_before
+    assert any("split" in a for a in cluster.balancer.actions)
+
+
+def test_balancer_moves_replica_off_hot_node():
+    sim, cluster = make_cluster(n=4, seed=10, num_keys=80)
+    preload(cluster, 80)
+    cluster.set_autobalance(True, BalancerConfig(
+        period=0.2, split_threshold=1e9,    # splits disabled; moves only
+        min_node_load=50.0, move_imbalance=1.5, cooldown=0.3))
+    members_before = cluster.members[0]
+    c = cluster.make_client("hot")
+
+    def hammer(i=0):
+        c.put(key_of(i % 10), "c", b"hot",
+              lambda r: hammer(i + 1))
+
+    for _ in range(4):
+        hammer()
+    sim.run_for(6.0)
+    cluster.set_autobalance(False)
+    sim.run_for(3.0)
+    assert any("move" in a for a in cluster.balancer.actions), \
+        cluster.balancer.actions
+    assert cluster.members[0] != members_before
+    assert len(cluster.members[0]) == 3
+
+
+# ------------------------------------------------- client routing + backoff
+
+def test_client_backoff_grows_and_caps():
+    sim, cluster = make_cluster(n=3, num_keys=30)
+    c = cluster.make_client()
+    delays = [c._retry_delay(t) for t in range(12)]
+    # jittered exponential: bounded by 0.5x..1.5x of the capped series
+    for t, d in enumerate(delays):
+        exp = min(c.BACKOFF_CAP, c.BACKOFF_BASE * (2 ** t))
+        assert 0.5 * exp <= d <= 1.5 * exp
+    assert max(delays) <= 1.5 * c.BACKOFF_CAP
+
+
+def test_client_routes_from_cached_range_table():
+    sim, cluster = make_cluster(seed=11)
+    preload(cluster, 100)
+    c = cluster.make_client()
+    assert c.sync_get(key_of(50), "c").ok
+    loads_before = c.range_table.loads
+    for i in range(0, 100, 7):
+        assert c.sync_get(key_of(i), "c").ok
+    assert c.range_table.loads == loads_before   # cache hit throughout
+    # a split invalidates via the version watch; the next op reloads
+    assert cluster.admin_split(0)
+    sim.run_for(2.0)
+    cluster.settle()
+    assert c.sync_get(key_of(0), "c").ok
+    assert c.range_table.loads > loads_before
+
+
+# ------------------------------------------------------------ DSL + plumbing
+
+def test_scenario_dsl_range_events():
+    sched = parse_schedule("""
+        at 1s   split range 0
+        at 2.5s split range 1 at k000000000042
+        at 3s   move range 2 from 1 to 4
+        at 4s   move range 3
+        at 5s   autobalance on
+        at 6s   autobalance off
+    """)
+    acts = [(e.t, e.action) for e in sched.events]
+    assert acts == [(1.0, "split"), (2.5, "split"), (3.0, "move"),
+                    (4.0, "move"), (5.0, "autobalance"),
+                    (6.0, "autobalance")]
+    assert sched.events[1].key == "k000000000042"
+    assert sched.events[2].src == 1 and sched.events[2].dst == 4
+    assert sched.events[3].src is None and sched.events[3].dst is None
+    assert sched.events[4].on and not sched.events[5].on
+
+
+def test_scenario_split_event_fires_on_cluster():
+    sim, cluster = make_cluster(seed=12)
+    preload(cluster, 100)
+    sched = parse_schedule("at 0.5s split range 0")
+    sched.install(sim, cluster)
+    sim.run_for(3.0)
+    assert len(cluster.ranges) == 6
+    assert any("split range 0" in a for a in sched.applied)
+
+
+def test_presplit_alignment_warns(recwarn):
+    from repro.workload import (ExperimentConfig, WorkloadSpec,
+                                run_spinnaker_workload)
+    spec = WorkloadSpec(num_keys=50, value_size=64, read_frac=0.5,
+                        write_frac=0.5, rmw_frac=0, cond_frac=0)
+    cfg = ExperimentConfig(n_nodes=3, disk="mem", n_clients=2,
+                           warmup=0.1, duration=0.5, preload_cap=20)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        r = run_spinnaker_workload(spec, cfg)
+        assert any("aligning cluster pre-split" in str(x.message) for x in w)
+    assert r["writes"]["count"] > 0
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cfg.align_presplit = False
+        run_spinnaker_workload(spec, cfg)
+        assert any("does not match the cluster pre-split" in str(x.message)
+                   for x in w)
+
+
+@pytest.mark.slow
+def test_rebalance_scenario_end_to_end():
+    """Full rebalance run (the bench/smoke gate shape): split + migration
+    + leader kill under zipfian write load, zero lost acked writes."""
+    from repro.workload import (ExperimentConfig, WorkloadSpec,
+                                run_spinnaker_rebalance)
+    spec = WorkloadSpec(num_keys=500, key_dist="zipfian", zipf_theta=0.99,
+                        read_frac=0.2, write_frac=0.8, rmw_frac=0,
+                        cond_frac=0, value_size=512)
+    cfg = ExperimentConfig(n_nodes=5, disk="mem", driver="open",
+                           open_rate=1200, warmup=0.5, duration=8.0,
+                           window=0.5, preload_cap=300)
+    r = run_spinnaker_rebalance(spec, cfg, kill_leader=True)
+    rb = r["rebalance"]
+    assert not rb["lost_acked_writes"]
+    assert rb["n_ranges_end"] > rb["n_ranges_start"]
+    assert rb["all_ranges_serving_writes"]
+    assert not rb["unresolved_migrations"]
+    assert rb["write_availability"] >= 0.99
