@@ -2,10 +2,12 @@
 # Pre-merge gate: a short workload scenario against a 5-node cluster
 # (leader kill included), a fast rebalance gate (a capped zipfian run with
 # one forced live split must keep write availability >= 99% and end with
-# >= 2 non-empty ranges), a perf-regression check against the committed
-# BENCH_spinnaker.json (fig8 write throughput + a capped saturation
-# quick-sweep must not regress >10% / lose the batching edge), plus the
-# tier-1 test suite.
+# >= 2 non-empty ranges), a fast txn gate (cross-range transfer mix with a
+# mid-2PC coordinator kill: zero acknowledged-but-lost transactions, the
+# balance sum must close, abort rate bounded), a perf-regression check
+# against the committed BENCH_spinnaker.json (fig8 write throughput + a
+# capped saturation quick-sweep must not regress >10% / lose the batching
+# edge), plus the tier-1 test suite.
 #
 #     bash benchmarks/smoke.sh
 set -euo pipefail
@@ -54,6 +56,33 @@ assert rb["acked_writes_ledgered"] > 0
 print(f"ok: ranges {rb['n_ranges_start']} -> {rb['n_ranges_end']}, "
       f"write availability {rb['write_availability']:.4f}, "
       f"{rb['acked_writes_ledgered']} acked writes audited, 0 lost")
+EOF
+
+echo "== txn gate: cross-range transfers + mid-2PC coordinator kill =="
+python - <<'EOF'
+import warnings
+warnings.filterwarnings("ignore")
+from repro.workload import (ExperimentConfig, WorkloadSpec,
+                            run_spinnaker_txn)
+
+spec = WorkloadSpec(num_keys=300, key_dist="uniform",
+                    read_frac=0.2, write_frac=0, rmw_frac=0, cond_frac=0,
+                    txn_frac=0.8, value_size=64)
+cfg = ExperimentConfig(n_nodes=5, disk="mem", n_clients=8,
+                       warmup=0.5, duration=4.0, window=0.5, preload_cap=300)
+r = run_spinnaker_txn(spec, cfg, cross_frac=0.5,
+                      schedule="at 1.2s crash txn coordinator\n"
+                               "at 3.0s restart crashed")
+t = r["txn"]
+assert any("crash node" in e for e in r["fault_events"]), r["fault_events"]
+assert not t["lost_acked_txns"], t["lost_acked_txns"]
+assert not t["partial_commit"], (t["balance_read"], t["balance_expected"])
+assert not t["unresolved_intents"] and t["leftover_locks"] == 0
+assert t["txn_abort_rate"] <= 0.25, t["txn_abort_rate"]
+assert t["txn_commits"] > 0 and t["txn2_issued"] > 0
+print(f"ok: {t['acked_txns_ledgered']} acked transfers audited through a "
+      f"mid-2PC coordinator kill, 0 lost, balance closed "
+      f"({t['balance_read']}), abort rate {t['txn_abort_rate']:.3f}")
 EOF
 
 echo "== perf-regression gate vs committed BENCH_spinnaker.json =="

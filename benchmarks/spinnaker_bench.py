@@ -23,6 +23,13 @@ Scenarios:
   is killed mid-migration.  Gates: no lost acknowledged writes, writes
   continuing on both child ranges, the migration resolving unaided, and
   write availability >= 99% through it all;
+- `txn`     — cross-range transactions (PR 4): a balance-transfer mix is
+  run three ways — all single-cohort (the §8.2 fast path), all
+  cross-range (Paxos-backed 2PC), and a mixed run with the 2PC
+  coordinator killed mid-transaction.  Records the cross/local commit
+  latency ratio, the abort rate under contention, and the
+  leader-kill-mid-2PC audit (zero acknowledged-but-lost transactions,
+  zero partial commits — the strong-read balance sum must close);
 - `figs8-10`— figs 8, 9, 10;
 - `all`     — everything above in one JSON artifact;
 - `regress` — re-measure fig8 write throughput and a capped saturation
@@ -47,7 +54,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.workload import (ExperimentConfig, WorkloadSpec,  # noqa: E402
                             run_cassandra_workload, run_spinnaker_rebalance,
-                            run_spinnaker_saturation, run_spinnaker_workload)
+                            run_spinnaker_saturation, run_spinnaker_txn,
+                            run_spinnaker_workload)
 
 LEADER_KILL = """
 # Fig. 9/10: kill whichever node currently leads range 0, mid-load;
@@ -255,6 +263,94 @@ def check_rebalance(r: dict) -> dict:
     }
 
 
+def txn_spec(quick: bool) -> WorkloadSpec:
+    """Uniform read/transfer mix: uniform keys keep CAS contention
+    moderate so the abort-rate gate measures the protocol, not a zipfian
+    hot key; transfers are zero-sum so the balance audit closes."""
+    return WorkloadSpec(
+        num_keys=400 if quick else 2000, key_dist="uniform",
+        read_frac=0.2, write_frac=0.0, rmw_frac=0.0, cond_frac=0.0,
+        txn_frac=0.8, value_size=64)
+
+
+def txn_cfg(quick: bool) -> ExperimentConfig:
+    return ExperimentConfig(
+        n_nodes=5, disk="ssd", seed=3,
+        n_clients=8 if quick else 16,
+        warmup=0.5 if quick else 1.0,
+        duration=4.0 if quick else 12.0,
+        window=0.5, preload_cap=400 if quick else 2000)
+
+
+def _txn_summary(r: dict) -> dict:
+    """Per-run block for the artifact: latency populations + audit."""
+    return {"txn_local": r["txn_local"], "txn_cross": r["txn_cross"],
+            "reads": r["reads"], "throughput": r["throughput"],
+            "txn": r["txn"]}
+
+
+def run_txn(quick: bool) -> dict:
+    spec, cfg = txn_spec(quick), txn_cfg(quick)
+    print("txn: single-cohort fast-path baseline ...", flush=True)
+    local = run_spinnaker_txn(spec, cfg, cross_frac=0.0)
+    print(f"  local p50={local['txn_local']['p50_ms']:.2f}ms "
+          f"(2pc sends: {local['txn']['txn2_issued']})", flush=True)
+    print("txn: all-cross 2PC ...", flush=True)
+    cross = run_spinnaker_txn(spec, cfg, cross_frac=1.0)
+    print(f"  cross p50={cross['txn_cross']['p50_ms']:.2f}ms "
+          f"abort rate {cross['txn']['txn_abort_rate']:.3f}", flush=True)
+    d = cfg.duration
+    sched = (f"at {d * 0.3:.2f}s crash txn coordinator\n"
+             f"at {d * 0.75:.2f}s restart crashed")
+    if not quick:
+        sched += f"\nat {d * 0.55:.2f}s crash txn coordinator"
+    print("txn: mixed run with mid-2PC coordinator kill ...", flush=True)
+    kill = run_spinnaker_txn(spec, cfg, cross_frac=0.5, schedule=sched)
+    ka = kill["txn"]
+    print(f"  kill run: {ka['acked_txns_ledgered']} acked audited, "
+          f"{len(ka['lost_acked_txns'])} lost, partial={ka['partial_commit']}"
+          f", abort rate {ka['txn_abort_rate']:.3f}", flush=True)
+    ratio = cross["txn_cross"]["p50_ms"] / max(local["txn_local"]["p50_ms"],
+                                               1e-9)
+    return {"local": _txn_summary(local), "cross": _txn_summary(cross),
+            "kill": {**_txn_summary(kill),
+                     "fault_events": kill.get("fault_events", []),
+                     "timeline": kill.get("timeline", {})},
+            "cross_local_p50_ratio": ratio}
+
+
+def check_txn(r: dict) -> dict:
+    """Acceptance surface: the fast path must never engage 2PC machinery,
+    the coordinator-kill audit must close (zero acked-but-lost, zero
+    partial commits), the contention abort rate stays bounded, and the
+    cross/local latency ratio is recorded (2PC pays ~one extra consensus
+    round plus the decision)."""
+    ka = r["kill"]["txn"]
+    la = r["local"]["txn"]
+    out = {
+        "fastpath_no_2pc": la["txn2_issued"] == 0
+        and la["server"]["prepares"] == 0,
+        "fastpath_p50_ms": r["local"]["txn_local"]["p50_ms"],
+        "cross_p50_ms": r["cross"]["txn_cross"]["p50_ms"],
+        "cross_local_p50_ratio": r["cross_local_p50_ratio"],
+        "no_lost_acked_txns": not ka["lost_acked_txns"],
+        "no_partial_commit": not ka["partial_commit"],
+        # gates too: a skipped coordinator kill (honest no-op) would make
+        # the zero-lost audit vacuous
+        "killed_mid_2pc": any("crash node" in e
+                              for e in r["kill"]["fault_events"]),
+        "all_intents_resolved": not ka["unresolved_intents"]
+        and ka["leftover_locks"] == 0,
+        "abort_rate": ka["txn_abort_rate"],
+        "abort_rate_ok": ka["txn_abort_rate"] <= 0.25,
+    }
+    out["ok"] = bool(out["fastpath_no_2pc"] and out["no_lost_acked_txns"]
+                     and out["no_partial_commit"] and out["killed_mid_2pc"]
+                     and out["all_intents_resolved"]
+                     and out["abort_rate_ok"])
+    return out
+
+
 def run_failover(quick: bool, consistent_reads: bool) -> dict:
     cfg = base_cfg(quick, seed=1)
     cfg.duration = 8.0 if quick else 30.0
@@ -307,7 +403,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scenario", default="all",
                     choices=["fig8", "fig9", "fig10", "saturation",
-                             "rebalance", "figs8-10", "all", "regress"])
+                             "rebalance", "txn", "figs8-10", "all",
+                             "regress"])
     ap.add_argument("--quick", action="store_true",
                     help="short runs (CI / smoke mode)")
     ap.add_argument("--out", default="BENCH_spinnaker.json")
@@ -334,6 +431,10 @@ def main(argv=None) -> int:
         rec["rebalance"] = run_rebalance(args.quick)
         rec["rebalance_check"] = check_rebalance(rec["rebalance"])
         print(f"  {rec['rebalance_check']}", flush=True)
+    if args.scenario in ("txn", "all"):
+        rec["txn"] = run_txn(args.quick)
+        rec["txn_check"] = check_txn(rec["txn"])
+        print(f"  {rec['txn_check']}", flush=True)
 
     Path(args.out).write_text(json.dumps(rec, indent=2))
     print(f"wrote {args.out}")
@@ -355,6 +456,10 @@ def main(argv=None) -> int:
     if "rebalance_check" in rec and not rec["rebalance_check"]["ok"]:
         print("FAIL: rebalance scenario gate "
               f"{rec['rebalance_check']}")
+        rc = 1
+    if "txn_check" in rec and not rec["txn_check"]["ok"]:
+        print("FAIL: cross-range transaction gate "
+              f"{rec['txn_check']}")
         rc = 1
     return rc
 

@@ -228,6 +228,9 @@ class Client:
         self.leader_cache: dict[int, int] = {}
         self.range_table = RangeTable(cluster.zk)
         self.wrong_range_redirects = 0
+        self.mread_batches = 0       # multi_get fan-outs (one per range)
+        self.txn2_issued = 0         # cross-range (2PC) transaction sends
+        self.lock_retries = 0        # LOCKED replies (no-wait lock policy)
         self._rr = 0
         self.stats = LatencyStats()
         self.stats_by_kind: dict[str, LatencyStats] = {}
@@ -322,35 +325,156 @@ class Client:
     def multi_get(self, pairs: list[tuple[str, str]], consistent: bool,
                   cb: Callable[[list[Result]], None],
                   monotonic: bool = False) -> None:
-        """Batched read: issue every (key, colname) get concurrently and
-        deliver one ordered list of Results when the last one lands.
-
-        One network round-trip per distinct target still happens under the
-        hood (ranges live on different cohorts), but the client pays the
-        fan-out latency once instead of serializing it."""
+        """Range-aware batched read: keys are grouped by the cached range
+        table and each group goes out as ONE `mread` message to its
+        cohort (leader for strong, round-robin replica for timeline) —
+        the fan-out is per *range*, not per key, so both the client and
+        the server pay one message overhead per cohort.  Per-key
+        WRONG_RANGE redirects re-group just the moved keys; group-level
+        failures (leader change, timeout) retry the whole group."""
         if not pairs:
             cb([])
             return
         results: list[Optional[Result]] = [None] * len(pairs)
         pending = [len(pairs)]
+        t0 = self.sim.now
 
-        def one(i: int):
-            def got(res: Result):
-                results[i] = res
-                pending[0] -= 1
-                if pending[0] == 0:
-                    cb(results)  # type: ignore[arg-type]
-            return got
+        def settle(i: int, res: Result, record: bool) -> None:
+            if record:
+                res.latency = self.sim.now - t0
+                if res.code != ErrorCode.TIMEOUT:
+                    # retry-exhausted timeouts are reported (op_hook,
+                    # errors) but kept out of the latency population,
+                    # matching the single-op path
+                    self.stats.add(res.latency)
+                    self.stats_by_kind.setdefault(
+                        "read", LatencyStats()).add(res.latency)
+                if self.op_hook is not None:
+                    self.op_hook("read", res)
+            results[i] = res
+            pending[0] -= 1
+            if pending[0] == 0:
+                cb(results)  # type: ignore[arg-type]
 
-        for i, (key, colname) in enumerate(pairs):
-            self.get(key, colname, consistent, one(i), monotonic=monotonic)
+        def deliver(i: int, res: Result) -> None:
+            key, colname = pairs[i]
+            if monotonic and not consistent and res.ok \
+                    and res.version is not None:
+                seen = self._session_seen.get((key, colname), -1)
+                if res.version < seen:
+                    # stale replica: fall back to the single-get retry path
+                    # (it records its own stats)
+                    self.get(key, colname, False,
+                             lambda r, _i=i: settle(_i, r, False),
+                             monotonic=True)
+                    return
+                self._session_seen[(key, colname)] = max(seen, res.version)
+            settle(i, res, True)
+
+        self._mread([(i, k, c) for i, (k, c) in enumerate(pairs)],
+                    consistent, deliver, tries=0)
+
+    # per-key retryable mread results (reads never bounce on locks —
+    # strong reads of locked keys defer server-side instead)
+    _RETRY_CODES = (ErrorCode.NOT_LEADER, ErrorCode.UNAVAILABLE,
+                    ErrorCode.WRONG_RANGE)
+
+    def _mread(self, items: list[tuple[int, str, str]], consistent: bool,
+               deliver: Callable, tries: int) -> None:
+        """Group `items` ((idx, key, colname)) by range and issue one
+        batched read per group; re-invoked with the residue on retries."""
+        if tries > self.MAX_RETRIES:
+            for i, _k, _c in items:
+                self.errors += 1
+                deliver(i, Result(ErrorCode.TIMEOUT))
+            return
+        groups: dict[int, list[tuple[int, str, str]]] = {}
+        stale: list[tuple[int, str, str]] = []
+        for it in items:
+            rid = self.range_table.lookup(it[1])
+            if rid is None:
+                stale.append(it)
+            else:
+                groups.setdefault(rid, []).append(it)
+        if stale:
+            self.range_table.invalidate()
+            self.sim.schedule(self._retry_delay(tries), self._mread, stale,
+                              consistent, deliver, tries + 1)
+        for rid, its in groups.items():
+            self._mread_group(rid, its, consistent, deliver, tries)
+
+    def _mread_group(self, rid: int, items: list[tuple[int, str, str]],
+                     consistent: bool, deliver: Callable,
+                     tries: int) -> None:
+        target = self._lookup_leader(rid) if consistent \
+            else self._any_replica(rid)
+        if target is None:
+            self.sim.schedule(self._retry_delay(tries), self._mread, items,
+                              consistent, deliver, tries + 1)
+            return
+        self.mread_batches += 1
+        settled = [False]
+
+        def retry(residue: list, saw_wrong_range: bool,
+                  leader_hint: Optional[int]) -> None:
+            self.leader_cache.pop(rid, None)
+            if saw_wrong_range:
+                self.wrong_range_redirects += 1
+                self.range_table.invalidate()
+            if leader_hint is not None:
+                self.leader_cache[rid] = leader_hint
+            self.sim.schedule(self._retry_delay(tries), self._mread, residue,
+                              consistent, deliver, tries + 1)
+
+        def on_reply(res) -> None:
+            if settled[0]:
+                return
+            settled[0] = True
+            timeout_ev.cancel()
+            if res is None or isinstance(res, Result):
+                # whole-group gate failure (or dead target): retry all
+                wrong = res is not None and res.code == ErrorCode.WRONG_RANGE
+                hint = res.leader_hint if res is not None \
+                    and res.code == ErrorCode.NOT_LEADER else None
+                retry(items, wrong, hint)
+                return
+            redo: list[tuple[int, str, str]] = []
+            wrong = False
+            for it, r in zip(items, res):
+                if r.code in self._RETRY_CODES:
+                    redo.append(it)
+                    wrong = wrong or r.code == ErrorCode.WRONG_RANGE
+                else:
+                    deliver(it[0], r)
+            if redo:
+                retry(redo, wrong, None)
+
+        def on_timeout() -> None:
+            if settled[0]:
+                return
+            settled[0] = True
+            retry(items, False, None)
+
+        timeout_ev = self.sim.schedule(self.ATTEMPT_TIMEOUT, on_timeout)
+        payload = dict(pairs=[(k, c) for _i, k, c in items],
+                       consistent=consistent,
+                       reply=self._reply_via_net(target, on_reply))
+        node = self.cluster.nodes[target]
+        self.cluster.net.send(self.id, target, node.handle_client, rid,
+                              "mread", payload,
+                              nbytes=200 + 64 * len(items),
+                              cross_switch=True)
 
     def transaction(self, ops: list[WriteOp], cb: Callable) -> None:
-        """Multi-operation transaction (§8.2): scope limited to a single
-        cohort, exactly as the paper limits transactions to one node."""
-        rids = {self.range_table.lookup(op.key) for op in ops}
-        if len(rids) != 1:
-            cb(Result(ErrorCode.UNAVAILABLE))
+        """Multi-operation transaction.  Single-cohort op sets keep the
+        paper's §8.2 fast path untouched (one Paxos round, no locks, no
+        2PC); op sets spanning ranges are partitioned via the cached
+        range table and run through the Paxos-backed 2PC coordinator
+        (core/txn.py) — the leader of the first op's range coordinates.
+        Groups are recomputed on every retry so WRONG_RANGE redirects
+        chase live splits."""
+        if not ops:
+            cb(Result(ErrorCode.OK))
             return
         self._op("txn", ops[0].key, dict(ops=ops), cb, consistent=True,
                  t0=self.sim.now, tries=0)
@@ -366,6 +490,22 @@ class Client:
             cb(res)
             return
         rid = self.range_table.lookup(key)
+        wire_kind, payload_kw = kind, kw
+        if kind == "txn" and rid is not None:
+            # partition the op set by range — recomputed per attempt so
+            # redirects chase live splits.  One range: §8.2 fast path.
+            # Several: 2PC via the first range's leader (core/txn.py).
+            groups: dict[int, list[WriteOp]] = {}
+            for op in kw["ops"]:
+                r = self.range_table.lookup(op.key)
+                if r is None:
+                    rid = None
+                    break
+                groups.setdefault(r, []).append(op)
+            if rid is not None and len(groups) > 1:
+                wire_kind = "txn2"
+                payload_kw = dict(groups=groups)
+                self.txn2_issued += 1
         if kind == "read" and not consistent:
             target = self._any_replica(rid) if rid is not None else None
         else:
@@ -397,9 +537,12 @@ class Client:
                 return
             settled[0] = True
             timeout_ev.cancel()
+            if res is not None and res.code == ErrorCode.LOCKED:
+                self.lock_retries += 1
             if res is None or res.code in (ErrorCode.NOT_LEADER,
                                            ErrorCode.UNAVAILABLE,
-                                           ErrorCode.WRONG_RANGE):
+                                           ErrorCode.WRONG_RANGE,
+                                           ErrorCode.LOCKED):
                 retry(res)
                 return
             res.latency = self.sim.now - t0
@@ -418,16 +561,23 @@ class Client:
 
         timeout_ev = self.sim.schedule(self.ATTEMPT_TIMEOUT, on_timeout)
 
-        payload = dict(kw)
+        payload = dict(payload_kw)
         payload["reply"] = self._reply_via_net(target, on_reply)
         node = self.cluster.nodes[target]
-        nbytes = 4200 if kind == "write" else 300
-        self.cluster.net.send(self.id, target, node.handle_client, rid, kind,
-                              payload, nbytes=nbytes, cross_switch=True)
+        nbytes = 4200 if kind in ("write", "txn") else 300
+        self.cluster.net.send(self.id, target, node.handle_client, rid,
+                              wire_kind, payload, nbytes=nbytes,
+                              cross_switch=True)
 
     def _reply_via_net(self, src_node: int, cb: Callable) -> Callable:
-        def reply(res: Optional[Result]):
-            nbytes = 4200 if res is not None and res.value is not None else 200
+        def reply(res):
+            if isinstance(res, list):   # batched mread reply
+                nbytes = 200 + sum(
+                    4200 if r is not None and r.value is not None else 64
+                    for r in res)
+            else:
+                nbytes = 4200 if res is not None and res.value is not None \
+                    else 200
             self.cluster.net.send(src_node, self.id, cb, res, nbytes=nbytes,
                                   cross_switch=True)
         return reply

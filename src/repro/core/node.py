@@ -38,6 +38,12 @@ CPU_COST = {
     "on_follower_state": (20e-6, 0.0),
     "on_catchup_data": (24e-6, 6e-6),
     "on_catchup_synced": (20e-6, 0.0),
+    # 2PC traffic (core/txn.py): prepares carry per-op payload, the
+    # control messages are small fixed-cost singles
+    "on_txn_prepare": (20e-6, 12e-6),
+    "on_txn_vote": (10e-6, 0.0),
+    "on_txn_decide": (12e-6, 0.0),
+    "on_txn_decided_ack": (8e-6, 0.0),
     "default": (10e-6, 0.0),
 }
 
@@ -46,6 +52,8 @@ def message_cost(handler: str, kw: dict) -> float:
     """CPU service time for one message: overhead + marginal * records."""
     base, per_rec = CPU_COST.get(handler, CPU_COST["default"])
     records = kw.get("records")
+    if not isinstance(records, list):
+        records = kw.get("ops")
     n = len(records) if isinstance(records, list) else 1
     return base + per_rec * n
 
@@ -255,13 +263,23 @@ class SpinnakerNode:
         if replica is None:
             kw["reply"](None)
             return
-        base, per_rec = CPU_COST["client_read" if kind == "read"
+        base, per_rec = CPU_COST["client_read" if kind in ("read", "mread")
                                  else "client_write"]
         if kind == "read":
             self.cpu.submit(base + per_rec, lambda: replica.client_read(**kw))
+        elif kind == "mread":
+            # batched read service: one message overhead for the group
+            n = max(1, len(kw.get("pairs", ())))
+            self.cpu.submit(base + per_rec * n,
+                            lambda: replica.client_multi_read(**kw))
         elif kind == "txn":
             n = max(1, len(kw.get("ops", ())))
             self.cpu.submit(base + per_rec * n,
                             lambda: replica.client_transaction(**kw))
+        elif kind == "txn2":
+            # cross-range transaction: this leader coordinates 2PC
+            n = max(1, sum(len(ops) for ops in kw.get("groups", {}).values()))
+            self.cpu.submit(base + per_rec * n,
+                            lambda: replica.client_txn2(**kw))
         else:
             self.cpu.submit(base + per_rec, lambda: replica.client_write(**kw))

@@ -44,8 +44,10 @@ from typing import Callable, Optional, TYPE_CHECKING
 from . import ranges as ranges_mod
 from .coordination import NodeExists, NoNode
 from .storage import Store
+from .txn import TxnManager
 from .types import (CommitMarker, ErrorCode, KeyRange, LogRecord, OpType,
-                    Result, WriteOp, fmt_lsn, lsn_epoch, lsn_seq, make_lsn)
+                    Result, TXN_OPS, WriteOp, fmt_lsn, lsn_epoch, lsn_seq,
+                    make_lsn)
 
 if TYPE_CHECKING:
     from .node import SpinnakerNode
@@ -75,6 +77,9 @@ class ReplicaConfig:
     batch_max_records: int = 32
     batch_max_bytes: int = 256 << 10
     batch_deadline: float = 0.5e-3      # max extra latency bought for batching
+    # -- cross-range 2PC (core/txn.py) -------------------------------------
+    txn_prepare_timeout: float = 0.5    # coordinator aborts stuck prepares
+    txn_tick: float = 0.15              # resolution/resend/re-vote period
 
 
 class CohortReplica:
@@ -114,6 +119,9 @@ class CohortReplica:
         self.pending_split: Optional[tuple[str, int]] = None  # (key, child rid)
         self._pending_member_change = False
         self._watched_peers: set[int] = set()
+        # cross-range 2PC state machine (lock table, prepared set,
+        # coordinator role) — core/txn.py
+        self.txn = TxnManager(self)
 
         # leader-side batch accumulator (records queued + WAL-buffered but
         # not yet covered by a force / proposed to followers)
@@ -163,6 +171,11 @@ class CohortReplica:
         for r in records:
             if self.store.flushed_upto < r.lsn <= self.cmt:
                 self.store.apply(r)
+        # rebuild 2PC state (prepared txns + locks, logged decisions) from
+        # the same scan — a leader promoted after this restart inherits
+        # them from the log, not from anyone's memory
+        self.txn.reset()
+        self.txn.recover(records, self.cmt, self.store.flushed_upto)
         # drop cells outside our range: a SPLIT applied in a prior life
         # detached them, but replaying the shared log re-admits them
         self.store.restrict(self.range.lo, self.range.hi)
@@ -185,6 +198,7 @@ class CohortReplica:
             self._commit_timer.cancel()
             self._commit_timer = None
         self._reset_batch()
+        self.txn.stop()
 
     def _reset_batch(self) -> None:
         """Drop the accumulated (not yet proposed) batch.  The records stay
@@ -366,6 +380,11 @@ class CohortReplica:
                 self.pending_split = (rec.key, rec.columns[0][1])
             elif rec.op is OpType.MEMBER_CHANGE:
                 self._pending_member_change = True
+            elif rec.op in TXN_OPS:
+                # an in-flight prepare must keep its locks gating writes
+                # across the regime change; in-flight resolutions keep
+                # their txid marked so decides are not double-proposed
+                self.txn.stage_from_record(rec)
             else:
                 for colname, _value, version in rec.columns:
                     self.proposed_version[(rec.key, colname)] = version
@@ -434,6 +453,7 @@ class CohortReplica:
             for op, cb in self.blocked_writes:
                 cb(Result(ErrorCode.NOT_LEADER, leader_hint=self.leader_id))
             self.blocked_writes.clear()
+            self.txn.on_step_down()
 
     def _drop_uncommitted_tail(self) -> None:
         """Entering a new regime: pending writes in (cmt, lst] are ambiguous.
@@ -446,6 +466,7 @@ class CohortReplica:
         for lsn in list(self.pending_reply):
             cb = self.pending_reply.pop(lsn)
             cb(Result(ErrorCode.UNAVAILABLE))
+        self.txn.drop_uncommitted()
 
     # --- leader side: follower catch-up (§6.1 + Fig. 6 lines 3-8) ------------
     def on_follower_state(self, epoch: int, follower: int, f_cmt: int,
@@ -470,13 +491,15 @@ class CohortReplica:
         recs = self.node.wal.records_between(self.rid, f_cmt, target)
         if recs is None:
             # log rolled over: source from SSTables (§6.1), synthesising one
-            # record per surviving cell
+            # record per surviving cell — plus any unresolved 2PC records,
+            # which carry prepared/decision state data cells cannot
             cells = self.store.cells_with_lsn_above(f_cmt)
             recs = [LogRecord(self.rid, cell.lsn,
                               OpType.DELETE if cell.deleted else OpType.PUT,
                               key, ((colname, cell.value, cell.version),))
                     for key, colname, cell in cells
                     if cell.lsn <= target]
+            recs.extend(self.txn.catchup_extras(target))
             recs.sort(key=lambda r: r.lsn)
         nbytes = 128 + sum(r.nbytes() for r in recs)
         self._send(follower, "on_catchup_data", nbytes=nbytes,
@@ -541,6 +564,9 @@ class CohortReplica:
             tuple(sorted((self.node.node_id,) + self.peers)))
         self.node.cluster.on_range_table_changed()
         self.node.sim.schedule(0.0, self._check_migration)
+        # resume 2PC duties: presume-abort orphan intents we coordinate,
+        # re-drive logged decisions, re-vote in-doubt prepares
+        self.node.sim.schedule(0.0, self.txn.on_leader_open)
         blocked, self.blocked_writes = self.blocked_writes, []
         for op, cb in blocked:
             if isinstance(op, list):                # blocked transaction
@@ -618,6 +644,12 @@ class CohortReplica:
         if not self.open_for_writes:
             self.blocked_writes.append((op, reply))
             return
+        if self.txn.lock_owner(op.key) is not None:
+            # held by an in-flight cross-range transaction: no-wait policy
+            # (core/txn.py) — refuse now, the client's backoff retries
+            self.txn.lock_conflicts += 1
+            reply(Result(ErrorCode.LOCKED))
+            return
         # conditional check against the latest *proposed* version so
         # pipelined writes to one row serialize correctly (§5.1)
         cur = self.proposed_version.get((op.key, op.colname))
@@ -643,6 +675,21 @@ class CohortReplica:
         self.writes_served += 1
         self._batch_append(rec)
         self._maybe_flush_batch()
+
+    def propose_record(self, op: OpType, key: str, columns: tuple = (),
+                       txn=None) -> LogRecord:
+        """Mint an LSN for a single control record (range op / 2PC record)
+        and admit it to the replication pipeline: unresolved queue + batch
+        accumulator + flush.  One place for the admission invariants that
+        client_write spells out inline for data records."""
+        lsn = make_lsn(self.epoch, self._next_seq)
+        self._next_seq += 1
+        rec = LogRecord(self.rid, lsn, op, key, columns, txn=txn)
+        self.lst = max(self.lst, lsn)
+        self.queue[lsn] = rec
+        self._batch_append(rec)
+        self._maybe_flush_batch()
+        return rec
 
     # --- leader-side proposal batching (§5 "batches writes", §C) -----------
     def _batch_append(self, rec: LogRecord) -> None:
@@ -719,6 +766,10 @@ class CohortReplica:
             return
         if not self.open_for_writes:
             self.blocked_writes.append((ops, reply))
+            return
+        if self.txn.lock_conflict({op.key for op in ops}):
+            self.txn.lock_conflicts += 1
+            reply(Result(ErrorCode.LOCKED))
             return
         # validate every conditional against latest proposed state FIRST —
         # any mismatch aborts the whole transaction with nothing proposed
@@ -879,6 +930,11 @@ class CohortReplica:
                 self._apply_member_change(rec)
                 if self.role is Role.OFFLINE:
                     return   # the change retired this very replica
+            elif rec.op in TXN_OPS:
+                # 2PC state transition (core/txn.py): every replica applies
+                # it at the same log position — prepares install locks +
+                # staged writes, commits make them visible atomically
+                self.txn.apply_record(rec)
             else:
                 self.store.apply(rec)
             self.commits += 1
@@ -905,6 +961,11 @@ class CohortReplica:
         if self.pending_split is not None or self._pending_member_change \
                 or self.zk.exists(ranges_mod.migration_path(self.rid)):
             return False
+        if self.txn.has_participant_state():
+            # an unresolved 2PC transaction has staged writes pinned to
+            # keys of this range; a split barrier could detach them away
+            # from the replica holding the prepared state
+            return False
         if split_key is None:
             split_key = self.store.median_key(self.range.lo, self.range.hi)
         if split_key is None or split_key <= self.range.lo \
@@ -913,15 +974,9 @@ class CohortReplica:
         child_rid = ranges_mod.alloc_range_id(
             self.zk, self.node.cluster.n_base_ranges)
         ranges_mod.seed_child_epoch(self.zk, child_rid, self.epoch)
-        lsn = make_lsn(self.epoch, self._next_seq)
-        self._next_seq += 1
-        rec = LogRecord(self.rid, lsn, OpType.SPLIT, split_key,
-                        (("child_rid", child_rid, 0),))
         self.pending_split = (split_key, child_rid)
-        self.lst = max(self.lst, lsn)
-        self.queue[lsn] = rec
-        self._batch_append(rec)
-        self._maybe_flush_batch()
+        self.propose_record(OpType.SPLIT, split_key,
+                            (("child_rid", child_rid, 0),))
         self.log(f"SPLIT proposed at {split_key!r} -> child r{child_rid}")
         return True
 
@@ -936,15 +991,9 @@ class CohortReplica:
         members = tuple(sorted(set(members)))
         if self.node.node_id not in members or len(members) < 2:
             return False
-        lsn = make_lsn(self.epoch, self._next_seq)
-        self._next_seq += 1
-        rec = LogRecord(self.rid, lsn, OpType.MEMBER_CHANGE, "",
-                        (("members", members, 0),))
         self._pending_member_change = True
-        self.lst = max(self.lst, lsn)
-        self.queue[lsn] = rec
-        self._batch_append(rec)
-        self._maybe_flush_batch()
+        self.propose_record(OpType.MEMBER_CHANGE, "",
+                            (("members", members, 0),))
         self.log(f"MEMBER_CHANGE proposed: {members}")
         return True
 
@@ -1152,19 +1201,22 @@ class CohortReplica:
             self.node.wal.append(CommitMarker(self.rid, self.cmt), force=False)
 
     # ===================================================== reads (§3, §5)
-    def client_read(self, key: str, colname: str, consistent: bool,
-                    reply: Callable) -> None:
+    def _read_gate(self, consistent: bool) -> Optional[Result]:
+        """Role/session gate shared by single and batched reads."""
         if consistent:
             # strong reads are served only by a live leader (§5)
             if self.role is not Role.LEADER or not self.node.has_session():
-                reply(Result(ErrorCode.NOT_LEADER, leader_hint=self.leader_id))
-                return
+                return Result(ErrorCode.NOT_LEADER,
+                              leader_hint=self.leader_id)
         else:
             # timeline reads: any replica with a recovered store (§8.1 —
             # available with just 1 node up)
             if self.role is Role.OFFLINE:
-                reply(Result(ErrorCode.UNAVAILABLE))
-                return
+                return Result(ErrorCode.UNAVAILABLE)
+        return None
+
+    def _read_one(self, key: str, colname: str, consistent: bool,
+                  reply: Callable) -> None:
         if not self.range.contains(key):
             # the key moved to a child range (split narrowed this range);
             # the client must refresh its range table.  A merely *pending*
@@ -1172,6 +1224,14 @@ class CohortReplica:
             # barrier only has to keep writes from landing above it.
             reply(Result(ErrorCode.WRONG_RANGE))
             return
+        if consistent:
+            owner = self.txn.lock_owner(key)
+            if owner is not None:
+                # mid-2PC key: defer until the transaction resolves so a
+                # strong read never observes in-doubt state (readers hold
+                # no locks, so waiting cannot deadlock)
+                self.txn.defer_read(owner, key, colname, reply)
+                return
         self.reads_served += 1
         # Store.get contract: deletes surface as tombstone cells, not None
         # — report NOT_FOUND but keep the tombstone's version so clients
@@ -1183,3 +1243,54 @@ class CohortReplica:
                          version=cell.version if cell else 0))
         else:
             reply(Result(ErrorCode.OK, value=cell.value, version=cell.version))
+
+    def client_read(self, key: str, colname: str, consistent: bool,
+                    reply: Callable) -> None:
+        gate = self._read_gate(consistent)
+        if gate is not None:
+            reply(gate)
+            return
+        self._read_one(key, colname, consistent, reply)
+
+    def client_multi_read(self, pairs: list[tuple[str, str]],
+                          consistent: bool, reply: Callable) -> None:
+        """Batched read service: one message covers every (key, colname)
+        this range serves for a client `multi_get` — the read-side
+        analogue of proposal batching (per-message CPU overhead is paid
+        once for the batch).  Replies with an ordered list of Results;
+        a single Result means a whole-batch gate failure (retry/redirect).
+        Individual deferred reads (2PC locks) hold only their own slot."""
+        gate = self._read_gate(consistent)
+        if gate is not None:
+            reply(gate)
+            return
+        results: list[Optional[Result]] = [None] * len(pairs)
+        pending = [len(pairs)]
+
+        def one(i: int) -> Callable:
+            def got(res: Result) -> None:
+                results[i] = res
+                pending[0] -= 1
+                if pending[0] == 0:
+                    reply(results)
+            return got
+
+        for i, (key, colname) in enumerate(pairs):
+            self._read_one(key, colname, consistent, one(i))
+
+    # ================================== cross-range 2PC (core/txn.py)
+    def client_txn2(self, groups: dict, reply: Callable) -> None:
+        self.txn.client_txn2(groups, reply)
+
+    def on_txn_prepare(self, txid: str, coord_rid: int, ops: list) -> None:
+        self.txn.on_txn_prepare(txid, coord_rid, ops)
+
+    def on_txn_vote(self, txid: str, prid: int, ok: bool, versions,
+                    reason: str) -> None:
+        self.txn.on_txn_vote(txid, prid, ok, versions, reason)
+
+    def on_txn_decide(self, txid: str, coord_rid: int, commit: bool) -> None:
+        self.txn.on_txn_decide(txid, coord_rid, commit)
+
+    def on_txn_decided_ack(self, txid: str, prid: int) -> None:
+        self.txn.on_txn_decided_ack(txid, prid)

@@ -12,7 +12,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Iterator, Optional
 
-from .types import Cell, LogRecord, OpType, RANGE_OPS
+from .types import Cell, CONTROL_OPS, LogRecord, OpType
 
 
 def _in_range(key: str, lo: str, hi: str) -> bool:
@@ -93,8 +93,8 @@ class Store:
 
     # -- write path -----------------------------------------------------------
     def apply(self, rec: LogRecord) -> None:
-        if rec.op in RANGE_OPS:
-            return  # range-management barriers carry no row data
+        if rec.op in CONTROL_OPS:
+            return  # range/txn control records carry no direct row data
         self.memtable.apply(rec)
 
     def maybe_flush(self, committed_lsn: int) -> Optional[int]:

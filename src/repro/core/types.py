@@ -48,8 +48,21 @@ class OpType(enum.Enum):
     # them); CohortReplica._apply_committed intercepts them instead.
     SPLIT = "split"                  # key = split point; columns carry child rid
     MEMBER_CHANGE = "member_change"  # columns carry the new member tuple
+    # cross-range 2PC records (core/txn.py): every transaction state
+    # transition is made durable through the same pipeline.  PREPARE
+    # stages the participant's writes + locks; COMMIT/ABORT resolve them;
+    # DECISION is the coordinator's logged commit point.  Like range ops
+    # they bypass the memtable and are intercepted on apply.
+    TXN_PREPARE = "txn_prepare"      # key = txid; `txn` carries staged writes
+    TXN_COMMIT = "txn_commit"        # key = txid
+    TXN_ABORT = "txn_abort"          # key = txid
+    TXN_DECISION = "txn_decision"    # key = txid; coordinator-side record
 
 RANGE_OPS = (OpType.SPLIT, OpType.MEMBER_CHANGE)
+TXN_OPS = (OpType.TXN_PREPARE, OpType.TXN_COMMIT, OpType.TXN_ABORT,
+           OpType.TXN_DECISION)
+# ops intercepted by the replica instead of applied to the memtable
+CONTROL_OPS = RANGE_OPS + TXN_OPS
 
 
 @dataclass(frozen=True)
@@ -79,11 +92,24 @@ class LogRecord:
     key: str
     columns: tuple[tuple[str, Any, int], ...]  # (colname, value, version); value None => tombstone
     txn_tail: int = 0
+    # 2PC payload (core/txn.py): TXN_PREPARE carries
+    # (txid, coord_rid, staged) where staged = ((key, cols), ...);
+    # TXN_COMMIT/TXN_ABORT carry (txid,); TXN_DECISION carries
+    # (txid, outcome, participant_rids)
+    txn: Any = None
 
     def nbytes(self) -> int:
         n = 64
         for c, v, _ in self.columns:
             n += len(c) + (len(v) if isinstance(v, (bytes, str)) else 16)
+        if self.op is OpType.TXN_PREPARE and self.txn is not None:
+            n += 48
+            for key, cols in self.txn[2]:
+                n += len(key) + sum(
+                    len(c) + (len(v) if isinstance(v, (bytes, str)) else 16)
+                    for c, v, _ in cols)
+        elif self.txn is not None:
+            n += 48
         return n
 
 
@@ -114,6 +140,10 @@ class ErrorCode(enum.Enum):
     # moved to a child range, or the replica's range narrowed after a
     # split); the client must refresh its cached range table and re-route
     WRONG_RANGE = "wrong_range"
+    # the key is locked by an in-flight cross-range transaction (no-wait
+    # deadlock avoidance, core/txn.py): retryable — the lock clears as
+    # soon as the owning transaction resolves
+    LOCKED = "locked"
 
 
 @dataclass

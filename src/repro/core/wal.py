@@ -49,6 +49,10 @@ class WAL:
         self.flushed_upto: dict[int, int] = {}
         # GC low-water mark: durable entries with index < gc_index discarded
         self._gc_dropped_upto: dict[int, int] = {}
+        # per-range GC floor (core/txn.py): records at or above the floor
+        # are pinned — an unresolved 2PC prepare/decision must survive in
+        # the log until it resolves, whatever the SSTable watermark says
+        self.gc_floor: dict[int, int] = {}
 
         # Volatile state (lost on crash):
         self._buffer: list[_Pending] = []
@@ -137,6 +141,15 @@ class WAL:
         self._gc_dropped_upto[range_id] = max(
             self._gc_dropped_upto.get(range_id, 0), fork_lsn)
 
+    def set_gc_floor(self, range_id: int, lsn: Optional[int]) -> None:
+        """Pin (or release, with None) a range's GC floor: durable records
+        with `lsn >= floor` are never garbage-collected.  Maintained by the
+        transaction manager around unresolved 2PC state."""
+        if lsn is None:
+            self.gc_floor.pop(range_id, None)
+        else:
+            self.gc_floor[range_id] = lsn
+
     def forget_range(self, range_id: int) -> None:
         """Drop a range's log state after its replica left this node
         (migration retire): records, markers, and watermarks."""
@@ -149,6 +162,7 @@ class WAL:
         self.skipped.pop(range_id, None)
         self.flushed_upto.pop(range_id, None)
         self._gc_dropped_upto.pop(range_id, None)
+        self.gc_floor.pop(range_id, None)
 
     # -- logical truncation ---------------------------------------------------
     def logically_truncate(self, range_id: int, lsns: Iterable[int]) -> None:
@@ -187,7 +201,8 @@ class WAL:
         kept_bytes = 0
         for e in self.durable:
             if isinstance(e, LogRecord):
-                fl = self.flushed_upto.get(e.range_id, 0)
+                fl = min(self.flushed_upto.get(e.range_id, 0),
+                         self.gc_floor.get(e.range_id, 1 << 62) - 1)
                 if e.lsn <= fl:
                     self._gc_dropped_upto[e.range_id] = max(
                         self._gc_dropped_upto.get(e.range_id, 0), e.lsn)

@@ -15,13 +15,13 @@ Layers:
 """
 
 from .drivers import (AckLedgerAdapter, CassandraAdapter, ClosedLoopDriver,
-                      OpenLoopDriver, SpinnakerAdapter)
+                      OpenLoopDriver, SpinnakerAdapter, TxnAdapter)
 from .generators import Op, OpKind, OpStream, WorkloadSpec
 from .metrics import LatencyHistogram, OpLog, WindowSummary
 from .scenario import FaultEvent, FaultSchedule, parse_schedule
 from .experiment import (ExperimentConfig, run_cassandra_workload,
                          run_spinnaker_rebalance, run_spinnaker_saturation,
-                         run_spinnaker_workload)
+                         run_spinnaker_txn, run_spinnaker_workload)
 
 __all__ = [
     "AckLedgerAdapter",
@@ -37,11 +37,13 @@ __all__ = [
     "OpenLoopDriver",
     "OpStream",
     "SpinnakerAdapter",
+    "TxnAdapter",
     "WindowSummary",
     "WorkloadSpec",
     "parse_schedule",
     "run_cassandra_workload",
     "run_spinnaker_rebalance",
     "run_spinnaker_saturation",
+    "run_spinnaker_txn",
     "run_spinnaker_workload",
 ]

@@ -20,7 +20,7 @@ from ..core.node import NodeConfig
 from ..core.replica import ReplicaConfig
 from ..core.sim import DiskParams, NetParams, Simulator
 from .drivers import (AckLedgerAdapter, CassandraAdapter, ClosedLoopDriver,
-                      OpenLoopDriver, SpinnakerAdapter)
+                      OpenLoopDriver, SpinnakerAdapter, TxnAdapter)
 from .generators import OpStream, WorkloadSpec
 from .metrics import OpLog
 from .scenario import FaultSchedule, parse_schedule
@@ -193,7 +193,12 @@ def run_spinnaker_workload(spec: WorkloadSpec,
     log, t_start, _drv = _drive(sim, adapter, spec, cfg, schedule, cluster,
                                 n_pre)
     read_kind = "read" if consistent_reads else "timeline_read"
-    return _result(log, cfg, read_kind, "write", schedule, t_start)
+    out = _result(log, cfg, read_kind, "write", schedule, t_start)
+    # concurrency outcomes (atomic RMW conflicts/retries, lock bounces)
+    out["driver"] = adapter.metrics()
+    if spec.rmw_frac:
+        out["rmw"] = log.summary("rmw", duration=cfg.duration)
+    return out
 
 
 def run_spinnaker_saturation(spec: WorkloadSpec,
@@ -348,6 +353,118 @@ def run_spinnaker_rebalance(spec: WorkloadSpec,
         "wrong_range_redirects": adapter.client.wrong_range_redirects,
         "balancer_actions": list(cluster.balancer.actions)
         if cluster.balancer is not None else [],
+    }
+    return out
+
+
+def run_spinnaker_txn(spec: WorkloadSpec,
+                      cfg: Optional[ExperimentConfig] = None,
+                      cross_frac: Optional[float] = None,
+                      schedule: Optional[FaultSchedule | str] = None,
+                      initial_balance: int = 1_000,
+                      amount: int = 1) -> dict:
+    """Cross-range transaction scenario (PR 4): drive a read/transfer mix
+    where TXN ops move `amount` between two accounts — a fraction across
+    ranges (Paxos-backed 2PC) and the rest inside one range (the §8.2
+    fast path) — optionally under a fault schedule (e.g. ``crash txn
+    coordinator`` for a mid-2PC leader kill).  The cross fraction comes
+    from ``spec.txn_cross_frac`` unless `cross_frac` overrides it.
+
+    Two audits close the run:
+
+    - **no acknowledged transaction lost**: every acked transfer's
+      (key, version) pairs must be readable at >= the acked version;
+    - **no partial commit**: transfers are zero-sum, so the strong-read
+      balance total over the whole keyspace must equal the preloaded
+      total — a single torn transfer (one leg applied, the other not)
+      breaks it.
+
+    The op mix must carry only read/txn mass: blind writes would clobber
+    balances and make the sum audit vacuous."""
+    cfg = cfg or ExperimentConfig()
+    if cross_frac is None:
+        cross_frac = spec.txn_cross_frac
+    if spec.write_frac or spec.rmw_frac or spec.cond_frac:
+        raise ValueError("txn scenario needs a read/txn-only mix "
+                         "(blind writes would break the balance-sum audit)")
+    if isinstance(schedule, str):
+        schedule = parse_schedule(schedule)
+    sim, cluster = build_spinnaker(cfg, num_keys=_aligned_presplit(cfg, spec))
+    loader = cluster.make_client("preload")
+    n_pre = min(cfg.preload_keys or spec.num_keys, cfg.preload_cap,
+                spec.num_keys)
+    _preload(sim, lambda k, cb: loader.put(k, "c", initial_balance, cb),
+             n_pre)
+    ledger: list = []
+    adapter = TxnAdapter(cluster.make_client("bench"), spec.num_keys,
+                         cross_frac=cross_frac, amount=amount,
+                         ledger=ledger, consistent=True)
+    log, t_start, drv = _drive(sim, adapter, spec, cfg, schedule, cluster,
+                               n_pre)
+    out = {
+        "reads": log.summary("read", duration=cfg.duration),
+        "txn_local": log.summary("txn_local", duration=cfg.duration),
+        "txn_cross": log.summary("txn_cross", duration=cfg.duration),
+        "total_ops": len(log),
+        "duration_s": cfg.duration,
+        "throughput": sum(h.total for h in log.hists.values()) / cfg.duration,
+    }
+    if schedule is not None:
+        out["fault_events"] = list(schedule.applied)
+        out["timeline"] = {}
+        for kind in ("txn_cross", "txn_local"):
+            rows = []
+            for w in log.windows(cfg.window, kind=kind, t0=t_start,
+                                 t1=t_start + cfg.duration):
+                d = vars(w).copy()
+                d["t_start"] = round(d["t_start"] - t_start, 6)
+                d["t_end"] = round(d["t_end"] - t_start, 6)
+                rows.append(d)
+            out["timeline"][kind] = rows
+
+    # -- post-run audit ------------------------------------------------------
+    sim.run_for(3.0)          # drain in-flight 2PC resolution / elections
+    cluster.settle(timeout=30.0)
+    auditor = cluster.make_client("audit")
+    lost = []
+    for legs in ledger:
+        for key, ver in legs:
+            r = auditor.sync_get(key, "c", consistent=True)
+            if not r.ok or (r.version or 0) < ver:
+                lost.append({"key": key, "acked_version": ver,
+                             "read": r.code.value, "read_version": r.version})
+    balance = 0
+    for lo in range(0, spec.num_keys, 64):
+        pairs = [(key_of(i), "c")
+                 for i in range(lo, min(lo + 64, spec.num_keys))]
+        rs = auditor.sync(auditor.multi_get, pairs, True)
+        balance += sum(r.value for r in rs if r.ok
+                       and isinstance(r.value, int))
+    expected = n_pre * initial_balance
+    leftover_locks = sum(len(rep.txn.locks)
+                         for node in cluster.nodes.values()
+                         for rep in node.replicas.values())
+    leftover_prepared = sum(len(rep.txn.prepared)
+                            for node in cluster.nodes.values()
+                            for rep in node.replicas.values())
+    srv = {"prepares": 0, "commits": 0, "aborts": 0, "votes_no": 0,
+           "reads_deferred": 0, "lock_conflicts": 0}
+    for node in cluster.nodes.values():
+        for rep in node.replicas.values():
+            for k in srv:
+                srv[k] += getattr(rep.txn, k)
+    out["txn"] = {
+        "cross_frac": cross_frac,
+        **adapter.metrics(),
+        "acked_txns_ledgered": len(ledger),
+        "lost_acked_txns": lost,
+        "balance_expected": expected,
+        "balance_read": balance,
+        "partial_commit": balance != expected,
+        "unresolved_intents": sorted(cluster.zk.get_children("/txn")),
+        "leftover_locks": leftover_locks,
+        "leftover_prepared": leftover_prepared,
+        "server": srv,
     }
     return out
 

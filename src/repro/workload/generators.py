@@ -29,8 +29,9 @@ import numpy as np
 class OpKind(enum.IntEnum):
     READ = 0
     WRITE = 1
-    RMW = 2         # read-modify-write: strong read, then put
+    RMW = 2         # read-modify-write: strong read, then conditional put
     COND = 3        # conditional put at the last-read version
+    TXN = 4         # multi-key transaction (adapter picks the partner keys)
 
 
 @dataclass(frozen=True)
@@ -52,6 +53,11 @@ class WorkloadSpec:
     write_frac: float = 0.15
     rmw_frac: float = 0.03
     cond_frac: float = 0.02
+    txn_frac: float = 0.0              # multi-key transactions (PR 4)
+    # fraction of TXN ops that deliberately span ranges (the adapter
+    # resolves partner keys against the live range table, so "cross"
+    # means a real 2PC and "local" the single-cohort fast path)
+    txn_cross_frac: float = 0.5
     # value sizes (bytes)
     value_size: int = 4096
     value_size_dist: str = "fixed"     # fixed | uniform
@@ -59,7 +65,7 @@ class WorkloadSpec:
 
     def mix(self) -> np.ndarray:
         m = np.array([self.read_frac, self.write_frac, self.rmw_frac,
-                      self.cond_frac], dtype=np.float64)
+                      self.cond_frac, self.txn_frac], dtype=np.float64)
         s = m.sum()
         if s <= 0:
             raise ValueError("op mix must have positive mass")

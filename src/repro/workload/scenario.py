@@ -20,10 +20,15 @@ Grammar (one directive per line, '#' starts a comment):
     at <T>[s] split range <rid> [at <key>]       # live split (median default)
     at <T>[s] move range <rid> [from <i>] [to <j>]   # replica migration
     at <T>[s] autobalance on|off                 # hotspot balancer
+    at <T>[s] crash txn coordinator [lose_disk] [no_expire]  # mid-2PC kill
 
 `crash leader of <rid>` resolves *at fire time* — whoever leads cohort
 `rid` then is killed, so the same scenario file exercises every failover
-regime regardless of which node won the previous election.  The range
+regime regardless of which node won the previous election.
+`crash txn coordinator` also resolves at fire time: it kills the node
+currently coordinating the most in-flight 2PC transactions (falling back
+to the node holding the most prepared participant state), which is how
+the txn scenarios land a kill genuinely mid-two-phase-commit.  The range
 events likewise resolve at fire time (`move range` picks a follower
 source and an up non-member destination when omitted) and require a
 cluster with elastic range management (Spinnaker); they are recorded as
@@ -40,6 +45,7 @@ from typing import Callable, Optional
 _AT = re.compile(r"^at\s+([0-9.]+)s?\s+(.*)$")
 _CRASH_NODE = re.compile(r"^crash\s+node\s+(\d+)\s*(.*)$")
 _CRASH_LEADER = re.compile(r"^crash\s+leader\s+of\s+(\d+)\s*(.*)$")
+_CRASH_TXN_COORD = re.compile(r"^crash\s+txn\s+coordinator\s*(.*)$")
 _RESTART = re.compile(r"^restart\s+(node\s+\d+|crashed)$")
 _PARTITION = re.compile(r"^partition\s+(.*)$")
 _GROUP = re.compile(r"\{([0-9,\s]*)\}")
@@ -52,8 +58,8 @@ _AUTOBALANCE = re.compile(r"^autobalance\s+(on|off)$")
 @dataclass(frozen=True)
 class FaultEvent:
     t: float
-    action: str   # crash | crash_leader | restart | partition | heal |
-                  # split | move | autobalance
+    action: str   # crash | crash_leader | crash_txn_coord | restart |
+                  # partition | heal | split | move | autobalance
     node: Optional[int] = None
     rid: Optional[int] = None
     lose_disk: bool = False
@@ -70,6 +76,8 @@ class FaultEvent:
                 (" (disk lost)" if self.lose_disk else "")
         if self.action == "crash_leader":
             return f"t={self.t}: crash leader of range {self.rid}"
+        if self.action == "crash_txn_coord":
+            return f"t={self.t}: crash txn coordinator"
         if self.action == "restart":
             return f"t={self.t}: restart node {self.node}"
         if self.action == "partition":
@@ -119,6 +127,11 @@ def parse_schedule(text: str) -> "FaultSchedule":
         if lm:
             events.append(FaultEvent(t, "crash_leader", rid=int(lm.group(1)),
                                      **_parse_flags(lm.group(2))))
+            continue
+        tm = _CRASH_TXN_COORD.match(body)
+        if tm:
+            events.append(FaultEvent(t, "crash_txn_coord",
+                                     **_parse_flags(tm.group(1))))
             continue
         rm = _RESTART.match(body)
         if rm:
@@ -182,9 +195,41 @@ class FaultSchedule:
             cluster.crash_node(node, lose_disk=ev.lose_disk)
         self.last_crashed = node
 
+    @staticmethod
+    def _find_txn_coordinator(cluster) -> Optional[int]:
+        """Node currently coordinating the most in-flight 2PC transactions
+        (resolved at fire time); falls back to the node holding the most
+        prepared participant state.  None when no 2PC state exists."""
+        best, best_score = None, (0, 0)
+        for nid, node in sorted(getattr(cluster, "nodes", {}).items()):
+            if not node.up:
+                continue
+            n_active = n_prepared = 0
+            for rep in node.replicas.values():
+                txn = getattr(rep, "txn", None)
+                if txn is None:
+                    continue
+                n_active += len(txn.active)
+                n_prepared += len(txn.prepared)
+            score = (n_active, n_prepared)
+            if score > best_score:
+                best, best_score = nid, score
+        return best
+
     def _fire(self, ev: FaultEvent, cluster, on_event) -> None:
         if ev.action == "crash":
             self._crash(cluster, ev.node, ev)
+        elif ev.action == "crash_txn_coord":
+            nid = self._find_txn_coordinator(cluster)
+            if nid is None:
+                msg = f"t={ev.t}: crash txn coordinator skipped " \
+                      "(no in-flight transactions)"
+                self.applied.append(msg)
+                if on_event is not None:
+                    on_event(msg)
+                return
+            self._crash(cluster, nid, ev)
+            ev = FaultEvent(ev.t, "crash", node=nid, lose_disk=ev.lose_disk)
         elif ev.action == "crash_leader":
             rep = cluster.leader_replica(ev.rid)
             if rep is None:

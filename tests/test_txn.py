@@ -1,0 +1,469 @@
+"""Cross-range 2PC transactions (core/txn.py): commit/abort atomicity,
+the single-cohort fast path, range-aware multi_get, and the recovery
+edges — coordinator killed at every 2PC stage, participant killed holding
+locks, lock-table inheritance across log GC, and read isolation."""
+
+import pytest
+
+from repro.core import (ClusterConfig, ErrorCode, NodeConfig, OpType,
+                        ReplicaConfig, Simulator, SpinnakerCluster, WriteOp,
+                        key_of)
+from repro.core.sim import DiskParams
+from repro.core.types import TXN_OPS
+
+
+def make_cluster(n=5, seed=0, num_keys=300, commit_period=0.05,
+                 session_timeout=2.0, **node_kw):
+    sim = Simulator(seed=seed)
+    cfg = ClusterConfig(
+        n_nodes=n, num_keys=num_keys, session_timeout=session_timeout,
+        node=NodeConfig(replica=ReplicaConfig(commit_period=commit_period),
+                        disk=DiskParams.memory(), **node_kw))
+    cluster = SpinnakerCluster(sim, cfg)
+    cluster.start()
+    cluster.settle()
+    return sim, cluster
+
+
+def sync(sim, fn, *args, budget=12.0):
+    box = []
+    fn(*args, lambda r: box.append(r))
+    deadline = sim.now + budget
+    while not box and sim.now < deadline:
+        sim.run(until=sim.now + 0.05)
+    assert box, "op did not complete"
+    return box[0]
+
+
+def drive_until(sim, pred, budget=8.0):
+    deadline = sim.now + budget
+    while sim.now < deadline and not pred():
+        if not sim.step():
+            break
+    assert pred(), "predicate never became true"
+
+
+def two_range_keys(cluster):
+    k1, k2 = key_of(10), key_of(200)
+    assert cluster.range_of(k1) != cluster.range_of(k2)
+    return k1, k2
+
+
+def remote_partner_key(cluster, coord):
+    """A key in another range whose leader is on a different *node* than
+    `coord` (cohorts overlap under chained declustering, so a random pick
+    may share the node and a coordinator kill would hit both roles)."""
+    for i in (100, 160, 200, 280):
+        k = key_of(i)
+        rid = cluster.range_of(k)
+        rep = cluster.leader_replica(rid)
+        if rid != coord.rid and rep is not None \
+                and rep.node.node_id != coord.node.node_id:
+            return k
+    raise RuntimeError("no disjoint-leader range found")
+
+
+def all_txn_state(cluster):
+    """(locks, prepared, intents) summed over every live replica."""
+    locks = prepared = 0
+    for node in cluster.nodes.values():
+        if not node.up:
+            continue
+        for rep in node.replicas.values():
+            locks += len(rep.txn.locks)
+            prepared += len(rep.txn.prepared)
+    return locks, prepared, sorted(cluster.zk.get_children("/txn"))
+
+
+def assert_clean(cluster):
+    locks, prepared, intents = all_txn_state(cluster)
+    assert locks == 0, f"leftover locks: {locks}"
+    assert prepared == 0, f"leftover prepared txns: {prepared}"
+    assert intents == [], f"unresolved intents: {intents}"
+
+
+def start_cross_txn(cluster, k1, k2, val=b"new"):
+    """Inject a 2-participant transaction directly at the coordinator
+    (bypassing client retries so each test controls exactly one 2PC
+    instance).  Returns (coordinator replica, txid, result box)."""
+    rid1, rid2 = cluster.range_of(k1), cluster.range_of(k2)
+    coord = cluster.leader_replica(rid1)
+    assert coord is not None
+    box = []
+    groups = {rid1: [WriteOp(OpType.PUT, k1, "a", val)],
+              rid2: [WriteOp(OpType.PUT, k2, "a", val)]}
+    coord.client_txn2(groups, box.append)
+    assert len(coord.txn.active) == 1
+    txid = next(iter(coord.txn.active))
+    return coord, txid, box
+
+
+# --------------------------------------------------------------- steady state
+
+def test_cross_range_conditional_abort_is_atomic():
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    k1, k2 = two_range_keys(cluster)
+    assert c.sync_put(k1, "a", b"base1").ok         # version 1
+    assert c.sync_put(k2, "a", b"base2").ok
+    ops = [WriteOp(OpType.COND_PUT, k1, "a", b"x", expected_version=1),
+           WriteOp(OpType.COND_PUT, k2, "a", b"x", expected_version=99)]
+    res = sync(sim, c.transaction, ops)
+    assert res.code == ErrorCode.VERSION_MISMATCH
+    # nothing from either leg is visible, versions unmoved
+    assert c.sync_get(k1, "a").value == b"base1"
+    assert c.sync_get(k1, "a").version == 1
+    assert c.sync_get(k2, "a").value == b"base2"
+    sim.run_for(2.0)
+    assert_clean(cluster)
+
+
+def test_cross_range_commit_reports_all_versions():
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    k1, k2 = two_range_keys(cluster)
+    c.sync_put(k1, "a", b"v1")
+    ops = [WriteOp(OpType.PUT, k1, "a", b"w1"),
+           WriteOp(OpType.PUT, k2, "a", b"w2")]
+    res = sync(sim, c.transaction, ops)
+    assert res.ok
+    versions = dict(((k, col), v) for k, col, v in res.value)
+    assert versions[(k1, "a")] == 2      # on top of the preload
+    assert versions[(k2, "a")] == 1
+    # conditional pipelining stays correct after a 2PC commit: CAS at the
+    # reported version must succeed exactly once
+    assert c.sync_cond_put(k1, "a", b"w1b", 2).ok
+    assert c.sync_cond_put(k1, "a", b"w1c", 2).code \
+        == ErrorCode.VERSION_MISMATCH
+
+
+def test_fastpath_engages_no_2pc_machinery():
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    k1, k2 = key_of(5), key_of(6)
+    assert cluster.range_of(k1) == cluster.range_of(k2)
+    res = sync(sim, c.transaction,
+               [WriteOp(OpType.PUT, k1, "a", b"1"),
+                WriteOp(OpType.PUT, k2, "a", b"2")])
+    assert res.ok
+    assert c.txn2_issued == 0
+    assert not cluster.zk.get_children("/txn")
+    for node in cluster.nodes.values():
+        for rep in node.replicas.values():
+            assert rep.txn.prepares == 0
+            assert rep.txn.locks == {}
+    # and the log carries no 2PC records at all
+    for node in cluster.nodes.values():
+        for e in node.wal.durable:
+            assert getattr(e, "op", None) not in TXN_OPS
+
+
+def test_multi_get_fans_out_once_per_range():
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    idxs = [10, 15, 100, 160, 280]          # spans several base ranges
+    for i in idxs:
+        c.sync_put(key_of(i), "c", f"v{i}".encode())
+    pairs = [(key_of(i), "c") for i in idxs]
+    rids = {cluster.range_of(key_of(i)) for i in idxs}
+    assert 2 < len(rids) < len(idxs)        # batching must be visible
+    before = c.mread_batches
+    rs = sync(sim, lambda cb: c.multi_get(pairs, True, cb))
+    assert c.mread_batches - before == len(rids)
+    assert [r.value for r in rs] == [f"v{i}".encode() for i in idxs]
+    # absent keys surface as NOT_FOUND slots, present ones keep order
+    rs = sync(sim, lambda cb: c.multi_get(
+        [(key_of(10), "c"), (key_of(11), "c")], True, cb))
+    assert rs[0].ok and rs[1].code == ErrorCode.NOT_FOUND
+
+
+def test_multi_get_follows_split_redirects():
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    idxs = [20, 30, 40, 50]
+    for i in idxs:
+        c.sync_put(key_of(i), "c", f"v{i}".encode())
+    rid = cluster.range_of(key_of(20))
+    c.multi_get([(key_of(i), "c") for i in idxs], True, lambda rs: None)
+    assert cluster.admin_split(rid, key_of(35))
+    sim.run_for(3.0)
+    cluster.settle()
+    rs = sync(sim, lambda cb: c.multi_get(
+        [(key_of(i), "c") for i in idxs], True, cb))
+    assert [r.value for r in rs] == [f"v{i}".encode() for i in idxs]
+    assert cluster.range_of(key_of(20)) != cluster.range_of(key_of(50))
+
+
+# ---------------------------------------------------------- recovery edges
+
+def test_coordinator_killed_before_prepares_delivered():
+    """Stage 1 kill: intent written, prepares still in flight — the
+    in-flight messages die with the node, the next leader of the
+    coordinator range presumed-aborts the orphan intent."""
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    k1, k2 = two_range_keys(cluster)
+    coord, txid, box = start_cross_txn(cluster, k1, k2)
+    assert cluster.zk.exists(f"/txn/{txid}")
+    cluster.crash_node(coord.node.node_id)     # prepares never delivered
+    sim.run_for(10.0)
+    cluster.settle()
+    assert_clean(cluster)
+    assert c.sync_get(k1, "a").code == ErrorCode.NOT_FOUND
+    assert c.sync_get(k2, "a").code == ErrorCode.NOT_FOUND
+
+
+def test_coordinator_killed_after_all_prepares():
+    """Stage 2 kill: every participant holds a committed prepare (locks
+    held, votes possibly in flight), the decision may or may not have
+    reached the coordinator's log.  Whatever the interleaving, the
+    outcome must be atomic and fully resolved without operator help."""
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    k1, k2 = two_range_keys(cluster)
+    rid2 = cluster.range_of(k2)
+    coord, txid, box = start_cross_txn(cluster, k1, k2)
+
+    def both_prepared():
+        p1 = coord.txn.prepared.get(txid)
+        rep2 = cluster.leader_replica(rid2)
+        p2 = rep2.txn.prepared.get(txid) if rep2 else None
+        return p1 is not None and p1.committed \
+            and p2 is not None and p2.committed
+
+    drive_until(sim, both_prepared)
+    cluster.crash_node(coord.node.node_id)
+    sim.run_for(12.0)
+    cluster.settle()
+    assert_clean(cluster)
+    r1, r2 = c.sync_get(k1, "a"), c.sync_get(k2, "a")
+    assert (r1.ok and r2.ok and r1.value == r2.value == b"new") \
+        or (r1.code == ErrorCode.NOT_FOUND
+            and r2.code == ErrorCode.NOT_FOUND), (r1.code, r2.code)
+
+
+def test_coordinator_killed_after_decision_logged():
+    """Stage 3 kill: the commit decision is in the coordinator range's
+    log (the client was acked) but the decides are lost with the node.
+    The next leader re-drives the commit from the log + intent znode —
+    the acked transaction must not be lost."""
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    k1, k2 = two_range_keys(cluster)
+    coord, txid, box = start_cross_txn(cluster, k1, k2)
+    drive_until(sim, lambda: txid in coord.txn.decided)
+    assert box and box[0].ok          # decision applied => client acked
+    cluster.crash_node(coord.node.node_id)
+    sim.run_for(12.0)
+    cluster.settle()
+    assert_clean(cluster)
+    assert c.sync_get(k1, "a").value == b"new"
+    assert c.sync_get(k2, "a").value == b"new"
+
+
+def test_participant_leader_killed_holding_locks():
+    """Participant leader dies after logging its prepare: the promoted
+    follower inherits locks + prepared state from the log and the
+    transaction still resolves atomically."""
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    k1, k2 = two_range_keys(cluster)
+    rid2 = cluster.range_of(k2)
+    coord, txid, box = start_cross_txn(cluster, k1, k2)
+    rep2 = cluster.leader_replica(rid2)
+
+    def p2_prepared():
+        p = rep2.txn.prepared.get(txid)
+        return p is not None and p.committed
+
+    drive_until(sim, p2_prepared)
+    assert rep2.txn.locks.get(k2) == txid
+    victim = rep2.node.node_id
+    cluster.crash_node(victim)
+    # the prepared state the promoted leader will inherit lives in the
+    # surviving cohort members' logs, not in anyone's memory
+    survivors = [cluster.nodes[m] for m in cluster.members[rid2]
+                 if m != victim and cluster.nodes[m].up]
+    assert any(getattr(e, "txn", None) is not None and e.txn[0] == txid
+               for node in survivors for e in node.wal.durable)
+    sim.run_for(12.0)
+    cluster.settle()
+    assert_clean(cluster)
+    r1, r2 = c.sync_get(k1, "a"), c.sync_get(k2, "a")
+    assert (r1.ok and r2.ok) or (r1.code == ErrorCode.NOT_FOUND
+                                 and r2.code == ErrorCode.NOT_FOUND)
+
+
+def test_timeline_and_strong_read_isolation_in_doubt():
+    """While a transaction is in doubt (prepare committed, coordinator
+    dead): timeline reads serve the old committed value — never staged
+    data — and strong reads defer until resolution, then return the
+    outcome-consistent value."""
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    k1 = key_of(10)
+    coord0 = cluster.leader_replica(cluster.range_of(k1))
+    k2 = remote_partner_key(cluster, coord0)
+    rid2 = cluster.range_of(k2)
+    c.sync_put(k2, "a", b"old")
+    coord, txid, box = start_cross_txn(cluster, k1, k2)
+    rep2 = cluster.leader_replica(rid2)
+    drive_until(sim, lambda: (p := rep2.txn.prepared.get(txid)) is not None
+                and p.committed and txid not in coord.txn.decided)
+    # crash without instant session expiry: the in-doubt window stays open
+    # until the session times out and a new coordinator-range leader
+    # presumed-aborts the intent
+    cluster.crash_node(coord.node.node_id, expire_session=False)
+    # timeline read: served immediately from committed state
+    r = sync(sim, lambda cb: c.get(k2, "a", False, cb))
+    assert r.ok and r.value == b"old"
+    deferred_before = rep2.txn.reads_deferred
+    # strong read: defers on the lock, resolves to the abort outcome
+    r = sync(sim, lambda cb: c.get(k2, "a", True, cb), budget=15.0)
+    assert r.ok and r.value == b"old" and r.version == 1
+    assert rep2.txn.reads_deferred > deferred_before
+    sim.run_for(3.0)
+    assert_clean(cluster)
+
+
+def test_write_to_locked_key_retries_until_lock_clears():
+    """No-wait locks: a plain put against a locked key bounces with
+    LOCKED, the client's backoff retries, and it lands once the
+    transaction resolves — serialized after it."""
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    k1, k2 = two_range_keys(cluster)
+    coord, txid, box = start_cross_txn(cluster, k1, k2)
+    rid2 = cluster.range_of(k2)
+    rep2 = cluster.leader_replica(rid2)
+    drive_until(sim, lambda: rep2.txn.locks.get(k2) == txid)
+    res = sync(sim, c.put, k2, "a", b"after")
+    assert res.ok
+    assert res.version == 2            # serialized after the staged write
+    assert c.lock_retries >= 1
+    assert c.sync_get(k2, "a").value == b"after"
+
+
+def test_concurrent_transfers_conserve_money():
+    """Two clients hammer transfers over the same 4 accounts spanning 2
+    ranges; no-wait aborts + retries must never lose or mint money."""
+    sim, cluster = make_cluster()
+    idxs = [10, 11, 200, 201]
+    keys = [key_of(i) for i in idxs]
+    clients = [cluster.make_client(f"c{i}") for i in range(2)]
+    for k in keys:
+        clients[0].sync_put(k, "c", 100)
+    done = [0]
+    rng = sim.rng
+
+    def transfer(c, n_left):
+        if n_left == 0:
+            done[0] += 1
+            return
+        src, dst = rng.sample(keys, 2)
+
+        def after_reads(rs):
+            r1, r2 = rs
+            if not (r1.ok and r2.ok):
+                sim.schedule(0.01, transfer, c, n_left)
+                return
+            ops = [WriteOp(OpType.COND_PUT, src, "c", r1.value - 1,
+                           expected_version=r1.version),
+                   WriteOp(OpType.COND_PUT, dst, "c", r2.value + 1,
+                           expected_version=r2.version)]
+            c.transaction(ops, lambda res: transfer(c, n_left - 1))
+
+        c.multi_get([(src, "c"), (dst, "c")], True, after_reads)
+
+    for c in clients:
+        transfer(c, 30)
+    deadline = sim.now + 60.0
+    while done[0] < 2 and sim.now < deadline:
+        sim.run(until=sim.now + 0.25)
+    assert done[0] == 2
+    sim.run_for(3.0)
+    total = sum(clients[0].sync_get(k, "c").value for k in keys)
+    assert total == 400
+    assert_clean(cluster)
+
+
+def test_gc_floor_keeps_prepare_through_log_rollover():
+    """An unresolved prepare pins the WAL GC floor: heavy churn rolls the
+    log over around it, and a full node restart still recovers the
+    prepared state (locks included) from the surviving record."""
+    sim, cluster = make_cluster(wal_segment_bytes=8 << 10)
+    for node in cluster.nodes.values():
+        for rep in node.replicas.values():
+            rep.store.flush_threshold = 4 << 10
+    c = cluster.make_client()
+    k1 = key_of(10)
+    coord0 = cluster.leader_replica(cluster.range_of(k1))
+    k2 = remote_partner_key(cluster, coord0)
+    rid2 = cluster.range_of(k2)
+    idx2 = int(k2[1:])
+    lo_idx = (idx2 // 60) * 60          # base range width = 300 / 5
+    churn = [i for i in range(lo_idx, lo_idx + 45) if i != idx2][:40]
+
+    def churn_round():
+        for i in churn:
+            for _ in range(3):
+                assert c.sync_put(key_of(i), "c", b"y" * 400).ok
+
+    node2 = cluster.leader_replica(rid2).node
+    churn_round()                       # pre-txn churn: normally GC-able
+    assert node2.wal._gc_dropped_upto.get(rid2, 0) > 0, "GC never ran"
+    coord, txid, box = start_cross_txn(cluster, k1, k2)
+    rep2 = cluster.leader_replica(rid2)
+    drive_until(sim, lambda: (p := rep2.txn.prepared.get(txid)) is not None
+                and p.committed)
+    cluster.crash_node(coord.node.node_id, expire_session=False)
+    node2 = rep2.node
+    prep_lsn = rep2.txn.prepared[txid].record.lsn
+    assert node2.wal.gc_floor.get(rid2) == prep_lsn
+    churn_round()                       # post-prepare churn: rolls the log
+    assert any(getattr(e, "lsn", None) == prep_lsn
+               for e in node2.wal.durable), "prepare record was GC'd"
+    # full restart of the participant leader: prepared state must come
+    # back from the log scan (boot-time recovery is synchronous, so the
+    # check runs before the in-doubt abort can resolve it)
+    cluster.crash_node(node2.node_id)
+    sim.run_for(0.2)
+    cluster.restart_node(node2.node_id)
+    assert txid in node2.replicas[rid2].txn.prepared
+    assert node2.replicas[rid2].txn.locks.get(k2) == txid
+    # now let the system resolve the in-doubt txn (presumed abort) ...
+    sim.run_for(12.0)
+    cluster.settle()
+    assert_clean(cluster)
+    assert c.sync_get(k2, "a").code == ErrorCode.NOT_FOUND
+    # ... which lifts the floor: later churn can GC past the prepare
+    assert node2.wal.gc_floor.get(rid2) is None
+    churn_round()
+    assert node2.wal._gc_dropped_upto.get(rid2, 0) > prep_lsn
+
+
+@pytest.mark.slow
+def test_contention_sweep_conserves_money_under_leader_kills():
+    """Long zipfian contention sweep with repeated coordinator kills:
+    the balance sum closes and no acked transfer is lost."""
+    import warnings
+    warnings.filterwarnings("ignore")
+    from repro.workload import (ExperimentConfig, WorkloadSpec,
+                                run_spinnaker_txn)
+    spec = WorkloadSpec(num_keys=500, key_dist="zipfian", zipf_theta=0.8,
+                        read_frac=0.1, write_frac=0, rmw_frac=0,
+                        cond_frac=0, txn_frac=0.9, value_size=64)
+    cfg = ExperimentConfig(n_nodes=5, disk="mem", n_clients=24,
+                           warmup=0.5, duration=12.0, window=0.5,
+                           preload_cap=500)
+    sched = "\n".join(["at 2.0s crash txn coordinator",
+                       "at 5.0s restart crashed",
+                       "at 7.0s crash txn coordinator",
+                       "at 10.0s restart crashed"])
+    r = run_spinnaker_txn(spec, cfg, cross_frac=0.6, schedule=sched)
+    t = r["txn"]
+    assert not t["lost_acked_txns"]
+    assert not t["partial_commit"], (t["balance_read"],
+                                     t["balance_expected"])
+    assert not t["unresolved_intents"] and t["leftover_locks"] == 0
+    assert t["txn_commits"] > 0
