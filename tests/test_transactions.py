@@ -58,7 +58,9 @@ def test_transaction_conditional_abort_leaves_nothing():
     assert c.sync_get(k, "x").value == b"base"
 
 
-def test_transaction_rejects_cross_range():
+def test_transaction_spans_ranges_via_2pc():
+    # PR 4: cross-range op sets no longer bounce — they run through the
+    # Paxos-backed 2PC coordinator (core/txn.py) and commit atomically
     sim, cluster = make_cluster(n=5)
     c = cluster.make_client()
     keys = [key_of(1), key_of(99_000)]
@@ -66,7 +68,16 @@ def test_transaction_rejects_cross_range():
     ops = [WriteOp(OpType.PUT, keys[0], "a", b"1"),
            WriteOp(OpType.PUT, keys[1], "a", b"2")]
     res = sync(sim, c.transaction, ops)
-    assert res.code == ErrorCode.UNAVAILABLE
+    assert res.ok
+    assert c.txn2_issued >= 1           # took the 2PC path, not the fast one
+    assert c.sync_get(keys[0], "a").value == b"1"
+    assert c.sync_get(keys[1], "a").value == b"2"
+    # fully resolved: no leftover locks, prepared state, or intent znodes
+    sim.run_for(2.0)
+    for node in cluster.nodes.values():
+        for rep in node.replicas.values():
+            assert not rep.txn.locks and not rep.txn.prepared
+    assert not cluster.zk.get_children("/txn")
 
 
 def test_transaction_survives_leader_failover():
