@@ -4,10 +4,14 @@
 # one forced live split must keep write availability >= 99% and end with
 # >= 2 non-empty ranges), a fast txn gate (cross-range transfer mix with a
 # mid-2PC coordinator kill: zero acknowledged-but-lost transactions, the
-# balance sum must close, abort rate bounded), a perf-regression check
-# against the committed BENCH_spinnaker.json (fig8 write throughput + a
-# capped saturation quick-sweep must not regress >10% / lose the batching
-# edge), plus the tier-1 test suite.
+# balance sum must close, abort rate bounded), trace-completeness audits
+# on both kill runs (every acked write / committed 2PC txn must carry a
+# full span chain), a breakdown gate (the per-stage decomposition must
+# partition the measured write p50 within 5%) with a schema check of the
+# committed BENCH_spinnaker.json "breakdown" block, a perf-regression
+# check against the committed BENCH_spinnaker.json (fig8 write throughput
+# + a capped saturation quick-sweep must not regress >10% / lose the
+# batching edge), plus the tier-1 test suite.
 #
 #     bash benchmarks/smoke.sh
 set -euo pipefail
@@ -28,8 +32,13 @@ r = run_spinnaker_workload(
 post = [w for w in r["timeline"]["write"] if w["t_start"] > 1.0]
 assert max(w["throughput"] for w in post) > 0, "writes never resumed"
 assert r["reads"]["count"] > 0 and r["writes"]["count"] > 0
+# trace-completeness invariant: every acked write must carry a full
+# propose -> quorum-ack -> commit -> apply chain, even across the kill
+ta = r["trace_audit"]
+assert ta["ok"], ta
 print(f"ok: {r['total_ops']} ops, reads p99={r['reads']['p99_ms']:.2f}ms, "
-      f"writes resumed after leader kill")
+      f"writes resumed after leader kill, "
+      f"{ta['acked_writes_traced']} traces complete")
 EOF
 
 echo "== rebalance gate: forced live split under capped zipfian load =="
@@ -80,9 +89,60 @@ assert not t["partial_commit"], (t["balance_read"], t["balance_expected"])
 assert not t["unresolved_intents"] and t["leftover_locks"] == 0
 assert t["txn_abort_rate"] <= 0.25, t["txn_abort_rate"]
 assert t["txn_commits"] > 0 and t["txn2_issued"] > 0
+# every committed 2PC txn must show a full prepare -> vote -> decide ->
+# resolve chain on every participant, through the coordinator kill
+ta = t["trace_audit"]
+assert ta["ok"], ta
 print(f"ok: {t['acked_txns_ledgered']} acked transfers audited through a "
       f"mid-2PC coordinator kill, 0 lost, balance closed "
-      f"({t['balance_read']}), abort rate {t['txn_abort_rate']:.3f}")
+      f"({t['balance_read']}), abort rate {t['txn_abort_rate']:.3f}, "
+      f"{ta['committed_txns']} txn traces complete")
+EOF
+
+echo "== breakdown gate: stage decomposition must partition the write p50 =="
+python - <<'EOF'
+import warnings
+warnings.filterwarnings("ignore")
+from repro.workload import (ExperimentConfig, WorkloadSpec,
+                            run_spinnaker_breakdown)
+
+spec = WorkloadSpec(num_keys=300, key_dist="zipfian", zipf_theta=0.99,
+                    read_frac=0.5, write_frac=0.5, rmw_frac=0, cond_frac=0,
+                    value_size=512)
+cfg = ExperimentConfig(n_nodes=5, disk="mem", n_clients=4,
+                       warmup=0.5, duration=3.0, preload_cap=200,
+                       trace_sample=1.0, metrics_interval=0.25)
+r = run_spinnaker_breakdown(spec, cfg)
+assert r["trace_audit"]["ok"], r["trace_audit"]
+err = abs(r["stage_sum_p50_ms"] - r["p50_ms"]) / r["p50_ms"]
+assert err <= 0.05, (r["stage_sum_p50_ms"], r["p50_ms"])
+assert r["metrics"], "metrics scrape produced nothing"
+print(f"ok: {r['n_traces']} write traces, stage sum "
+      f"{r['stage_sum_p50_ms']:.3f}ms vs p50 {r['p50_ms']:.3f}ms "
+      f"(rel err {err:.4f}), {len(r['metrics'])} metric series")
+EOF
+
+echo "== breakdown schema check vs committed BENCH_spinnaker.json =="
+python - <<'EOF'
+import json, math, pathlib
+p = pathlib.Path("BENCH_spinnaker.json")
+if not p.exists():
+    print("skip: no committed BENCH_spinnaker.json")
+    raise SystemExit(0)
+bd = json.loads(p.read_text()).get("breakdown")
+assert bd, "committed BENCH_spinnaker.json lacks a 'breakdown' block"
+for system in ("spinnaker", "cassandra"):
+    b = bd[system]
+    for key in ("n_traces", "p50_ms", "p99_ms", "stages_p50_ms",
+                "stage_sum_p50_ms", "top_slowest", "trace_audit"):
+        assert key in b, (system, key)
+    assert b["n_traces"] > 0 and b["trace_audit"]["ok"], system
+    assert math.isclose(b["stage_sum_p50_ms"],
+                        sum(b["stages_p50_ms"].values()), rel_tol=1e-9)
+    assert abs(b["stage_sum_p50_ms"] - b["p50_ms"]) <= 0.05 * b["p50_ms"]
+assert bd["check"]["ok"], bd["check"]
+print("ok: committed breakdown block well-formed, stage sums within 5% "
+      "of p50 for both systems")
 EOF
 
 echo "== perf-regression gate vs committed BENCH_spinnaker.json =="

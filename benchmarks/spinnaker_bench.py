@@ -30,6 +30,14 @@ Scenarios:
   latency ratio, the abort rate under contention, and the
   leader-kill-mid-2PC audit (zero acknowledged-but-lost transactions,
   zero partial commits — the strong-read balance sum must close);
+- `breakdown` — write-path latency decomposition from the sim-time span
+  tracer: per-stage (client queue, request net, cpu, batch wait, WAL
+  force, commit wait, reply net) contributions to the strong-write p50,
+  Spinnaker vs Cassandra quorum, plus the trace-completeness audits
+  under leader-kill and mid-2PC coordinator-kill schedules and the
+  tracing-overhead measurement (full sampling must cost < 5% write
+  throughput; it models zero sim-time, so the expected cost is exactly
+  zero).  `--report` pretty-prints the committed block;
 - `figs8-10`— figs 8, 9, 10;
 - `all`     — everything above in one JSON artifact;
 - `regress` — re-measure fig8 write throughput and a capped saturation
@@ -46,6 +54,7 @@ with light-load p50 within 10%).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import sys
 from pathlib import Path
@@ -53,7 +62,8 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.workload import (ExperimentConfig, WorkloadSpec,  # noqa: E402
-                            run_cassandra_workload, run_spinnaker_rebalance,
+                            run_cassandra_breakdown, run_cassandra_workload,
+                            run_spinnaker_breakdown, run_spinnaker_rebalance,
                             run_spinnaker_saturation, run_spinnaker_txn,
                             run_spinnaker_workload)
 
@@ -351,6 +361,157 @@ def check_txn(r: dict) -> dict:
     return out
 
 
+def breakdown_spec(quick: bool) -> WorkloadSpec:
+    """Plain read/write mix — no rmw/cond legs, so the 'write' trace
+    population is exactly the strong-write path the report decomposes."""
+    return WorkloadSpec(
+        num_keys=1000 if quick else 3000,
+        key_dist="zipfian", zipf_theta=0.99,
+        read_frac=0.80, write_frac=0.20, rmw_frac=0.0, cond_frac=0.0,
+        value_size=4096)
+
+
+def breakdown_cfg(quick: bool) -> ExperimentConfig:
+    return ExperimentConfig(
+        n_nodes=5, disk="ssd", seed=4,
+        n_clients=8 if quick else 16,
+        warmup=0.5, duration=3.0 if quick else 10.0,
+        preload_cap=1000, trace_sample=1.0, metrics_interval=0.25)
+
+
+def _print_stage_table(name: str, b: dict) -> None:
+    print(f"  {name}: write p50 {b['p50_ms']:.3f}ms p99 {b['p99_ms']:.3f}ms "
+          f"({b['n_traces']} traces, stage sum {b['stage_sum_p50_ms']:.3f}ms)",
+          flush=True)
+    total = max(b["stage_sum_p50_ms"], 1e-12)
+    for stage, ms in b["stages_p50_ms"].items():
+        bar = "#" * int(round(40 * ms / total))
+        print(f"    {stage:<12} {ms:8.4f} ms {100 * ms / total:5.1f}%  {bar}",
+              flush=True)
+
+
+def run_breakdown(quick: bool) -> dict:
+    spec, cfg = breakdown_spec(quick), breakdown_cfg(quick)
+    print("breakdown: spinnaker strong-write stage decomposition ...",
+          flush=True)
+    sp = run_spinnaker_breakdown(spec, cfg)
+    _print_stage_table("spinnaker", sp)
+    print("breakdown: cassandra quorum-write stage decomposition ...",
+          flush=True)
+    ca = run_cassandra_breakdown(spec, cfg)
+    _print_stage_table("cassandra", ca)
+
+    # Tracing overhead: the same run with sampling off.  Tracing models
+    # zero sim-time, so the <5% throughput gate should hold exactly (the
+    # two runs are bit-identical), not merely within noise.
+    cfg_off = dataclasses.replace(cfg, trace_sample=0.0,
+                                  metrics_interval=0.0)
+    off = run_spinnaker_breakdown(spec, cfg_off)
+    overhead = {"write_tput_traced": sp["write_throughput"],
+                "write_tput_untraced": off["write_throughput"],
+                "ratio": sp["write_throughput"]
+                / max(off["write_throughput"], 1e-9)}
+
+    # Trace-completeness invariants under the two nastiest schedules:
+    # fig9's leader kill (write chains must close across failover) and
+    # the mid-2PC coordinator kill (committed txn chains must close
+    # through presumed-abort recovery).
+    print("breakdown: completeness audit under leader kill ...", flush=True)
+    fcfg = dataclasses.replace(cfg, seed=5, duration=6.0 if quick else 12.0,
+                               metrics_interval=0.0, window=0.5)
+    sched = LEADER_KILL.format(t_kill=1.5, t_back=fcfg.duration * 0.7)
+    f9 = run_spinnaker_workload(spec, fcfg, consistent_reads=True,
+                                schedule=sched)
+    print(f"  write audit: {f9['trace_audit']}", flush=True)
+    print("breakdown: completeness audit under mid-2PC coordinator kill ...",
+          flush=True)
+    tspec, tcfg = txn_spec(quick), txn_cfg(quick)
+    d = tcfg.duration
+    tsched = (f"at {d * 0.3:.2f}s crash txn coordinator\n"
+              f"at {d * 0.75:.2f}s restart crashed")
+    tk = run_spinnaker_txn(tspec, tcfg, cross_frac=0.5, schedule=tsched)
+    print(f"  txn audit: {tk['txn']['trace_audit']}", flush=True)
+    invariants = {
+        "leader_kill_write_audit": f9["trace_audit"],
+        "leader_kill_events": f9.get("cluster_events", [])[:50],
+        "coord_kill_write_audit": tk["trace_audit"],
+        "coord_kill_txn_audit": tk["txn"]["trace_audit"],
+    }
+    out = {"spinnaker": sp, "cassandra": ca,
+           "tracing_overhead": overhead, "invariants": invariants}
+    out["check"] = check_breakdown(out)
+    print(f"  {out['check']}", flush=True)
+    return out
+
+
+def check_breakdown(r: dict) -> dict:
+    """Acceptance surface: per-system stage contributions must sum to
+    within 5% of the measured e2e write p50 (i.e. the stages really
+    partition the path), every acked write/txn must carry a complete
+    trace chain even across leader and coordinator kills, and tracing at
+    full sampling must cost < 5% write throughput (expected: exactly 0,
+    since spans record sim-time without consuming it)."""
+    def sum_err(b: dict) -> float:
+        return abs(b["stage_sum_p50_ms"] - b["p50_ms"]) \
+            / max(b["p50_ms"], 1e-9)
+    inv = r["invariants"]
+    out = {
+        "spinnaker_stage_sum_rel_err": sum_err(r["spinnaker"]),
+        "cassandra_stage_sum_rel_err": sum_err(r["cassandra"]),
+        "steady_audit_ok": bool(r["spinnaker"]["trace_audit"]["ok"]
+                                and r["cassandra"]["trace_audit"]["ok"]),
+        "leader_kill_audit_ok": bool(inv["leader_kill_write_audit"]["ok"]),
+        "coord_kill_audit_ok": bool(inv["coord_kill_write_audit"]["ok"]
+                                    and inv["coord_kill_txn_audit"]["ok"]),
+        "tracing_overhead_ratio": r["tracing_overhead"]["ratio"],
+        "overhead_ok": bool(r["tracing_overhead"]["ratio"] >= 0.95),
+    }
+    out["ok"] = bool(out["spinnaker_stage_sum_rel_err"] <= 0.05
+                     and out["cassandra_stage_sum_rel_err"] <= 0.05
+                     and out["steady_audit_ok"]
+                     and out["leader_kill_audit_ok"]
+                     and out["coord_kill_audit_ok"]
+                     and out["overhead_ok"])
+    return out
+
+
+def print_report(path: str) -> int:
+    """--report: pretty-print the committed breakdown block — per-stage
+    write-p50 decomposition for both systems plus the ten slowest traces."""
+    p = Path(path)
+    if not p.exists():
+        print(f"report: {path} not found")
+        return 1
+    bd = json.loads(p.read_text()).get("breakdown")
+    if not bd:
+        print(f"report: no 'breakdown' block in {path}; run "
+              "--scenario breakdown first")
+        return 1
+    for name in ("spinnaker", "cassandra"):
+        print(f"\n== {name}: write-path latency breakdown ==")
+        _print_stage_table(name, bd[name])
+    ov = bd.get("tracing_overhead", {})
+    if ov:
+        print(f"\ntracing overhead: traced {ov['write_tput_traced']:.0f}/s "
+              f"vs untraced {ov['write_tput_untraced']:.0f}/s "
+              f"(ratio {ov['ratio']:.3f})")
+    print("\n== top 10 slowest spinnaker writes ==")
+    for t in bd["spinnaker"].get("top_slowest", []):
+        stages = t.get("stages_ms", {})
+        worst = max(stages, key=stages.get) if stages else "?"
+        print(f"  {t['trace_id']:<10} key={t['key']} node={t['node']} "
+              f"attempts={t['attempts']} e2e={t['e2e_ms']:.3f}ms "
+              f"dominant={worst} ({stages.get(worst, 0.0):.3f}ms)")
+    ck = bd.get("check", {})
+    if ck:
+        print(f"\ncheck: {'ok' if ck.get('ok') else 'FAIL'} "
+              f"(stage-sum rel err: spinnaker "
+              f"{ck['spinnaker_stage_sum_rel_err']:.4f}, cassandra "
+              f"{ck['cassandra_stage_sum_rel_err']:.4f}; overhead ratio "
+              f"{ck['tracing_overhead_ratio']:.3f})")
+    return 0
+
+
 def run_failover(quick: bool, consistent_reads: bool) -> dict:
     cfg = base_cfg(quick, seed=1)
     cfg.duration = 8.0 if quick else 30.0
@@ -403,13 +564,18 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scenario", default="all",
                     choices=["fig8", "fig9", "fig10", "saturation",
-                             "rebalance", "txn", "figs8-10", "all",
-                             "regress"])
+                             "rebalance", "txn", "breakdown", "figs8-10",
+                             "all", "regress"])
     ap.add_argument("--quick", action="store_true",
                     help="short runs (CI / smoke mode)")
     ap.add_argument("--out", default="BENCH_spinnaker.json")
+    ap.add_argument("--report", action="store_true",
+                    help="pretty-print the breakdown block of --out "
+                         "(stage table + slowest traces) and exit")
     args = ap.parse_args(argv)
 
+    if args.report:
+        return print_report(args.out)
     if args.scenario == "regress":
         return run_regression_gate(args.out)
 
@@ -435,6 +601,8 @@ def main(argv=None) -> int:
         rec["txn"] = run_txn(args.quick)
         rec["txn_check"] = check_txn(rec["txn"])
         print(f"  {rec['txn_check']}", flush=True)
+    if args.scenario in ("breakdown", "all"):
+        rec["breakdown"] = run_breakdown(args.quick)
 
     Path(args.out).write_text(json.dumps(rec, indent=2))
     print(f"wrote {args.out}")
@@ -460,6 +628,10 @@ def main(argv=None) -> int:
     if "txn_check" in rec and not rec["txn_check"]["ok"]:
         print("FAIL: cross-range transaction gate "
               f"{rec['txn_check']}")
+        rc = 1
+    if "breakdown" in rec and not rec["breakdown"]["check"]["ok"]:
+        print("FAIL: latency-breakdown gate "
+              f"{rec['breakdown']['check']}")
         rc = 1
     return rc
 

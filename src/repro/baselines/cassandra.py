@@ -27,6 +27,7 @@ from ..core.cluster import key_of
 from ..core.sim import (Disk, DiskParams, FifoServer, LatencyStats, NetParams,
                         Network, Simulator)
 from ..core.types import ErrorCode, Result
+from ..obs import Observability, ObsConfig
 
 
 @dataclass
@@ -41,6 +42,7 @@ class CassandraConfig:
     batch: str = "adaptive"             # "adaptive" | "off"
     batch_max_records: int = 32
     batch_deadline: float = 0.5e-3
+    obs: ObsConfig = field(default_factory=ObsConfig)
 
 
 @dataclass
@@ -121,6 +123,13 @@ class CassandraNode:
     def handle(self, kind: str, kw: dict) -> None:
         if not self.up:
             return
+        # trace context rides the request; coord_write carries it onward
+        # (it stamps durable-commit), reads only need the receive mark
+        tr = kw.pop("trace", None)
+        if tr is not None:
+            tr.mark_recv(self.sim.now, self.node_id)
+            if kind == "coord_write":
+                kw["trace"] = tr
         base, per_rec = {"coord_read": CPU_READ, "coord_write": CPU_WRITE,
                          "replica_write": CPU_FWD, "replica_read": CPU_FWD,
                          "ack": CPU_ACK}.get(kind, CPU_ACK)
@@ -163,9 +172,11 @@ class CassandraNode:
 
     # -- coordinator logic -----------------------------------------------------------
     def coord_write(self, key: str, colname: str, value: Any, w: int,
-                    reply: Callable) -> None:
+                    reply: Callable, trace=None) -> None:
         """Send to all 3 replicas, ack client after `w` durable copies."""
         ts = self.sim.now  # coordinator clock = LWW timestamp
+        if trace is not None:
+            trace.t_cpu = ts
         members = self.cluster.cohort(self.cluster.range_of(key))
         acks = [0]
         replied = [False]
@@ -174,6 +185,8 @@ class CassandraNode:
             acks[0] += 1
             if acks[0] >= w and not replied[0]:
                 replied[0] = True
+                if trace is not None:
+                    trace.t_commit = self.sim.now
                 reply(Result(ErrorCode.OK, version=0))
 
         # ack collection from remote replicas (registered before the sends
@@ -284,6 +297,7 @@ class CassandraCluster:
         self.sim = sim
         self.cfg = cfg or CassandraConfig()
         self.net = Network(sim, self.cfg.net)
+        self.obs = Observability(sim, "cassandra", self.cfg.obs)
         self.nodes: dict[int, CassandraNode] = {}
         n = self.cfg.n_nodes
         self.boundaries = [key_of(i * self.cfg.num_keys // n) for i in range(n)]
@@ -292,6 +306,13 @@ class CassandraCluster:
             node._pending_acks = {}
             node._read_collect = {}
             self.nodes[i] = node
+            m = self.obs.metrics
+            m.add_gauge(i, "cpu_queue_s", node.cpu.queue_delay)
+            m.add_gauge(i, "disk_queue", node.disk.queue_depth)
+            m.add_gauge(i, "wal_forces", lambda node=node: node.disk.forces)
+            m.add_gauge(i, "wal_bytes_forced",
+                        lambda node=node: node.disk.bytes_forced)
+        self.obs.start()
 
     def cohort(self, rid: int) -> tuple[int, int, int]:
         n = self.cfg.n_nodes
@@ -332,6 +353,9 @@ class CassandraClient:
         self.stats_by_kind: dict[str, LatencyStats] = {}
         self.op_hook: Optional[Callable[[str, Result], None]] = None
         self._rr = 0
+        # workload adapters set this right before issuing an op so traces
+        # carry the workload's label instead of the wire kind
+        self.next_trace_kind: Optional[str] = None
 
     def _coordinator(self, key: str) -> int:
         members = self.cluster.cohort(self.cluster.range_of(key))
@@ -353,10 +377,20 @@ class CassandraClient:
 
     def _op(self, kind: str, key: str, kw: dict, cb: Callable, t0: float,
             tries: int, nbytes: int) -> None:
+        path = kind.removeprefix("coord_")
+        if tries == 0:
+            hint = self.next_trace_kind
+            self.next_trace_kind = None
+            tr0 = self.cluster.obs.tracer.maybe_start(hint or path, path, key)
+            if tr0 is not None:
+                kw["_trace"] = tr0      # kw persists across retries
         if tries > self.MAX_RETRIES:
             res = Result(ErrorCode.TIMEOUT, latency=self.sim.now - t0)
+            tr = kw.pop("_trace", None)
+            if tr is not None:
+                self.cluster.obs.tracer.finish(tr, False, "timeout")
             if self.op_hook is not None:
-                self.op_hook(kind.removeprefix("coord_"), res)
+                self.op_hook(path, res)
             cb(res)
             return
         target = self._coordinator(key)
@@ -369,11 +403,14 @@ class CassandraClient:
             timeout_ev.cancel()
             res.latency = self.sim.now - t0
             self.stats.add(res.latency)
-            tag = kind.removeprefix("coord_")
-            self.stats_by_kind.setdefault(tag, LatencyStats()).add(
+            self.stats_by_kind.setdefault(path, LatencyStats()).add(
                 res.latency)
+            tr = kw.pop("_trace", None)
+            if tr is not None:
+                self.cluster.obs.tracer.finish(
+                    tr, res.ok, getattr(res.code, "name", str(res.code)))
             if self.op_hook is not None:
-                self.op_hook(tag, res)
+                self.op_hook(path, res)
             cb(res)
 
         def on_timeout():
@@ -390,6 +427,12 @@ class CassandraClient:
                                   nbytes=4300, cross_switch=True)
 
         payload = dict(kw)
+        payload.pop("_trace", None)
+        tr = kw.get("_trace")
+        if tr is not None:
+            tr.attempts += 1
+            tr.t_send = self.sim.now
+            payload["trace"] = tr
         payload["reply"] = reply_via_net
         node = self.cluster.nodes[target]
         self.cluster.net.send(self.id, target, node.handle, kind, payload,

@@ -20,6 +20,7 @@ from .node import NodeConfig, SpinnakerNode
 from .ranges import BalancerConfig, RangeBalancer, RangeTable
 from .sim import LatencyStats, NetParams, Network, Simulator
 from .types import ErrorCode, KeyRange, OpType, Result, WriteOp
+from ..obs import Observability, ObsConfig, install_node_gauges
 
 
 @dataclass
@@ -30,6 +31,7 @@ class ClusterConfig:
     net: NetParams = field(default_factory=NetParams)
     session_timeout: float = 2.0     # §D.1
     trace: bool = False
+    obs: ObsConfig = field(default_factory=ObsConfig)
 
 
 def key_of(i: int) -> str:
@@ -46,6 +48,7 @@ class SpinnakerCluster:
         self.zk = Coordination(sim, session_timeout=self.cfg.session_timeout)
         self.nodes: dict[int, SpinnakerNode] = {}
         self.trace_log: list[str] = []
+        self.obs = Observability(sim, "spinnaker", self.cfg.obs)
 
         n = self.cfg.n_nodes
         if n < 3:
@@ -71,6 +74,7 @@ class SpinnakerCluster:
 
         for i in range(n):
             self.nodes[i] = SpinnakerNode(self, i, self.cfg.node)
+            install_node_gauges(self.obs, self.nodes[i])
         for rid, kr in self.ranges.items():
             for m in self.members[rid]:
                 peers = tuple(x for x in self.members[rid] if x != m)
@@ -152,6 +156,7 @@ class SpinnakerCluster:
             self.balancer.stop()
 
     def start(self) -> None:
+        self.obs.start()
         for node in self.nodes.values():
             node.boot()
 
@@ -183,10 +188,13 @@ class SpinnakerCluster:
     # -- failure injection ------------------------------------------------------
     def crash_node(self, node_id: int, lose_disk: bool = False,
                    expire_session: bool = True) -> None:
+        self.obs.events.emit("node_crash", node=node_id,
+                             lose_disk=lose_disk)
         self.nodes[node_id].crash(lose_disk=lose_disk,
                                   expire_session=expire_session)
 
     def restart_node(self, node_id: int) -> None:
+        self.obs.events.emit("node_restart", node=node_id)
         self.nodes[node_id].restart()
 
     def partition(self, *groups) -> None:
@@ -239,6 +247,10 @@ class Client:
         # workload-driver hook: called once per finished op with
         # (kind, result); fires for successes AND retry-exhausted timeouts
         self.op_hook: Optional[Callable[[str, Result], None]] = None
+        # workload adapters set this right before a call so the sampled
+        # trace carries the workload's op label ("rmw", "txn_cross", ...)
+        # instead of the client-internal path name; consumed per op
+        self.next_trace_kind: Optional[str] = None
 
     # -- routing -----------------------------------------------------------------
     def _retry_delay(self, tries: int) -> float:
@@ -482,8 +494,18 @@ class Client:
     # -- engine --------------------------------------------------------------------
     def _op(self, kind: str, key: str, kw: dict, cb: Callable,
             consistent: bool, t0: float, tries: int) -> None:
+        if tries == 0:
+            # sampled trace rides `kw` across retries ("_trace" never goes
+            # on the wire; each attempt forwards it as payload["trace"])
+            hint, self.next_trace_kind = self.next_trace_kind, None
+            tr = self.cluster.obs.tracer.maybe_start(hint or kind, kind, key)
+            if tr is not None:
+                kw["_trace"] = tr
         if tries > self.MAX_RETRIES:
             self.errors += 1
+            tr = kw.pop("_trace", None)
+            if tr is not None:
+                self.cluster.obs.tracer.finish(tr, False, "timeout")
             res = Result(ErrorCode.TIMEOUT, latency=self.sim.now - t0)
             if self.op_hook is not None:
                 self.op_hook(kind, res)
@@ -546,6 +568,10 @@ class Client:
                 retry(res)
                 return
             res.latency = self.sim.now - t0
+            tr = kw.pop("_trace", None)
+            if tr is not None:
+                self.cluster.obs.tracer.finish(
+                    tr, res.ok, getattr(res.code, "name", str(res.code)))
             self.stats.add(res.latency)
             self.stats_by_kind.setdefault(kind, LatencyStats()).add(
                 res.latency)
@@ -562,6 +588,12 @@ class Client:
         timeout_ev = self.sim.schedule(self.ATTEMPT_TIMEOUT, on_timeout)
 
         payload = dict(payload_kw)
+        payload.pop("_trace", None)
+        tr = kw.get("_trace")
+        if tr is not None:
+            tr.attempts += 1
+            tr.t_send = self.sim.now
+            payload["trace"] = tr
         payload["reply"] = self._reply_via_net(target, on_reply)
         node = self.cluster.nodes[target]
         nbytes = 4200 if kind in ("write", "txn") else 300

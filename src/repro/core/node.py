@@ -79,6 +79,9 @@ class SpinnakerNode:
         self.cpu = FifoServer(self.sim, name=f"cpu{node_id}")
         self.disk = Disk(self.sim, cfg.disk, name=f"log{node_id}")
         self.wal = WAL(self.sim, self.disk, segment_bytes=cfg.wal_segment_bytes)
+        self.wal.on_gc_event = (
+            lambda kind, rid, lsn: cluster.obs.events.emit(
+                kind, node=node_id, rid=rid, lsn=lsn))
         self.replicas: dict[int, CohortReplica] = {}
         self.session: Optional[int] = None
         self._hb_timer = None
@@ -259,6 +262,12 @@ class SpinnakerNode:
     def handle_client(self, rid: int, kind: str, kw: dict) -> None:
         if not self.up:
             return
+        # the trace context rides the request payload; popped here (the
+        # replica handlers are invoked with **kw) and re-threaded to the
+        # write-path handlers, which stamp CPU-done on execution
+        tr = kw.pop("trace", None)
+        if tr is not None:
+            tr.mark_recv(self.sim.now, self.node_id)
         replica = self.replicas.get(rid)
         if replica is None:
             kw["reply"](None)
@@ -275,11 +284,15 @@ class SpinnakerNode:
         elif kind == "txn":
             n = max(1, len(kw.get("ops", ())))
             self.cpu.submit(base + per_rec * n,
-                            lambda: replica.client_transaction(**kw))
+                            lambda: replica.client_transaction(
+                                kw["ops"], kw["reply"], trace=tr))
         elif kind == "txn2":
             # cross-range transaction: this leader coordinates 2PC
             n = max(1, sum(len(ops) for ops in kw.get("groups", {}).values()))
             self.cpu.submit(base + per_rec * n,
-                            lambda: replica.client_txn2(**kw))
+                            lambda: replica.client_txn2(
+                                kw["groups"], kw["reply"], trace=tr))
         else:
-            self.cpu.submit(base + per_rec, lambda: replica.client_write(**kw))
+            self.cpu.submit(base + per_rec,
+                            lambda: replica.client_write(
+                                kw["op"], kw["reply"], trace=tr))

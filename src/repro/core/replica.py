@@ -140,6 +140,10 @@ class CohortReplica:
         self.batched_records = 0       # leader: records covered by them
         self.acks_sent = 0             # follower: cumulative acks sent
 
+        # observability: sampled traces of admitted-but-uncommitted writes,
+        # keyed by LSN (leader side only; never serialized into records)
+        self._trace_by_lsn: dict[int, object] = {}
+
     # ------------------------------------------------------------------ utils
     @property
     def zk(self):
@@ -156,6 +160,13 @@ class CohortReplica:
         self.node.cluster.trace(
             f"[{self.node.sim.now*1e3:9.2f}ms n{self.node.node_id} r{self.rid} "
             f"{self.role.value:9s} e{self.epoch}] {msg}")
+
+    @property
+    def obs(self):
+        return self.node.cluster.obs
+
+    def _minc(self, name: str, v: float = 1.0) -> None:
+        self.obs.metrics.inc(self.node.node_id, name, v)
 
     # ============================================================== lifecycle
     def start(self) -> None:
@@ -183,6 +194,7 @@ class CohortReplica:
         self._follower_forced = self.lst   # durable log scanned
         self._reset_batch()
         self.pending_reply.clear()
+        self._trace_by_lsn.clear()
         self.acked = {p: 0 for p in self.peers}
         self.insync.clear()
         self.open_for_writes = False
@@ -265,6 +277,7 @@ class CohortReplica:
             return
         if not self._refresh_membership():
             return
+        self._minc("elections_started")
         self.role = Role.ELECTING
         self._election_round = self._current_round()
         # Fig. 7 line 1: clean up old state — our prior candidacies and
@@ -389,6 +402,20 @@ class CohortReplica:
                 for colname, _value, version in rec.columns:
                     self.proposed_version[(rec.key, colname)] = version
         self._next_seq = lsn_seq(self.lst) + 1
+        self._minc("elections_won")
+        self.obs.events.emit("leader_takeover", node=self.node.node_id,
+                             rid=self.rid, epoch=new_epoch,
+                             unresolved=len(self.queue))
+        # `forced_upto = lst` above re-establishes local durability for the
+        # whole queue; traces carried across the regime change would
+        # otherwise never see their flush/force milestones again
+        now = self.node.sim.now
+        for lsn, tr in self._trace_by_lsn.items():
+            if lsn in self.queue:
+                if tr.t_flush is None:
+                    tr.t_flush = now
+                if tr.t_forced is None:
+                    tr.t_forced = now
         self.log(f"takeover: cmt={fmt_lsn(self.cmt)} lst={fmt_lsn(self.lst)} "
                  f"unresolved={len(self.queue)}")
         for p in self.peers:
@@ -450,7 +477,7 @@ class CohortReplica:
             if self._commit_timer is not None:
                 self._commit_timer.cancel()
                 self._commit_timer = None
-            for op, cb in self.blocked_writes:
+            for op, cb, _tr in self.blocked_writes:
                 cb(Result(ErrorCode.NOT_LEADER, leader_hint=self.leader_id))
             self.blocked_writes.clear()
             self.txn.on_step_down()
@@ -463,6 +490,7 @@ class CohortReplica:
         copy, so re-proposals of it must be re-forced before being acked."""
         self.queue = {l: r for l, r in self.queue.items() if l <= self.cmt}
         self._follower_forced = min(self._follower_forced, self.cmt)
+        self._trace_by_lsn.clear()   # dropped writes retry with fresh marks
         for lsn in list(self.pending_reply):
             cb = self.pending_reply.pop(lsn)
             cb(Result(ErrorCode.UNAVAILABLE))
@@ -554,6 +582,8 @@ class CohortReplica:
     def _open_writes(self) -> None:
         self.open_for_writes = True
         self._next_seq = max(self._next_seq, lsn_seq(self.lst) + 1)
+        self.obs.events.emit("leader_open", node=self.node.node_id,
+                             rid=self.rid, epoch=self.epoch)
         self.log(f"open for writes (next lsn {self.epoch}.{self._next_seq})")
         # self-heal range metadata: a dead leader may have applied a range
         # op without publishing it (idempotent — no version churn when the
@@ -568,11 +598,11 @@ class CohortReplica:
         # re-drive logged decisions, re-vote in-doubt prepares
         self.node.sim.schedule(0.0, self.txn.on_leader_open)
         blocked, self.blocked_writes = self.blocked_writes, []
-        for op, cb in blocked:
+        for op, cb, tr in blocked:
             if isinstance(op, list):                # blocked transaction
-                self.client_transaction(op, cb)
+                self.client_transaction(op, cb, trace=tr)
             else:
-                self.client_write(op, cb)
+                self.client_write(op, cb, trace=tr)
 
     # --- follower side: catch-up data -----------------------------------------
     def on_catchup_data(self, epoch: int, records: list[LogRecord],
@@ -634,15 +664,19 @@ class CohortReplica:
         ps = self.pending_split
         return ps is None or key < ps[0]
 
-    def client_write(self, op: WriteOp, reply: Callable) -> None:
+    def client_write(self, op: WriteOp, reply: Callable,
+                     trace=None) -> None:
+        if trace is not None:
+            trace.t_cpu = self.node.sim.now
         if self.role != Role.LEADER or not self.node.has_session():
             reply(Result(ErrorCode.NOT_LEADER, leader_hint=self.leader_id))
             return
         if not self._owns(op.key):
+            self._minc("wrong_range_replies")
             reply(Result(ErrorCode.WRONG_RANGE))
             return
         if not self.open_for_writes:
-            self.blocked_writes.append((op, reply))
+            self.blocked_writes.append((op, reply, trace))
             return
         if self.txn.lock_owner(op.key) is not None:
             # held by an in-flight cross-range transaction: no-wait policy
@@ -672,21 +706,29 @@ class CohortReplica:
         self.lst = max(self.lst, lsn)
         self.queue[lsn] = rec
         self.pending_reply[lsn] = reply
+        if trace is not None:
+            trace.lsn = lsn
+            self._trace_by_lsn[lsn] = trace
         self.writes_served += 1
         self._batch_append(rec)
         self._maybe_flush_batch()
 
     def propose_record(self, op: OpType, key: str, columns: tuple = (),
-                       txn=None) -> LogRecord:
+                       txn=None, trace=None) -> LogRecord:
         """Mint an LSN for a single control record (range op / 2PC record)
         and admit it to the replication pipeline: unresolved queue + batch
         accumulator + flush.  One place for the admission invariants that
-        client_write spells out inline for data records."""
+        client_write spells out inline for data records.  A `trace` rides
+        the record's replication milestones (registered before the flush
+        below, which may run synchronously)."""
         lsn = make_lsn(self.epoch, self._next_seq)
         self._next_seq += 1
         rec = LogRecord(self.rid, lsn, op, key, columns, txn=txn)
         self.lst = max(self.lst, lsn)
         self.queue[lsn] = rec
+        if trace is not None:
+            trace.lsn = lsn
+            self._trace_by_lsn[lsn] = trace
         self._batch_append(rec)
         self._maybe_flush_batch()
         return rec
@@ -733,6 +775,13 @@ class CohortReplica:
         e0 = self.epoch
         self.batches_flushed += 1
         self.batched_records += len(batch)
+        self._minc("proposal_batches")
+        self._minc("proposal_batch_records", len(batch))
+        now = self.node.sim.now
+        traced = [self._trace_by_lsn[r.lsn] for r in batch
+                  if r.lsn in self._trace_by_lsn]
+        for tr in traced:
+            tr.t_flush = now
 
         def on_forced():
             # EPOCH-BOUND like the follower path: a force in flight across
@@ -740,6 +789,8 @@ class CohortReplica:
             if self.epoch != e0 or self.role not in (Role.LEADER,
                                                      Role.TAKEOVER):
                 return
+            for tr in traced:
+                tr.t_forced = self.node.sim.now
             self._on_self_forced(tail)
             self._maybe_flush_batch()   # drain what queued during the force
 
@@ -749,7 +800,8 @@ class CohortReplica:
             self._send(f, "on_propose", nbytes=nbytes, epoch=self.epoch,
                        records=list(batch), commit_lsn=self._piggyback())
 
-    def client_transaction(self, ops: list, reply: Callable) -> None:
+    def client_transaction(self, ops: list, reply: Callable,
+                           trace=None) -> None:
         """Multi-operation transaction (§8.2, the paper's sketched
         extension): all ops target this cohort's range; the transaction
         creates multiple log records but invokes the replication protocol
@@ -758,14 +810,17 @@ class CohortReplica:
         the batch is atomic at every replica: a prefix is never visible
         to strong reads because apply happens in one _apply_committed
         sweep only after quorum covers the tail record)."""
+        if trace is not None:
+            trace.t_cpu = self.node.sim.now
         if self.role != Role.LEADER or not self.node.has_session():
             reply(Result(ErrorCode.NOT_LEADER, leader_hint=self.leader_id))
             return
         if not all(self._owns(op.key) for op in ops):
+            self._minc("wrong_range_replies")
             reply(Result(ErrorCode.WRONG_RANGE))
             return
         if not self.open_for_writes:
-            self.blocked_writes.append((ops, reply))
+            self.blocked_writes.append((ops, reply, trace))
             return
         if self.txn.lock_conflict({op.key for op in ops}):
             self.txn.lock_conflicts += 1
@@ -801,6 +856,9 @@ class CohortReplica:
         # the records ride the shared batch accumulator — atomicity comes
         # from txn_tail in _apply_committed, not from sharing one force
         self.pending_reply[records[-1].lsn] = reply
+        if trace is not None:
+            trace.lsn = records[-1].lsn
+            self._trace_by_lsn[records[-1].lsn] = trace
         for rec in records:
             self._batch_append(rec)
         self._maybe_flush_batch()
@@ -923,6 +981,9 @@ class CohortReplica:
             return
         for lsn in sorted(l for l in self.queue if self.cmt < l <= upto):
             rec = self.queue.pop(lsn)
+            tr = self._trace_by_lsn.pop(lsn, None)
+            if tr is not None:
+                tr.t_commit = self.node.sim.now
             self.cmt = lsn   # range ops read cmt; keep it current in-loop
             if rec.op is OpType.SPLIT:
                 self._apply_split(rec)
@@ -1023,6 +1084,8 @@ class CohortReplica:
             except NoNode:
                 pass
             return False
+        self.obs.events.emit("migration_start", rid=self.rid, src=src,
+                             dst=dst)
         self.log(f"migration started: n{src} -> n{dst}")
         return True
 
@@ -1049,6 +1112,8 @@ class CohortReplica:
                 self.zk.delete(ranges_mod.migration_path(self.rid))
             except NoNode:
                 pass
+            self.obs.events.emit("migration_abort", rid=self.rid, src=src,
+                                 dst=dst)
             self.log(f"migration aborted (leader is retire target n{src})")
             if dst in self.peers:
                 self._propose_member_change(
@@ -1071,6 +1136,8 @@ class CohortReplica:
             self.zk.delete(ranges_mod.migration_path(self.rid))
         except NoNode:
             pass
+        self.obs.events.emit("migration_complete", rid=self.rid, src=src,
+                             dst=dst)
         self.log(f"migration complete: n{src} -> n{dst}")
 
     def _apply_split(self, rec: LogRecord) -> None:
@@ -1094,6 +1161,9 @@ class CohortReplica:
         for kc in [kc for kc in self.proposed_version
                    if not self.range.contains(kc[0])]:
             del self.proposed_version[kc]
+        self.obs.events.emit("split_applied", node=self.node.node_id,
+                             rid=self.rid, child_rid=child_rid,
+                             split_key=split_key)
         self.log(f"SPLIT applied at {split_key!r}: forked child r{child_rid}"
                  f" [{split_key!r}, {child_hi!r})")
         # registration is idempotent — the first applier wins, later
@@ -1222,6 +1292,7 @@ class CohortReplica:
             # the client must refresh its range table.  A merely *pending*
             # split does not gate reads — the data is still here and the
             # barrier only has to keep writes from landing above it.
+            self._minc("wrong_range_replies")
             reply(Result(ErrorCode.WRONG_RANGE))
             return
         if consistent:
@@ -1279,8 +1350,9 @@ class CohortReplica:
             self._read_one(key, colname, consistent, one(i))
 
     # ================================== cross-range 2PC (core/txn.py)
-    def client_txn2(self, groups: dict, reply: Callable) -> None:
-        self.txn.client_txn2(groups, reply)
+    def client_txn2(self, groups: dict, reply: Callable,
+                    trace=None) -> None:
+        self.txn.client_txn2(groups, reply, trace=trace)
 
     def on_txn_prepare(self, txid: str, coord_rid: int, ops: list) -> None:
         self.txn.on_txn_prepare(txid, coord_rid, ops)

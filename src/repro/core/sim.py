@@ -166,6 +166,12 @@ class FifoServer:
     def bump_generation(self) -> None:
         self._gen += 1
 
+    def queue_delay(self) -> float:
+        """Seconds of already-accepted work ahead of a job submitted now —
+        the queue-depth gauge the metrics registry scrapes (the header
+        `queue_len` counter is not maintained by `submit`)."""
+        return max(0.0, self.busy_until - self.sim.now)
+
 
 @dataclass
 class NetParams:
@@ -297,6 +303,10 @@ class Disk:
         self._gen += 1
         self._waiters.clear()
         self.busy = False
+
+    def queue_depth(self) -> int:
+        """Force requests queued or in flight (metrics gauge)."""
+        return len(self._waiters) + (1 if self.busy else 0)
 
     def force(self, nbytes: int, cb: Callable) -> None:
         """Request a durable write of `nbytes`; `cb()` fires on completion.

@@ -93,6 +93,7 @@ class _Coord:
     t0: float
     state: str = "preparing"          # preparing | deciding
     votes: dict = field(default_factory=dict)   # rid -> versions tuple
+    trace: Any = None                 # client OpTrace riding this txn
 
 
 class TxnManager:
@@ -123,6 +124,10 @@ class TxnManager:
         self.votes_no = 0
         self.lock_conflicts = 0
         self.reads_deferred = 0
+
+    @property
+    def tracer(self):
+        return self.rep.obs.tracer
 
     # ------------------------------------------------------------- lifecycle
     def reset(self) -> None:
@@ -203,6 +208,9 @@ class TxnManager:
                 continue
             # intent with no logged decision: presumed abort (§ module doc)
             rep.log(f"txn {name}: presumed abort (intent without decision)")
+            rep.obs.events.emit("txn_presumed_abort", txid=name,
+                                rid=rep.rid, node=rep.node.node_id)
+            self.tracer.txn_mark(name, "abort")
             self.aborts += 1
             for rid in participants:
                 self._send_decide(name, rid, commit=False)
@@ -366,6 +374,7 @@ class TxnManager:
         (commit) atomically, release locks, wake deferred readers."""
         txid = rec.txn[0]
         commit = rec.op is OpType.TXN_COMMIT
+        self.tracer.txn_mark(txid, "resolve", self.rep.rid)
         self.deciding.discard(txid)
         p = self.prepared.pop(txid, None)
         if p is not None:
@@ -444,11 +453,13 @@ class TxnManager:
 
     # --------------------------------------------------- coordinator side
     def client_txn2(self, groups: dict[int, list[WriteOp]],
-                    reply: Callable) -> None:
+                    reply: Callable, trace=None) -> None:
         """Entry point for a multi-range transaction: this replica's
         leader (first participant range) coordinates."""
         from .replica import Role
         rep = self.rep
+        if trace is not None:
+            trace.t_cpu = rep.node.sim.now
         if rep.role is not Role.LEADER or not rep.node.has_session():
             reply(Result(ErrorCode.NOT_LEADER, leader_hint=rep.leader_id))
             return
@@ -465,8 +476,10 @@ class TxnManager:
         except NodeExists:
             reply(Result(ErrorCode.UNAVAILABLE))
             return
-        inst = _Coord(txid, dict(groups), reply, rep.node.sim.now)
+        inst = _Coord(txid, dict(groups), reply, rep.node.sim.now,
+                      trace=trace)
         self.active[txid] = inst
+        self.tracer.txn_begin(txid, rep.rid, sorted(groups))
         for rid, ops in groups.items():
             self._send_prepare(inst, rid, ops)
         self._arm()
@@ -477,6 +490,7 @@ class TxnManager:
         if leader is None:
             return      # no leader right now: the prepare timeout aborts
         nbytes = 128 + sum(64 + len(op.key) for op in ops)
+        self.tracer.txn_mark(inst.txid, "prepare_sent", rid)
         self.rep.node.send(leader, rid, "on_txn_prepare", nbytes=nbytes,
                            txid=inst.txid, coord_rid=self.rep.rid,
                            ops=list(ops))
@@ -502,12 +516,17 @@ class TxnManager:
             self._abort(inst, reason)
             return
         inst.votes[prid] = tuple(versions)
+        self.tracer.txn_mark(txid, "vote", prid)
         if set(inst.votes) >= set(inst.groups):
             # all YES: log the decision — its commit IS the commit point
             inst.state = "deciding"
+            # the decision record's force/commit milestones ARE the client
+            # op's: the replica's batch instrumentation stamps
+            # t_flush/t_forced/t_commit on the riding trace
             rep.propose_record(
                 OpType.TXN_DECISION, txid,
-                txn=(txid, "commit", tuple(sorted(inst.groups))))
+                txn=(txid, "commit", tuple(sorted(inst.groups))),
+                trace=inst.trace)
 
     def _apply_decision(self, rec: LogRecord) -> None:
         """A committed TXN_DECISION: registered on every replica of the
@@ -517,6 +536,7 @@ class TxnManager:
         txid, outcome, participants = rec.txn
         self.decided[txid] = (outcome, participants)
         self._decision_rec[txid] = rec
+        self.tracer.txn_mark(txid, outcome)
         if rep.role in (Role.LEADER, Role.TAKEOVER):
             # resend duty is leader-only: followers never receive acks, so
             # tracking unacked there would never drain.  A promoted
@@ -527,6 +547,7 @@ class TxnManager:
             inst = self.active.pop(txid, None)
             if inst is not None and inst.reply is not None:
                 merged = tuple(v for vs in inst.votes.values() for v in vs)
+                self.tracer.txn_mark(txid, "client_ack")
                 inst.reply(Result(ErrorCode.OK, value=merged))
             for rid in sorted(participants):
                 self._send_decide(txid, rid, commit=outcome == "commit")
@@ -539,6 +560,7 @@ class TxnManager:
         participants, bounce the client with a retryable/terminal code."""
         self.active.pop(inst.txid, None)
         self.aborts += 1
+        self.tracer.txn_mark(inst.txid, "abort")
         for rid in sorted(inst.groups):
             self._send_decide(inst.txid, rid, commit=False)
         try:

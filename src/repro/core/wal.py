@@ -57,6 +57,10 @@ class WAL:
         # Volatile state (lost on crash):
         self._buffer: list[_Pending] = []
         self.appends = 0
+        # observability hook: called as (kind, range_id, lsn) on GC-floor
+        # pin/release transitions (wired by the owning node)
+        self.on_gc_event: Optional[Callable[[str, int, Optional[int]], None]] \
+            = None
 
     # -- write path ---------------------------------------------------------
     def append(self, entry: Entry, force: bool, cb: Optional[Callable] = None) -> None:
@@ -145,10 +149,15 @@ class WAL:
         """Pin (or release, with None) a range's GC floor: durable records
         with `lsn >= floor` are never garbage-collected.  Maintained by the
         transaction manager around unresolved 2PC state."""
+        had = range_id in self.gc_floor
         if lsn is None:
             self.gc_floor.pop(range_id, None)
+            if had and self.on_gc_event is not None:
+                self.on_gc_event("gc_floor_release", range_id, None)
         else:
             self.gc_floor[range_id] = lsn
+            if not had and self.on_gc_event is not None:
+                self.on_gc_event("gc_floor_pin", range_id, lsn)
 
     def forget_range(self, range_id: int) -> None:
         """Drop a range's log state after its replica left this node

@@ -19,7 +19,8 @@ from .drivers import (AckLedgerAdapter, CassandraAdapter, ClosedLoopDriver,
 from .generators import Op, OpKind, OpStream, WorkloadSpec
 from .metrics import LatencyHistogram, OpLog, WindowSummary
 from .scenario import FaultEvent, FaultSchedule, parse_schedule
-from .experiment import (ExperimentConfig, run_cassandra_workload,
+from .experiment import (ExperimentConfig, run_cassandra_breakdown,
+                         run_cassandra_workload, run_spinnaker_breakdown,
                          run_spinnaker_rebalance, run_spinnaker_saturation,
                          run_spinnaker_txn, run_spinnaker_workload)
 
@@ -41,7 +42,9 @@ __all__ = [
     "WindowSummary",
     "WorkloadSpec",
     "parse_schedule",
+    "run_cassandra_breakdown",
     "run_cassandra_workload",
+    "run_spinnaker_breakdown",
     "run_spinnaker_rebalance",
     "run_spinnaker_saturation",
     "run_spinnaker_txn",

@@ -68,6 +68,8 @@ class SpinnakerAdapter:
         col = self.colname
         value = b"x" * op.value_size
         c = self.client
+        # label the sampled trace with the workload kind, not the wire kind
+        c.next_trace_kind = self.kind_name(op)
         if op.kind == OpKind.READ:
             # NOT_FOUND is a successful read of an absent key
             c.get(key, col, self.consistent,
@@ -89,6 +91,7 @@ class SpinnakerAdapter:
                 ver = r.version or 0
                 # a VERSION_MISMATCH is a *successful* CAS rejection
                 # (another client won the race), not unavailability
+                c.next_trace_kind = "cond_put"
                 c.conditional_put(
                     key, col, value, ver,
                     lambda r2: done(r2.ok
@@ -121,8 +124,10 @@ class SpinnakerAdapter:
                 else:
                     done(False)
 
+            c.next_trace_kind = "rmw"
             c.conditional_put(key, col, value, ver, after_cas)
 
+        c.next_trace_kind = "rmw"
         c.get(key, col, True, after_read)
 
 
@@ -152,6 +157,7 @@ class AckLedgerAdapter(SpinnakerAdapter):
                 self.ledger[op.key_index] = max(prev, r.version)
             done(r.ok)
 
+        self.client.next_trace_kind = "write"
         self.client.put(key, self.colname, b"x" * op.value_size, on_put)
 
 
@@ -273,8 +279,10 @@ class TxnAdapter(SpinnakerAdapter):
                     self.txn_failures += 1
                     done(False)
 
+            c.next_trace_kind = self.kind_name(op)
             c.transaction(ops, after_txn)
 
+        c.next_trace_kind = self.kind_name(op)
         c.multi_get([(k1, col), (k2, col)], True, after_read)
 
 
@@ -299,16 +307,23 @@ class CassandraAdapter:
         col = self.colname
         value = b"x" * op.value_size
         c = self.client
+        label = self.kind_name(op)
+        c.next_trace_kind = label
+
+        def write_leg(r):
+            if not (r.ok or r.code.value == "not_found"):
+                done(False)
+                return
+            c.next_trace_kind = label
+            c.write(key, col, value, self.quorum, lambda r2: done(r2.ok))
+
         if op.kind == OpKind.READ:
             c.read(key, col, self.quorum,
                    lambda r: done(r.ok or r.code.value == "not_found"))
         elif op.kind == OpKind.WRITE:
             c.write(key, col, value, self.quorum, lambda r: done(r.ok))
         else:  # RMW, COND, and TXN all become read-then-write
-            c.read(key, col, self.quorum,
-                   lambda r: c.write(key, col, value, self.quorum,
-                                     lambda r2: done(r2.ok))
-                   if (r.ok or r.code.value == "not_found") else done(False))
+            c.read(key, col, self.quorum, write_leg)
 
 
 class ClosedLoopDriver:

@@ -19,6 +19,7 @@ from ..core.cluster import ClusterConfig, SpinnakerCluster, key_of
 from ..core.node import NodeConfig
 from ..core.replica import ReplicaConfig
 from ..core.sim import DiskParams, NetParams, Simulator
+from ..obs import ObsConfig, stage_breakdown
 from .drivers import (AckLedgerAdapter, CassandraAdapter, ClosedLoopDriver,
                       OpenLoopDriver, SpinnakerAdapter, TxnAdapter)
 from .generators import OpStream, WorkloadSpec
@@ -53,6 +54,11 @@ class ExperimentConfig:
     # mismatch the whole workload lands in range 0 and measures one cohort,
     # not the cluster); set False to keep the static default pre-split
     align_presplit: bool = True
+    # observability: fraction of client ops traced (deterministic
+    # error-diffusion sampling; 0 disables) and the metrics scrape period
+    # (0 leaves the registry scrape-on-demand only)
+    trace_sample: float = 1.0
+    metrics_interval: float = 0.0
 
 
 def build_spinnaker(cfg: ExperimentConfig, num_keys: Optional[int] = None):
@@ -67,7 +73,9 @@ def build_spinnaker(cfg: ExperimentConfig, num_keys: Optional[int] = None):
             commit_period=cfg.commit_period, batch=cfg.batch,
             batch_max_records=cfg.batch_max_records,
             batch_deadline=cfg.batch_deadline),
-                        disk=_DISKS[cfg.disk]()))
+                        disk=_DISKS[cfg.disk]()),
+        obs=ObsConfig(trace_sample=cfg.trace_sample,
+                      metrics_interval=cfg.metrics_interval))
     if num_keys is not None:
         ccfg.num_keys = num_keys
     cluster = SpinnakerCluster(sim, ccfg)
@@ -82,7 +90,10 @@ def build_cassandra(cfg: ExperimentConfig):
         sim, CassandraConfig(n_nodes=cfg.n_nodes, disk=_DISKS[cfg.disk](),
                              batch=cfg.batch,
                              batch_max_records=cfg.batch_max_records,
-                             batch_deadline=cfg.batch_deadline))
+                             batch_deadline=cfg.batch_deadline,
+                             obs=ObsConfig(
+                                 trace_sample=cfg.trace_sample,
+                                 metrics_interval=cfg.metrics_interval)))
     return sim, cluster
 
 
@@ -133,8 +144,14 @@ def _drive(sim, adapter, spec: WorkloadSpec, cfg: ExperimentConfig,
         stream.insert_horizon = max(1, preloaded)
     log = OpLog()
     if schedule is not None:
-        # schedule times are relative to the measured interval's start
-        schedule.install(sim, cluster, at=sim.now + cfg.warmup)
+        # schedule times are relative to the measured interval's start;
+        # applied faults (and honest skips) land in the cluster event log
+        # so fig9/10 timelines carry their own annotations
+        obs = getattr(cluster, "obs", None)
+        on_event = (None if obs is None
+                    else lambda msg: obs.events.emit("fault", detail=msg))
+        schedule.install(sim, cluster, at=sim.now + cfg.warmup,
+                         on_event=on_event)
     if cfg.driver == "open":
         drv = OpenLoopDriver(sim, adapter, stream, log, rate=cfg.open_rate)
     else:
@@ -198,6 +215,9 @@ def run_spinnaker_workload(spec: WorkloadSpec,
     out["driver"] = adapter.metrics()
     if spec.rmw_frac:
         out["rmw"] = log.summary("rmw", duration=cfg.duration)
+    out["trace_audit"] = cluster.obs.tracer.audit_writes()
+    if schedule is not None:
+        out["cluster_events"] = cluster.obs.events.export(t0=t_start)
     return out
 
 
@@ -354,6 +374,9 @@ def run_spinnaker_rebalance(spec: WorkloadSpec,
         "balancer_actions": list(cluster.balancer.actions)
         if cluster.balancer is not None else [],
     }
+    out["trace_audit"] = cluster.obs.tracer.audit_writes()
+    if schedule is not None:
+        out["cluster_events"] = cluster.obs.events.export(t0=t_start)
     return out
 
 
@@ -465,7 +488,13 @@ def run_spinnaker_txn(spec: WorkloadSpec,
         "leftover_locks": leftover_locks,
         "leftover_prepared": leftover_prepared,
         "server": srv,
+        # audited after the settle: every committed 2PC txn must show the
+        # full prepare -> vote -> decide -> per-participant resolve chain
+        "trace_audit": cluster.obs.tracer.audit_txns(),
     }
+    out["trace_audit"] = cluster.obs.tracer.audit_writes()
+    if schedule is not None:
+        out["cluster_events"] = cluster.obs.events.export(t0=t_start)
     return out
 
 
@@ -488,5 +517,70 @@ def run_cassandra_workload(spec: WorkloadSpec,
     log, t_start, _drv = _drive(sim, adapter, spec, cfg, schedule, cluster,
                                 n_pre)
     prefix = "" if quorum else "eventual_"
-    return _result(log, cfg, f"{prefix}read", f"{prefix}write", schedule,
-                   t_start)
+    out = _result(log, cfg, f"{prefix}read", f"{prefix}write", schedule,
+                  t_start)
+    out["trace_audit"] = cluster.obs.tracer.audit_writes()
+    if schedule is not None:
+        out["cluster_events"] = cluster.obs.events.export(t0=t_start)
+    return out
+
+
+def _breakdown_block(cluster, log, cfg: ExperimentConfig,
+                     write_kind: str) -> dict:
+    """Latency-breakdown result block shared by both systems: per-stage
+    p50 decomposition from the traces, cross-checked against the OpLog's
+    independently measured percentiles."""
+    bd = stage_breakdown(cluster.obs.tracer.traces, kind=write_kind)
+    w = log.summary(write_kind, duration=cfg.duration)
+    bd["measured_write_p50_ms"] = w["p50_ms"]
+    bd["measured_write_p99_ms"] = w["p99_ms"]
+    bd["write_throughput"] = w.get("throughput", 0.0)
+    bd["trace_audit"] = cluster.obs.tracer.audit_writes()
+    if cfg.metrics_interval > 0:
+        bd["metrics"] = cluster.obs.metrics.summary()
+    return bd
+
+
+def run_spinnaker_breakdown(spec: WorkloadSpec,
+                            cfg: Optional[ExperimentConfig] = None) -> dict:
+    """Strong-write latency breakdown: drive the mix with full tracing and
+    decompose write p50 into client_queue / net_req / cpu / batch_wait /
+    wal_force / commit_wait / reply_net stage contributions."""
+    cfg = cfg or ExperimentConfig()
+    sim, cluster = build_spinnaker(cfg, num_keys=_aligned_presplit(cfg, spec))
+    loader = cluster.make_client("preload")
+    n_pre = min(cfg.preload_keys or spec.num_keys, cfg.preload_cap,
+                spec.num_keys)
+
+    def pre_put(k, cb):
+        # keep preload's burst writes out of the "write" trace population
+        # (2000 simultaneous ops would pollute the stage rank band)
+        loader.next_trace_kind = "preload"
+        loader.put(k, "c", b"x" * spec.value_size, cb)
+
+    _preload(sim, pre_put, n_pre)
+    adapter = SpinnakerAdapter(cluster.make_client("bench"), consistent=True)
+    log, _t_start, _drv = _drive(sim, adapter, spec, cfg, None, cluster,
+                                 n_pre)
+    return _breakdown_block(cluster, log, cfg, "write")
+
+
+def run_cassandra_breakdown(spec: WorkloadSpec,
+                            cfg: Optional[ExperimentConfig] = None) -> dict:
+    """Same decomposition for the Cassandra baseline (quorum writes):
+    client_queue / net_req / cpu / durable_wait / reply_net."""
+    cfg = cfg or ExperimentConfig()
+    sim, cluster = build_cassandra(cfg)
+    loader = cluster.make_client("preload")
+    n_pre = min(cfg.preload_keys or spec.num_keys, cfg.preload_cap,
+                spec.num_keys)
+
+    def pre_put(k, cb):
+        loader.next_trace_kind = "preload"
+        loader.write(k, "c", b"x" * spec.value_size, True, cb)
+
+    _preload(sim, pre_put, n_pre)
+    adapter = CassandraAdapter(cluster.make_client("bench"), quorum=True)
+    log, _t_start, _drv = _drive(sim, adapter, spec, cfg, None, cluster,
+                                 n_pre)
+    return _breakdown_block(cluster, log, cfg, "write")

@@ -94,34 +94,66 @@ class WindowSummary:
 
 class OpLog:
     """Append-only record of completed ops; the single sink every driver
-    writes into."""
+    writes into.
+
+    Columns live in pre-allocated numpy arrays (doubling growth) with
+    kinds interned to small int codes, so `count` and `windows` are
+    vectorized scans instead of per-row Python loops — material at the
+    10^5+ ops a saturation run produces."""
 
     def __init__(self):
-        self._t: list[float] = []
-        self._lat: list[float] = []
-        self._kind: list[str] = []
-        self._ok: list[bool] = []
+        self._cap = 1024
+        self._n = 0
+        self._t = np.empty(self._cap, dtype=np.float64)
+        self._lat = np.empty(self._cap, dtype=np.float64)
+        self._kc = np.empty(self._cap, dtype=np.int32)     # kind codes
+        self._okv = np.empty(self._cap, dtype=bool)
+        self._code_of: dict[str, int] = {}
+        self._name_of: list[str] = []
         self.hists: dict[str, LatencyHistogram] = {}
+
+    def _grow(self) -> None:
+        self._cap *= 2
+        for name in ("_t", "_lat", "_kc", "_okv"):
+            old = getattr(self, name)
+            new = np.empty(self._cap, dtype=old.dtype)
+            new[:self._n] = old[:self._n]
+            setattr(self, name, new)
 
     def record(self, t_done: float, kind: str, ok: bool,
                latency: float) -> None:
-        self._t.append(t_done)
-        self._lat.append(latency)
-        self._kind.append(kind)
-        self._ok.append(ok)
+        if self._n == self._cap:
+            self._grow()
+        code = self._code_of.get(kind)
+        if code is None:
+            code = self._code_of[kind] = len(self._name_of)
+            self._name_of.append(kind)
+        i = self._n
+        self._t[i] = t_done
+        self._lat[i] = latency
+        self._kc[i] = code
+        self._okv[i] = ok
+        self._n = i + 1
         if ok:
             self.hists.setdefault(kind, LatencyHistogram()).add(latency)
 
     def __len__(self) -> int:
-        return len(self._t)
+        return self._n
 
     def count(self, kind: Optional[str] = None, ok: Optional[bool] = None
               ) -> int:
-        n = 0
-        for k, o in zip(self._kind, self._ok):
-            if (kind is None or k == kind) and (ok is None or o == ok):
-                n += 1
-        return n
+        n = self._n
+        if n == 0:
+            return 0
+        mask = np.ones(n, dtype=bool)
+        if kind is not None:
+            code = self._code_of.get(kind)
+            if code is None:
+                return 0
+            mask &= self._kc[:n] == code
+        if ok is not None:
+            mask &= self._okv[:n] == ok
+        return int(mask.sum())
 
     def summary(self, kind: str, duration: Optional[float] = None) -> dict:
         h = self.hists.get(kind)
@@ -134,21 +166,28 @@ class OpLog:
     def windows(self, width: float, kind: Optional[str] = None,
                 t0: Optional[float] = None, t1: Optional[float] = None
                 ) -> list[WindowSummary]:
-        """Slice [t0, t1) into `width`-second windows (Figs. 9-10 series)."""
-        if not self._t:
+        """Slice [t0, t1) into `width`-second windows (Figs. 9-10 series).
+        The final window is clamped to `t1`, and its throughput divides by
+        the clamped width — a 0.5 s tail no longer reads as half the rate
+        it actually sustained."""
+        n = self._n
+        if n == 0:
             return []
-        t = np.asarray(self._t)
-        lat = np.asarray(self._lat)
-        ok = np.asarray(self._ok)
-        sel = np.ones(len(t), dtype=bool)
+        t = self._t[:n]
+        lat = self._lat[:n]
+        ok = self._okv[:n]
+        sel = np.ones(n, dtype=bool)
         if kind is not None:
-            sel &= np.asarray([k == kind for k in self._kind])
+            code = self._code_of.get(kind)
+            if code is None:
+                return []
+            sel &= self._kc[:n] == code
         t0 = float(t.min()) if t0 is None else t0
         t1 = float(t.max()) + 1e-9 if t1 is None else t1
         out = []
         w0 = t0
         while w0 < t1:
-            w1 = w0 + width
+            w1 = min(w0 + width, t1)
             m = sel & (t >= w0) & (t < w1)
             good = m & ok
             n_issued = int(m.sum())
@@ -162,8 +201,8 @@ class OpLog:
                 p50 = p95 = p99 = math.nan
             out.append(WindowSummary(
                 t_start=w0, t_end=w1, kind=kind or "all",
-                throughput=n_ok / width,
+                throughput=n_ok / (w1 - w0),
                 error_rate=(n_issued - n_ok) / n_issued if n_issued else 0.0,
                 p50_ms=p50, p95_ms=p95, p99_ms=p99))
-            w0 = w1
+            w0 += width
         return out

@@ -1,0 +1,278 @@
+"""Observability layer: sim-time span tracer, per-node metrics registry,
+structured cluster event log, and the write-path latency breakdown.
+
+The load-bearing invariants:
+
+- sampling is a deterministic error-diffusion accumulator (rate-exact,
+  never touches the simulator RNG, so tracing cannot perturb a run);
+- a complete trace's stage durations sum exactly to its end-to-end
+  latency (the chain *partitions* the write path);
+- every acked write on a live cluster carries the full
+  propose -> quorum-ack -> commit -> apply chain, and every committed
+  cross-range 2PC txn the full prepare -> vote -> decide -> resolve
+  chain (`audit_writes` / `audit_txns`);
+- a traced run is op-for-op identical to an untraced one.
+"""
+
+import math
+
+import pytest
+
+from repro.core import (ClusterConfig, OpType, Simulator, SpinnakerCluster,
+                        WriteOp, key_of)
+from repro.obs import ObsConfig
+from repro.obs.events import EventLog
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import OpTrace, Tracer, stage_breakdown
+from repro.workload import (ExperimentConfig, WorkloadSpec,
+                            run_spinnaker_workload)
+
+
+def make_cluster(n=5, seed=0, **obs_kw):
+    sim = Simulator(seed=seed)
+    cfg = ClusterConfig(n_nodes=n, obs=ObsConfig(**obs_kw))
+    cluster = SpinnakerCluster(sim, cfg)
+    cluster.start()
+    cluster.settle()
+    return sim, cluster
+
+
+def sync(sim, fn, *args, budget=10.0):
+    box = []
+    fn(*args, lambda r: box.append(r))
+    deadline = sim.now + budget
+    while not box and sim.now < deadline:
+        sim.run(until=sim.now + 0.05)
+    assert box, "op did not complete"
+    return box[0]
+
+
+# ---------------------------------------------------------------------------
+# tracer mechanics (no cluster)
+# ---------------------------------------------------------------------------
+
+
+def test_sampling_is_deterministic_and_rate_exact():
+    sim = Simulator(seed=0)
+    for rate, want in ((1.0, 1000), (0.5, 500), (0.25, 250), (0.0, 0)):
+        tr = Tracer(sim, "spinnaker", sample=rate)
+        got = sum(tr.maybe_start("write", "write", "k") is not None
+                  for _ in range(1000))
+        # error diffusion: exact over any window (binary-exact rates),
+        # not just in expectation
+        assert got == want, (rate, got)
+    tr = Tracer(sim, "spinnaker", sample=0.1)
+    got = sum(tr.maybe_start("write", "write", "k") is not None
+              for _ in range(1000))
+    assert abs(got - 100) <= 1             # fp accumulation slack only
+    # same sequence twice -> identical sampling decisions
+    a = Tracer(sim, "spinnaker", sample=0.37)
+    b = Tracer(sim, "spinnaker", sample=0.37)
+    pa = [a.maybe_start("w", "write", "k") is not None for _ in range(500)]
+    pb = [b.maybe_start("w", "write", "k") is not None for _ in range(500)]
+    assert pa == pb
+    assert sum(pa) == pytest.approx(0.37 * 500, abs=1)
+
+
+def test_disabled_tracer_samples_nothing():
+    sim = Simulator(seed=0)
+    tr = Tracer(sim, "spinnaker", sample=1.0, enabled=False)
+    assert tr.maybe_start("write", "write", "k") is None
+    assert tr.txn_begin("tx1", 0, [0, 1]) is None
+    tr.txn_mark("tx1", "vote", 0)          # no-op, must not raise
+    assert tr.audit_writes()["ok"] and tr.audit_txns()["ok"]
+
+
+def test_stages_partition_e2e_exactly():
+    t = OpTrace(trace_id=1, kind="write", path="write", key="k",
+                system="spinnaker", t_issue=1.0, t_send=1.001,
+                t_recv=1.0015, t_cpu=1.0016, t_flush=1.0018,
+                t_forced=1.0021, t_commit=1.0027, t_done=1.0031)
+    t.ok = True
+    assert t.complete()
+    assert sum(t.stages().values()) == pytest.approx(t.e2e, abs=1e-12)
+    assert set(t.stages()) == {"client_queue", "net_req", "cpu",
+                               "batch_wait", "wal_force", "commit_wait",
+                               "reply_net"}
+
+
+def test_audit_flags_incomplete_acked_write():
+    sim = Simulator(seed=0)
+    tr = Tracer(sim, "spinnaker", sample=1.0)
+    good = tr.maybe_start("write", "write", "k1")
+    good.t_send = good.t_recv = good.t_cpu = good.t_flush = 0.0
+    good.t_forced = good.t_commit = 0.0
+    tr.finish(good, True, "OK")
+    assert tr.audit_writes()["ok"]
+    bad = tr.maybe_start("write", "write", "k2")
+    bad.t_send = bad.t_recv = 0.0          # never reached the WAL
+    tr.finish(bad, True, "OK")
+    audit = tr.audit_writes()
+    assert not audit["ok"] and audit["incomplete"] == 1
+    assert "t_commit" in audit["violations"][0]["missing"]
+    # failed ops are exempt: the chain only owes acked writes
+    nak = tr.maybe_start("write", "write", "k3")
+    tr.finish(nak, False, "TIMEOUT")
+    assert tr.audit_writes()["incomplete"] == 1
+
+
+def test_stage_breakdown_reconstructs_known_median():
+    sim = Simulator(seed=0)
+    tr = Tracer(sim, "spinnaker", sample=1.0)
+    # 100 synthetic writes, all identical: every stage mean is exact
+    for i in range(100):
+        t = tr.maybe_start("write", "write", f"k{i}")
+        t.t_send = t.t_issue + 0.0001
+        t.t_recv = t.t_send + 0.0004
+        t.t_cpu = t.t_recv + 0.0001
+        t.t_flush = t.t_cpu + 0.0002
+        t.t_forced = t.t_flush + 0.0001
+        t.t_commit = t.t_forced + 0.0005
+        tr.finish(t, True, "OK")
+        t.t_done = t.t_commit + 0.0004     # finish() stamped sim.now; undo
+    bd = stage_breakdown(tr.traces, kind="write")
+    assert bd["n_traces"] == 100
+    assert bd["stage_sum_p50_ms"] == pytest.approx(bd["p50_ms"], rel=1e-6)
+    assert bd["stages_p50_ms"]["net_req"] == pytest.approx(0.4, rel=1e-6)
+    assert bd["stages_p50_ms"]["commit_wait"] == pytest.approx(0.5, rel=1e-6)
+    assert len(bd["top_slowest"]) == 10
+    assert stage_breakdown([], kind="write")["n_traces"] == 0
+
+
+# ---------------------------------------------------------------------------
+# live-cluster chains
+# ---------------------------------------------------------------------------
+
+
+def test_live_write_trace_complete_and_partitions_latency():
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    res = sync(sim, c.put, key_of(3), "c", b"v")
+    assert res.ok
+    traces = [t for t in cluster.obs.tracer.traces if t.path == "write"]
+    assert traces, "write was not sampled at trace_sample=1.0"
+    t = traces[-1]
+    assert t.complete(), t.missing()
+    assert sum(t.stages().values()) == pytest.approx(t.e2e, abs=1e-12)
+    assert t.attempts == 1 and t.lsn is not None
+    assert cluster.obs.tracer.audit_writes()["ok"]
+
+
+def test_live_cross_range_txn_chain_complete():
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    keys = [key_of(1), key_of(99_000)]
+    assert cluster.range_of(keys[0]) != cluster.range_of(keys[1])
+    ops = [WriteOp(OpType.PUT, keys[0], "a", b"1"),
+           WriteOp(OpType.PUT, keys[1], "a", b"2")]
+    res = sync(sim, c.transaction, ops)
+    assert res.ok and c.txn2_issued >= 1
+    sim.run_for(2.0)                       # let resolves land everywhere
+    audit = cluster.obs.tracer.audit_txns()
+    assert audit["ok"], audit
+    assert audit["committed_txns"] == 1 and audit["acked_txns"] == 1
+    (txn,) = cluster.obs.tracer.txns.values()
+    assert len(txn.participants) == 2
+    assert txn.outcome == "commit"
+    # chain ordering: prepares precede votes precede decide and resolves
+    for rid in txn.participants:
+        assert txn.prepare_sent[rid] <= txn.voted[rid] <= txn.t_decided
+        assert txn.t_decided <= txn.resolved[rid]
+    # the client op trace over the txn path also closed its chain
+    assert cluster.obs.tracer.audit_writes()["ok"]
+
+
+def test_tracing_does_not_perturb_the_run():
+    spec = WorkloadSpec(num_keys=100, value_size=256,
+                        read_frac=0.5, write_frac=0.5, rmw_frac=0,
+                        cond_frac=0)
+    outs = []
+    for sample in (1.0, 0.0):
+        cfg = ExperimentConfig(n_nodes=3, disk="mem", n_clients=2,
+                               warmup=0.2, duration=1.5, preload_cap=50,
+                               trace_sample=sample)
+        outs.append(run_spinnaker_workload(spec, cfg))
+    on, off = outs
+    # zero modeled cost: the traced run is op-for-op the untraced run
+    assert on["total_ops"] == off["total_ops"]
+    assert on["writes"]["count"] == off["writes"]["count"]
+    assert on["writes"]["p99_ms"] == pytest.approx(off["writes"]["p99_ms"])
+    assert on["trace_audit"]["acked_writes_traced"] > 0
+    assert on["trace_audit"]["ok"]
+    assert off["trace_audit"]["acked_writes_traced"] == 0
+
+
+# ---------------------------------------------------------------------------
+# metrics registry + event log
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_scrape_series_and_summary():
+    sim = Simulator(seed=0)
+    reg = MetricsRegistry(sim, interval=0.1)
+    box = {"v": 0.0}
+    reg.add_gauge(2, "queue_depth", lambda: box["v"])
+    reg.add_gauge(3, "broken", lambda: 1 / 0)     # tolerated, not exported
+    reg.start()
+    for i in range(5):
+        sim.schedule(0.1 * i + 0.01, lambda i=i: (
+            reg.inc(1, "writes", 10), box.__setitem__("v", float(i))))
+    sim.run(until=0.55)
+    reg.stop()
+    exp = reg.export()
+    assert "n3.broken" not in exp
+    writes = exp["n1.writes"]
+    assert len(writes) == 5
+    # counters export cumulatively
+    assert [v for _, v in writes] == [10.0, 20.0, 30.0, 40.0, 50.0]
+    gauge = exp["n2.queue_depth"]
+    assert [v for _, v in gauge] == [0.0, 1.0, 2.0, 3.0, 4.0]
+    s = reg.summary()
+    assert s["n1.writes"]["last"] == 50.0 and s["n1.writes"]["max"] == 50.0
+    assert s["n2.queue_depth"]["mean"] == pytest.approx(2.0)
+
+
+def test_metrics_ticker_not_armed_without_start():
+    sim = Simulator(seed=0)
+    reg = MetricsRegistry(sim, interval=0.0)
+    reg.inc(0, "x")
+    reg.start()                            # interval 0: stays unarmed
+    sim.run_until_idle()                   # must terminate
+    assert reg.export() == {}
+
+
+def test_event_log_export_relative_and_filtered():
+    sim = Simulator(seed=0)
+    log = EventLog(sim, cap=3)
+    for t, kind in ((0.5, "election"), (1.5, "split"), (2.5, "fault")):
+        sim.schedule(t, lambda k=kind: log.emit(k, rid=0))
+    for _ in range(3):
+        sim.schedule(2.8, lambda: log.emit("overflow"))
+    sim.run(until=3.0)
+    assert log.dropped == 3                # cap=3 held
+    out = log.export(t0=1.0)
+    assert [e["kind"] for e in out] == ["split", "fault"]
+    assert out[0]["t"] == pytest.approx(0.5) and out[0]["rid"] == 0
+    only = log.export(kinds={"election"})
+    assert [e["kind"] for e in only] == ["election"]
+
+
+def test_cluster_emits_election_events():
+    sim, cluster = make_cluster(n=3)
+    kinds = {e["kind"] for e in cluster.obs.events.events}
+    assert "leader_open" in kinds
+    rid0 = cluster.leader_replica(0)
+    cluster.crash_node(rid0.node.node_id)
+    sim.run_for(6.0)
+    kinds = {e["kind"] for e in cluster.obs.events.events}
+    assert "node_crash" in kinds and "leader_takeover" in kinds
+
+
+def test_node_gauges_registered_per_node():
+    sim, cluster = make_cluster(n=3, metrics_interval=0.5)
+    sim.run_for(1.2)
+    exp = cluster.obs.metrics.export()
+    for node_id in cluster.nodes:
+        key = f"n{node_id}.wal_forces"
+        assert key in exp and len(exp[key]) >= 2
+    assert any(k.endswith(".cpu_queue_s") for k in exp)

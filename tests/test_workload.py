@@ -3,6 +3,7 @@ partitions, batched reads, and timeline-read monotonicity across a leader
 failover (§8.1, Figs. 9-10)."""
 
 import collections
+import math
 
 import numpy as np
 import pytest
@@ -124,6 +125,61 @@ def test_histogram_percentiles_bounded_error():
     assert h.summary()["count"] == 20000
 
 
+def test_histogram_percentile_within_one_log_bin():
+    # the bin grid is 30/decade: any percentile answer must sit within
+    # one bin-width factor (10^(1/30) ~ 1.08x) of the exact sample
+    # quantile, clamped to the observed [min, max]
+    h = LatencyHistogram()
+    rng = np.random.default_rng(7)
+    xs = np.sort(rng.lognormal(mean=-6, sigma=1.5, size=50000))
+    for x in xs:
+        h.add(float(x))
+    bin_factor = 10 ** (1 / 30)
+    for p in (10, 50, 90, 95, 99, 99.9):
+        exact = float(np.percentile(xs, p, method="inverted_cdf"))
+        got = h.percentile(p)
+        assert exact / bin_factor * 0.999 <= got <= exact * bin_factor \
+            * 1.001, (p, got, exact)
+
+
+def test_histogram_empty_summary():
+    h = LatencyHistogram()
+    s = h.summary()
+    assert s["count"] == 0
+    for k in ("mean_ms", "p50_ms", "p95_ms", "p99_ms", "min_ms"):
+        assert math.isnan(s[k]), (k, s[k])
+    assert s["max_ms"] == 0.0
+
+
+def test_histogram_merge():
+    a, b, ref = LatencyHistogram(), LatencyHistogram(), LatencyHistogram()
+    rng = np.random.default_rng(1)
+    xa = rng.lognormal(-7, 1.0, 5000)
+    xb = rng.lognormal(-5, 0.5, 3000)
+    for x in xa:
+        a.add(float(x))
+        ref.add(float(x))
+    for x in xb:
+        b.add(float(x))
+        ref.add(float(x))
+    # merging an empty histogram is the identity
+    before = (a.total, a.sum, a.min, a.max, a.percentile(50))
+    a.merge(LatencyHistogram())
+    assert (a.total, a.sum, a.min, a.max, a.percentile(50)) == before
+    # empty.merge(populated) adopts the populated stats wholesale
+    e = LatencyHistogram()
+    e.merge(b)
+    assert e.total == b.total and e.percentile(95) == b.percentile(95)
+    assert e.min == b.min and e.max == b.max
+    # populated merge: identical to having added both populations
+    a.merge(b)
+    assert a.total == ref.total
+    assert a.sum == pytest.approx(ref.sum)
+    assert (a.min, a.max) == (ref.min, ref.max)
+    for p in (50, 95, 99):
+        assert a.percentile(p) == ref.percentile(p)
+
+
 def test_oplog_windows():
     log = OpLog()
     for i in range(100):
@@ -133,6 +189,38 @@ def test_oplog_windows():
     assert len(ws) == 2
     assert ws[0].throughput == pytest.approx(90.0, rel=0.15)
     assert 0.0 < ws[0].error_rate < 0.2
+
+
+def test_oplog_final_window_clamped_to_t1():
+    # 100 ops at a steady 100/s; a 0.4s window grid over [0, 1.0) leaves
+    # a 0.2s tail, which must report the true 100/s, not half of it
+    log = OpLog()
+    for i in range(100):
+        log.record(t_done=i * 0.01, kind="write", ok=True, latency=0.001)
+    ws = log.windows(0.4, kind="write", t0=0.0, t1=1.0)
+    assert len(ws) == 3
+    assert ws[-1].t_end == pytest.approx(1.0)
+    assert ws[-1].t_end - ws[-1].t_start == pytest.approx(0.2)
+    for w in ws:
+        assert w.throughput == pytest.approx(100.0)
+
+
+def test_oplog_vectorized_count():
+    log = OpLog()
+    assert log.count() == 0 and log.count(kind="nope") == 0
+    # push past the initial 1024 capacity to exercise array growth
+    for i in range(3000):
+        kind = ("read", "write", "rmw")[i % 3]
+        log.record(t_done=i * 1e-3, kind=kind, ok=(i % 5 != 0),
+                   latency=1e-4)
+    assert len(log) == 3000
+    assert log.count() == 3000
+    assert log.count(kind="read") == 1000
+    assert log.count(kind="write", ok=True) == 800
+    assert log.count(kind="write", ok=False) == 200
+    assert log.count(ok=False) == 600
+    assert log.count(kind="unknown") == 0
+    assert log.count(kind="unknown", ok=True) == 0
 
 
 # ---------------------------------------------------------------------------
