@@ -8,10 +8,14 @@
 # on both kill runs (every acked write / committed 2PC txn must carry a
 # full span chain), a breakdown gate (the per-stage decomposition must
 # partition the measured write p50 within 5%) with a schema check of the
-# committed BENCH_spinnaker.json "breakdown" block, a perf-regression
-# check against the committed BENCH_spinnaker.json (fig8 write throughput
-# + a capped saturation quick-sweep must not regress >10% / lose the
-# batching edge), plus the tier-1 test suite.
+# committed BENCH_spinnaker.json "breakdown" block, a chaos gate (two
+# seeded gray-failure schedules with linearizability / availability /
+# lost-write / trace audits all clean, plus the minority-partitioned-
+# leader pair: lease-bounded failover vs stall-until-heal) with a schema
+# check of the committed "chaos" block, a perf-regression check against
+# the committed BENCH_spinnaker.json (fig8 write throughput + a capped
+# saturation quick-sweep must not regress >10% / lose the batching
+# edge), plus the tier-1 test suite.
 #
 #     bash benchmarks/smoke.sh
 set -euo pipefail
@@ -143,6 +147,60 @@ for system in ("spinnaker", "cassandra"):
 assert bd["check"]["ok"], bd["check"]
 print("ok: committed breakdown block well-formed, stage sums within 5% "
       "of p50 for both systems")
+EOF
+
+echo "== chaos gate: seeded gray-failure schedules + minority-leader lease =="
+python - <<'EOF'
+import warnings
+warnings.filterwarnings("ignore")
+from repro.workload import run_spinnaker_chaos, run_spinnaker_minority_leader
+
+for seed in (0, 1):
+    r = run_spinnaker_chaos(seed=seed, duration=8.0)
+    assert r["linearizability"]["ok"], r["linearizability"]["violations"][:3]
+    assert r["availability"]["ok"], r["availability"]["violations"][:3]
+    assert not r["lost_acked_writes"], r["lost_acked_writes"][:3]
+    assert r["trace_audit"]["ok"], r["trace_audit"]
+    assert r["ok"]
+    print(f"ok: seed={seed} {r['history_ops']} history ops under "
+          f"{len(r['fault_events'])} faults, all audits clean")
+
+on = run_spinnaker_minority_leader(lease_enabled=True)
+bound = on["lease_duration_s"] + 1.0
+assert on["failover_s"] is not None and on["failover_s"] <= bound, on
+assert not on["old_leader_lease_valid"] and on["old_leader_role"] != "LEADER"
+off = run_spinnaker_minority_leader(lease_enabled=False)
+assert off["stalled_until_heal"], off
+print(f"ok: minority-partitioned leader fails over in {on['failover_s']}s "
+      f"(bound {bound}s) with leases; stalls until heal without")
+EOF
+
+echo "== chaos schema check vs committed BENCH_spinnaker.json =="
+python - <<'EOF'
+import json, pathlib
+p = pathlib.Path("BENCH_spinnaker.json")
+if not p.exists():
+    print("skip: no committed BENCH_spinnaker.json")
+    raise SystemExit(0)
+ch = json.loads(p.read_text()).get("chaos")
+assert ch, "committed BENCH_spinnaker.json lacks a 'chaos' block"
+assert len(ch["runs"]) >= 8, len(ch["runs"])
+for run in ch["runs"]:
+    for key in ("seed", "schedule", "fault_events", "linearizability",
+                "availability", "lost_acked_writes", "client_robustness",
+                "trace_audit", "ok"):
+        assert key in run, key
+    assert run["ok"], (run["seed"], run["linearizability"],
+                       run["availability"])
+ml = ch["minority_leader"]
+assert ml["lease_on"]["failover_s"] is not None
+assert ml["lease_off"]["stalled_until_heal"]
+ck = ch["check"]
+assert ck["ok"], ck
+print(f"ok: committed chaos block well-formed — {len(ch['runs'])} seeded "
+      f"schedules all green, failover {ck['failover_s_with_lease']}s <= "
+      f"{ck['failover_bound_s']}s, lease-read ratio "
+      f"{ck['lease_read_ratio']:.2f}")
 EOF
 
 echo "== perf-regression gate vs committed BENCH_spinnaker.json =="

@@ -38,6 +38,17 @@ Scenarios:
   tracing-overhead measurement (full sampling must cost < 5% write
   throughput; it models zero sim-time, so the expected cost is exactly
   zero).  `--report` pretty-prints the committed block;
+- `chaos`   — the robustness gate (PR 7): eight seeded gray-failure
+  schedules (crashes, partitions incl. one-way, lossy/dup/slow links,
+  degraded disks/CPUs, ZK session flaps) driven against concurrent
+  client histories, each audited for linearizability, availability
+  (majority-healthy windows must keep serving probe writes within the
+  recovery bound), lost acknowledged writes, and trace completeness;
+  plus the signature minority-partitioned-leader pair — with leader
+  leases the cohort fails over within `lease + election` and the old
+  leader self-fences, without them it stalls until the partition heals —
+  and the lease-read comparison (leaseholder strong reads serve locally,
+  so their p50 must not exceed the read-index path's);
 - `figs8-10`— figs 8, 9, 10;
 - `all`     — everything above in one JSON artifact;
 - `regress` — re-measure fig8 write throughput and a capped saturation
@@ -63,9 +74,10 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.workload import (ExperimentConfig, WorkloadSpec,  # noqa: E402
                             run_cassandra_breakdown, run_cassandra_workload,
-                            run_spinnaker_breakdown, run_spinnaker_rebalance,
-                            run_spinnaker_saturation, run_spinnaker_txn,
-                            run_spinnaker_workload)
+                            run_spinnaker_breakdown, run_spinnaker_chaos,
+                            run_spinnaker_minority_leader,
+                            run_spinnaker_rebalance, run_spinnaker_saturation,
+                            run_spinnaker_txn, run_spinnaker_workload)
 
 LEADER_KILL = """
 # Fig. 9/10: kill whichever node currently leads range 0, mid-load;
@@ -361,6 +373,100 @@ def check_txn(r: dict) -> dict:
     return out
 
 
+CHAOS_SEEDS = 8
+
+
+def run_chaos(quick: bool) -> dict:
+    """Chaos gate (PR 7): seeded gray-failure schedules with full audits,
+    the minority-partitioned-leader lease-vs-stall pair, and the
+    lease-read latency comparison."""
+    duration = 10.0 if quick else 18.0
+    runs = []
+    for seed in range(CHAOS_SEEDS):
+        print(f"chaos: schedule seed={seed} ...", flush=True)
+        r = run_spinnaker_chaos(seed=seed, duration=duration)
+        rb = r["client_robustness"]
+        print(f"  {'ok' if r['ok'] else 'FAIL'}: {r['history_ops']} history "
+              f"ops, {len(r['fault_events'])} faults, "
+              f"{rb['retries']} retries, lin="
+              f"{'clean' if r['linearizability']['ok'] else 'VIOLATED'}, "
+              f"avail={'ok' if r['availability']['ok'] else 'VIOLATED'}, "
+              f"lost={len(r['lost_acked_writes'])}", flush=True)
+        runs.append(r)
+
+    print("chaos: minority-partitioned leader, leases ON ...", flush=True)
+    on = run_spinnaker_minority_leader(lease_enabled=True)
+    print(f"  failover={on['failover_s']}s first_ack_gap="
+          f"{on['first_ack_gap_s']}s old leader {on['old_leader_role']} "
+          f"lease_valid={on['old_leader_lease_valid']}", flush=True)
+    print("chaos: minority-partitioned leader, leases OFF ...", flush=True)
+    off = run_spinnaker_minority_leader(lease_enabled=False)
+    print(f"  failover={off['failover_s']} stalled_until_heal="
+          f"{off['stalled_until_heal']} first_ack_gap="
+          f"{off['first_ack_gap_s']}s", flush=True)
+
+    # lease-holder strong reads serve locally (zero round-trips); with
+    # leases off every strong read pays the read-index majority round
+    print("chaos: strong-read p50, lease vs read-index ...", flush=True)
+    spec = WorkloadSpec(num_keys=1000, key_dist="zipfian", zipf_theta=0.99,
+                        read_frac=0.95, write_frac=0.05, rmw_frac=0.0,
+                        cond_frac=0.0, value_size=1024)
+    rcfg = base_cfg(quick, seed=2)
+    lease_on = run_spinnaker_workload(spec, rcfg, consistent_reads=True)
+    rcfg_off = dataclasses.replace(rcfg, lease_enabled=False)
+    lease_off = run_spinnaker_workload(spec, rcfg_off, consistent_reads=True)
+    reads = {
+        "lease_on_read_p50_ms": lease_on["reads"]["p50_ms"],
+        "lease_off_read_p50_ms": lease_off["reads"]["p50_ms"],
+        "ratio": lease_on["reads"]["p50_ms"]
+        / max(lease_off["reads"]["p50_ms"], 1e-9),
+    }
+    print(f"  lease on p50={reads['lease_on_read_p50_ms']:.3f}ms, "
+          f"off p50={reads['lease_off_read_p50_ms']:.3f}ms "
+          f"(ratio {reads['ratio']:.2f})", flush=True)
+    return {"runs": runs, "minority_leader": {"lease_on": on,
+                                             "lease_off": off},
+            "lease_reads": reads}
+
+
+def check_chaos(r: dict) -> dict:
+    """Acceptance surface: every seeded schedule passes all four audits;
+    the minority-partitioned leader fails over within lease + election
+    with leases (and provably self-fences) but stalls until heal without;
+    lease-holder strong reads are no slower than the read-index path."""
+    runs = r["runs"]
+    on = r["minority_leader"]["lease_on"]
+    off = r["minority_leader"]["lease_off"]
+    failover_bound = on["lease_duration_s"] + 1.0
+    out = {
+        "n_schedules": len(runs),
+        "all_schedules_ok": all(x["ok"] for x in runs),
+        "lin_violations": sum(len(x["linearizability"]["violations"])
+                              for x in runs),
+        "avail_violations": sum(len(x["availability"]["violations"])
+                                for x in runs),
+        "lost_acked_writes": sum(len(x["lost_acked_writes"]) for x in runs),
+        "failover_s_with_lease": on["failover_s"],
+        "failover_bound_s": failover_bound,
+        "failover_within_bound": on["failover_s"] is not None
+        and on["failover_s"] <= failover_bound,
+        "old_leader_fenced": not on["old_leader_lease_valid"]
+        and on["old_leader_role"] != "LEADER",
+        "stalls_without_lease": off["stalled_until_heal"],
+        "lease_read_ratio": r["lease_reads"]["ratio"],
+        "lease_reads_not_slower": r["lease_reads"]["ratio"] <= 1.0,
+    }
+    out["ok"] = bool(out["n_schedules"] >= CHAOS_SEEDS
+                     and out["all_schedules_ok"]
+                     and out["lin_violations"] == 0
+                     and out["lost_acked_writes"] == 0
+                     and out["failover_within_bound"]
+                     and out["old_leader_fenced"]
+                     and out["stalls_without_lease"]
+                     and out["lease_reads_not_slower"])
+    return out
+
+
 def breakdown_spec(quick: bool) -> WorkloadSpec:
     """Plain read/write mix — no rmw/cond legs, so the 'write' trace
     population is exactly the strong-write path the report decomposes."""
@@ -564,8 +670,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scenario", default="all",
                     choices=["fig8", "fig9", "fig10", "saturation",
-                             "rebalance", "txn", "breakdown", "figs8-10",
-                             "all", "regress"])
+                             "rebalance", "txn", "breakdown", "chaos",
+                             "figs8-10", "all", "regress"])
     ap.add_argument("--quick", action="store_true",
                     help="short runs (CI / smoke mode)")
     ap.add_argument("--out", default="BENCH_spinnaker.json")
@@ -603,6 +709,10 @@ def main(argv=None) -> int:
         print(f"  {rec['txn_check']}", flush=True)
     if args.scenario in ("breakdown", "all"):
         rec["breakdown"] = run_breakdown(args.quick)
+    if args.scenario in ("chaos", "all"):
+        rec["chaos"] = run_chaos(args.quick)
+        rec["chaos"]["check"] = check_chaos(rec["chaos"])
+        print(f"  {rec['chaos']['check']}", flush=True)
 
     Path(args.out).write_text(json.dumps(rec, indent=2))
     print(f"wrote {args.out}")
@@ -632,6 +742,10 @@ def main(argv=None) -> int:
     if "breakdown" in rec and not rec["breakdown"]["check"]["ok"]:
         print("FAIL: latency-breakdown gate "
               f"{rec['breakdown']['check']}")
+        rc = 1
+    if "chaos" in rec and not rec["chaos"]["check"]["ok"]:
+        print("FAIL: chaos gate "
+              f"{rec['chaos']['check']}")
         rc = 1
     return rc
 

@@ -11,6 +11,7 @@ their own RangeTable cache and chase WRONG_RANGE redirects.
 from __future__ import annotations
 
 import bisect
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
@@ -202,8 +203,48 @@ class SpinnakerCluster:
         `cluster.partition({0, 1}, {2, 3, 4})`."""
         self.net.set_partition(groups)
 
+    def partition_oneway(self, src_group, dst_group) -> None:
+        """Asymmetric partition: messages src_group -> dst_group are cut,
+        the reverse direction keeps flowing (gray failure)."""
+        self.obs.events.emit("partition_oneway",
+                             src=sorted(src_group), dst=sorted(dst_group))
+        self.net.set_oneway_partition(src_group, dst_group)
+
+    def set_link_fault(self, src: int, dst: int,
+                       drop_p: Optional[float] = None,
+                       dup_p: Optional[float] = None,
+                       delay_factor: Optional[float] = None) -> None:
+        """Degrade the directed data link src -> dst.  Merge semantics:
+        only the aspects passed change, so drop + delay compose."""
+        self.obs.events.emit("link_fault", src=src, dst=dst, drop_p=drop_p,
+                             dup_p=dup_p, delay_factor=delay_factor)
+        self.net.update_link_fault(src, dst, drop_p=drop_p, dup_p=dup_p,
+                                   delay_factor=delay_factor)
+
+    def slow_disk(self, node_id: int, factor: float) -> None:
+        """Gray failure: the node's log device serves at `factor`x latency."""
+        self.obs.events.emit("slow_disk", node=node_id, factor=factor)
+        self.nodes[node_id].disk.slow_factor = factor
+
+    def slow_cpu(self, node_id: int, factor: float) -> None:
+        """Gray failure: the node's CPU serves at `factor`x service time."""
+        self.obs.events.emit("slow_cpu", node=node_id, factor=factor)
+        self.nodes[node_id].cpu.slow_factor = factor
+
+    def flap_session(self, node_id: int, outage: float = 1.0) -> None:
+        """Expire the node's ZK session while it keeps running; the client
+        library reconnects after `outage` seconds."""
+        self.obs.events.emit("session_flap", node=node_id, outage=outage)
+        self.nodes[node_id].flap_session(outage)
+
     def heal(self) -> None:
-        self.net.clear_partition()
+        """Clear EVERY injected network/gray fault: symmetric and one-way
+        partitions, per-link drop/dup/delay, and disk/CPU slow factors.
+        (Crashed nodes stay down — `restart` is a separate event.)"""
+        self.net.clear_faults()
+        for node in self.nodes.values():
+            node.disk.slow_factor = 1.0
+            node.cpu.slow_factor = 1.0
 
     def trace(self, msg: str) -> None:
         if self.cfg.trace:
@@ -227,7 +268,8 @@ class Client:
     MAX_RETRIES = 60
     BACKOFF_BASE = 0.02      # first retry delay; doubles per retry ...
     BACKOFF_CAP = 1.0        # ... up to this cap (±50% jitter throughout)
-    ATTEMPT_TIMEOUT = 1.0    # per-attempt; lost messages (dead node) retry
+    ATTEMPT_TIMEOUT = 1.0    # first attempt; scales with the retry count
+    ATTEMPT_TIMEOUT_CAP = 8.0
 
     def __init__(self, cluster: SpinnakerCluster, client_id: str):
         self.cluster = cluster
@@ -244,6 +286,18 @@ class Client:
         self.stats_by_kind: dict[str, LatencyStats] = {}
         self.errors = 0
         self._session_seen: dict[tuple[str, str], int] = {}
+        # client-perceived robustness counters (chaos runs report these as
+        # client-side unavailability evidence); mirrored into the obs
+        # metrics registry under the client id
+        self.retries = 0
+        self.backoff_time = 0.0          # total seconds spent backing off
+        self.attempt_timeouts = 0        # per-attempt timer expiries
+        self.retry_exhausted = 0         # ops that gave up (TIMEOUT result)
+        self.error_counts: dict[str, int] = {}   # non-OK reply codes seen
+        # per-key retry gate: same-key writes that entered the retry path
+        # re-send in issue order (see _schedule_retry)
+        self._retry_gate: dict[str, dict] = {}
+        self._retry_waiters: dict[str, deque] = {}
         # workload-driver hook: called once per finished op with
         # (kind, result); fires for successes AND retry-exhausted timeouts
         self.op_hook: Optional[Callable[[str, Result], None]] = None
@@ -260,7 +314,82 @@ class Client:
         throughput (congestion collapse); spreading and spacing retries
         keeps the overload tail flat."""
         exp = min(self.BACKOFF_CAP, self.BACKOFF_BASE * (2 ** tries))
-        return exp * (0.5 + self.sim.rng.random())
+        delay = exp * (0.5 + self.sim.rng.random())
+        # every _retry_delay call schedules exactly one retry: count it here
+        self.retries += 1
+        self.backoff_time += delay
+        self._count("client_retries")
+        self._count("client_backoff_s", delay)
+        return delay
+
+    def _schedule_retry(self, kind: str, key: str, kw: dict, cb: Callable,
+                        consistent: bool, t0: float, tries: int) -> None:
+        """Re-schedule a failed attempt.  Same-key *writes* serialize
+        through a per-key gate while in the retry path: pipelined writes
+        that all bounced (redirect chasing a live split, leader failover)
+        must be re-sent in issue order, or a later conditional put can
+        overtake an earlier one and fail with a spurious VERSION_MISMATCH.
+        First sends are never gated — the happy path pipelines freely."""
+        delay = self._retry_delay(tries)
+        if kind not in ("write", "txn"):
+            self.sim.schedule(delay, self._op, kind, key, kw, cb,
+                              consistent, t0, tries + 1)
+            return
+        owner = self._retry_gate.get(key)
+        if owner is None or owner is kw:
+            self._retry_gate[key] = kw
+            self.sim.schedule(delay, self._op, kind, key, kw, cb,
+                              consistent, t0, tries + 1)
+        else:
+            self._retry_waiters.setdefault(key, deque()).append(
+                (delay, kind, kw, cb, consistent, t0, tries))
+
+    def _gate_release(self, kind: str, key: str, kw: dict) -> None:
+        """Terminal completion of a gated write: hand the gate to the next
+        parked same-key retry (preserving issue order) or clear it."""
+        if kind not in ("write", "txn") or self._retry_gate.get(key) is not kw:
+            return
+        q = self._retry_waiters.get(key)
+        if not q:
+            del self._retry_gate[key]
+            self._retry_waiters.pop(key, None)
+            return
+        delay, nkind, nkw, ncb, nconsistent, nt0, ntries = q.popleft()
+        if not q:
+            del self._retry_waiters[key]
+        self._retry_gate[key] = nkw
+        self.sim.schedule(delay, self._op, nkind, key, nkw, ncb,
+                          nconsistent, nt0, ntries + 1)
+
+    def _attempt_timeout(self, tries: int) -> float:
+        """Per-attempt timeout, scaled with the backoff schedule: the first
+        attempt keeps the historical 1 s, retries wait longer — under a
+        fault the op is probably queued behind recovery, and re-sending it
+        on a short fuse just multiplies load on the healing cohort."""
+        return min(self.ATTEMPT_TIMEOUT_CAP,
+                   self.ATTEMPT_TIMEOUT * (2 ** min(tries, 3)))
+
+    def _count(self, name: str, v: float = 1.0) -> None:
+        self.cluster.obs.metrics.inc(self.id, name, v)
+
+    def _note_reply(self, res: Optional[Result]) -> None:
+        """Track non-OK replies (and lost attempts) per error code."""
+        if res is None:
+            code = "ATTEMPT_TIMEOUT"
+            self.attempt_timeouts += 1
+        elif res.ok:
+            return
+        else:
+            code = getattr(res.code, "name", str(res.code))
+        self.error_counts[code] = self.error_counts.get(code, 0) + 1
+        self._count(f"client_err_{code}")
+
+    def robustness_summary(self) -> dict:
+        return {"retries": self.retries,
+                "backoff_time_s": round(self.backoff_time, 6),
+                "attempt_timeouts": self.attempt_timeouts,
+                "retry_exhausted": self.retry_exhausted,
+                "error_counts": dict(sorted(self.error_counts.items()))}
 
     def _lookup_leader(self, rid: int) -> Optional[int]:
         cached = self.leader_cache.get(rid)
@@ -398,6 +527,8 @@ class Client:
         if tries > self.MAX_RETRIES:
             for i, _k, _c in items:
                 self.errors += 1
+                self.retry_exhausted += 1
+                self._count("client_retry_exhausted")
                 deliver(i, Result(ErrorCode.TIMEOUT))
             return
         groups: dict[int, list[tuple[int, str, str]]] = {}
@@ -443,6 +574,8 @@ class Client:
                 return
             settled[0] = True
             timeout_ev.cancel()
+            if isinstance(res, Result):
+                self._note_reply(res)
             if res is None or isinstance(res, Result):
                 # whole-group gate failure (or dead target): retry all
                 wrong = res is not None and res.code == ErrorCode.WRONG_RANGE
@@ -465,9 +598,11 @@ class Client:
             if settled[0]:
                 return
             settled[0] = True
+            self._note_reply(None)
             retry(items, False, None)
 
-        timeout_ev = self.sim.schedule(self.ATTEMPT_TIMEOUT, on_timeout)
+        timeout_ev = self.sim.schedule(self._attempt_timeout(tries),
+                                       on_timeout)
         payload = dict(pairs=[(k, c) for _i, k, c in items],
                        consistent=consistent,
                        reply=self._reply_via_net(target, on_reply))
@@ -503,10 +638,14 @@ class Client:
                 kw["_trace"] = tr
         if tries > self.MAX_RETRIES:
             self.errors += 1
+            self.retry_exhausted += 1
+            self._count("client_retry_exhausted")
+            self._gate_release(kind, key, kw)
             tr = kw.pop("_trace", None)
             if tr is not None:
                 self.cluster.obs.tracer.finish(tr, False, "timeout")
-            res = Result(ErrorCode.TIMEOUT, latency=self.sim.now - t0)
+            res = Result(ErrorCode.TIMEOUT, latency=self.sim.now - t0,
+                         attempts=tries)
             if self.op_hook is not None:
                 self.op_hook(kind, res)
             cb(res)
@@ -535,8 +674,7 @@ class Client:
         if target is None:
             if rid is None:
                 self.range_table.invalidate()
-            self.sim.schedule(self._retry_delay(tries), self._op, kind, key,
-                              kw, cb, consistent, t0, tries + 1)
+            self._schedule_retry(kind, key, kw, cb, consistent, t0, tries)
             return
 
         settled = [False]
@@ -551,14 +689,14 @@ class Client:
             if res is not None and res.leader_hint is not None \
                     and res.code == ErrorCode.NOT_LEADER:
                 self.leader_cache[rid] = res.leader_hint
-            self.sim.schedule(self._retry_delay(tries), self._op, kind, key,
-                              kw, cb, consistent, t0, tries + 1)
+            self._schedule_retry(kind, key, kw, cb, consistent, t0, tries)
 
         def on_reply(res: Optional[Result]):
             if settled[0]:
                 return
             settled[0] = True
             timeout_ev.cancel()
+            self._note_reply(res)
             if res is not None and res.code == ErrorCode.LOCKED:
                 self.lock_retries += 1
             if res is None or res.code in (ErrorCode.NOT_LEADER,
@@ -567,7 +705,9 @@ class Client:
                                            ErrorCode.LOCKED):
                 retry(res)
                 return
+            self._gate_release(kind, key, kw)
             res.latency = self.sim.now - t0
+            res.attempts = tries + 1
             tr = kw.pop("_trace", None)
             if tr is not None:
                 self.cluster.obs.tracer.finish(
@@ -583,9 +723,11 @@ class Client:
             if settled[0]:
                 return
             settled[0] = True
+            self._note_reply(None)
             retry(None)
 
-        timeout_ev = self.sim.schedule(self.ATTEMPT_TIMEOUT, on_timeout)
+        timeout_ev = self.sim.schedule(self._attempt_timeout(tries),
+                                       on_timeout)
 
         payload = dict(payload_kw)
         payload.pop("_trace", None)

@@ -44,6 +44,13 @@ CPU_COST = {
     "on_txn_vote": (10e-6, 0.0),
     "on_txn_decide": (12e-6, 0.0),
     "on_txn_decided_ack": (8e-6, 0.0),
+    # lease renewal + connectivity probes (small control messages)
+    "on_lease": (8e-6, 0.0),
+    "on_lease_ack": (8e-6, 0.0),
+    "on_ping": (6e-6, 0.0),
+    "on_pong": (6e-6, 0.0),
+    "on_read_confirm": (8e-6, 0.0),
+    "on_read_confirm_ack": (8e-6, 0.0),
     "default": (10e-6, 0.0),
 }
 
@@ -209,9 +216,36 @@ class SpinnakerNode:
     def _heartbeat(self) -> None:
         if not self.up:
             return
-        self.zk.heartbeat(self.session)
+        if self.session is not None:
+            self.zk.heartbeat(self.session)
         self._hb_timer = self.sim.schedule(self.cfg.heartbeat_interval,
                                            self._heartbeat)
+
+    def flap_session(self, outage: float = 1.0) -> None:
+        """ZK session flap (gray failure): the session expires — every
+        ephemeral this node holds (its /nodes znode, leader claims,
+        candidacies) vanishes — while the node itself keeps serving.
+        After `outage` seconds the client library reconnects with a fresh
+        session and the replicas re-join their cohorts."""
+        if not self.up or self.session is None:
+            return
+        old = self.session
+        self.session = None
+        self.zk.expire_session(old)
+
+        def reconnect():
+            if not self.up or self.session is not None:
+                return
+            self.session = self.zk.create_session()
+            try:
+                self.zk.create(f"/nodes/{self.node_id}", data=self.sim.now,
+                               ephemeral_session=self.session)
+            except Exception:
+                pass
+            for rep in list(self.replicas.values()):
+                rep.on_session_reestablished()
+
+        self.sim.schedule(outage, reconnect)
 
     def crash(self, lose_disk: bool = False, expire_session: bool = False) -> None:
         """Fail-stop: volatile state lost; durable log/SSTables survive

@@ -80,6 +80,22 @@ class ReplicaConfig:
     # -- cross-range 2PC (core/txn.py) -------------------------------------
     txn_prepare_timeout: float = 0.5    # coordinator aborts stuck prepares
     txn_tick: float = 0.15              # resolution/resend/re-vote period
+    # -- partition-aware leader leases (§7; Keyspace-style master leases) ---
+    # A leader only serves strong reads/writes while it holds a time-bounded
+    # lease renewed through follower acks (renewal quorum = commit quorum).
+    # The lease window is anchored at the renewal's SEND time minus the
+    # maximum simulated clock skew, so a deposed leader's lease provably
+    # expires before the majority side elects a successor: followers wait
+    # `lease_duration + 4*max_clock_skew` of leader silence before deleting
+    # the leader znode (deposal needs fresh majority connectivity so a lone
+    # partitioned follower cannot disrupt a healthy cohort).  A leader whose
+    # lease lapses abdicates, fences writes, and suppresses its own
+    # candidacy until it re-establishes data-network majority contact —
+    # without this, the minority-partitioned ex-leader (max lst, ZK always
+    # reachable) would win every re-election and stall the range forever.
+    lease_enabled: bool = True
+    lease_duration: float = 1.0
+    max_clock_skew: float = 0.05
 
 
 class CohortReplica:
@@ -131,6 +147,27 @@ class CohortReplica:
 
         # follower-side
         self._announced_leader_epoch = 0
+
+        # -- leader leases + connectivity probes (cfg.lease_enabled) -------
+        self._lease_until = 0.0          # leader: lease valid through here
+        self._lease_seq = 0              # renewal round counter
+        self._lease_sent: dict[int, float] = {}      # seq -> send time
+        self._lease_acks: dict[int, set[int]] = {}   # seq -> acked peers
+        self._lease_timer = None
+        self._guard_timer = None
+        self._leader_seen = 0.0          # follower: last leader contact
+        self._catchup_seen = 0.0         # CATCHUP: last data-path progress
+                                         # (lease heartbeats keep
+                                         # _leader_seen fresh, so the
+                                         # catch-up retry must pace off its
+                                         # own clock or it never fires)
+        self._peer_seen: dict[int, float] = {}       # peer -> last pong/ping
+        self._suppressed = False         # barred from candidacy until
+                                         # majority data-net contact returns
+        self._rc_seq = 0                 # read-confirm (read-index) rounds
+        self._rc_waiting: list[Callable] = []
+        self._rc_acks: set[int] = set()
+        self._rc_inflight = False
 
         # stats
         self.commits = 0
@@ -201,7 +238,10 @@ class CohortReplica:
         self.proposed_version.clear()
         self.pending_split = None
         self._pending_member_change = False
+        self._suppressed = False     # fresh boots re-join without evidence
+        self._leader_seen = self.node.sim.now
         self.role = Role.ELECTING
+        self._arm_guard_timer()
         self._join_or_elect()
 
     def stop(self) -> None:
@@ -209,6 +249,16 @@ class CohortReplica:
         if self._commit_timer is not None:
             self._commit_timer.cancel()
             self._commit_timer = None
+        if self._lease_timer is not None:
+            self._lease_timer.cancel()
+            self._lease_timer = None
+        if self._guard_timer is not None:
+            self._guard_timer.cancel()
+            self._guard_timer = None
+        self._lease_until = 0.0
+        self._lease_sent.clear()
+        self._lease_acks.clear()
+        self._fail_read_confirms()
         self._reset_batch()
         self.txn.stop()
 
@@ -276,6 +326,14 @@ class CohortReplica:
         if self.role == Role.OFFLINE:
             return
         if not self._refresh_membership():
+            return
+        if self._suppressed and self.cfg.lease_enabled:
+            # fenced ex-leader: ZK is reachable (coordination sits outside
+            # the data network) and our lst is maximal, so we would win —
+            # and stall the range again.  Probe the data network instead;
+            # candidacy resumes once a majority answers.
+            self.role = Role.ELECTING
+            self._probe_connectivity()
             return
         self._minc("elections_started")
         self.role = Role.ELECTING
@@ -374,7 +432,22 @@ class CohortReplica:
         self.insync.clear()
         self.acked = {p: 0 for p in self.peers}
         # the unresolved window (l.cmt, l.lst] is already in self.queue
-        # (rebuilt from the durable log in start(), or live from before)
+        # (rebuilt from the durable log in start(), or live from before) —
+        # EXCEPT when this election was reached out of a CATCHUP that
+        # dropped the volatile tail (an aborted join under a leader that
+        # never sent catch-up data, e.g. one-way-partitioned away): the
+        # durable, never-truncated copies are still ours to re-commit
+        if self.lst > self.cmt \
+                and not all(l in self.queue
+                            for l in range(self.cmt + 1, self.lst + 1)):
+            for rec in (self.node.wal.records_between(
+                    self.rid, self.cmt, self.lst) or []):
+                self.queue.setdefault(rec.lsn, rec)
+            # anything still missing was logically truncated (a superseded
+            # tail): don't force peers past what we can actually re-send
+            have = max((l for l in self.queue if l > self.cmt),
+                       default=self.cmt)
+            self.lst = min(self.lst, have)
         self.forced_upto = self.lst        # everything local is durable or inflight->refused on crash
         self._takeover_hi = self.lst
         self._reset_batch()
@@ -423,6 +496,17 @@ class CohortReplica:
                        leader=self.node.node_id)
         self._watch_peer_sessions()
         self._arm_commit_timer()
+        # takeover grace lease: the previous regime's lease provably lapsed
+        # before our deposal/election, so a fresh window starting now is
+        # safe; renewals must extend it before it runs out, which doubles
+        # as the takeover timeout — a leader elected through ZK while
+        # data-partitioned never hears an ack and abdicates instead of
+        # squatting on the range
+        self._lease_until = self.node.sim.now + self.cfg.lease_duration
+        self._lease_sent.clear()
+        self._lease_acks.clear()
+        self._arm_lease_timer()
+        self._renew_lease()
 
     def _watch_peer_sessions(self) -> None:
         for p in self.peers:
@@ -458,6 +542,8 @@ class CohortReplica:
         self.epoch = epoch
         self.leader_id = leader_id
         self.role = Role.CATCHUP
+        self._leader_seen = self.node.sim.now
+        self._catchup_seen = self.node.sim.now
         self._drop_uncommitted_tail()
         self._watch_leader_liveness()
         self._send(leader_id, "on_follower_state", epoch=epoch,
@@ -477,6 +563,13 @@ class CohortReplica:
             if self._commit_timer is not None:
                 self._commit_timer.cancel()
                 self._commit_timer = None
+            if self._lease_timer is not None:
+                self._lease_timer.cancel()
+                self._lease_timer = None
+            self._lease_until = 0.0
+            self._lease_sent.clear()
+            self._lease_acks.clear()
+            self._fail_read_confirms()
             for op, cb, _tr in self.blocked_writes:
                 cb(Result(ErrorCode.NOT_LEADER, leader_hint=self.leader_id))
             self.blocked_writes.clear()
@@ -495,6 +588,278 @@ class CohortReplica:
             cb = self.pending_reply.pop(lsn)
             cb(Result(ErrorCode.UNAVAILABLE))
         self.txn.drop_uncommitted()
+
+    # ================================== leader leases (cfg.lease_enabled)
+    def _lease_tick_period(self) -> float:
+        return self.cfg.lease_duration / 4.0
+
+    def _depose_after(self) -> float:
+        """Leader silence a follower tolerates before deleting the leader
+        znode.  Strictly longer than any lease the silent leader can hold:
+        a granted lease ends at renewal-send-time + duration - skew, and
+        every acking follower saw that renewal no earlier than it was
+        sent, so silence of duration + 4*skew outlives it."""
+        return self.cfg.lease_duration + 4.0 * self.cfg.max_clock_skew
+
+    def lease_valid(self) -> bool:
+        return (self.cfg.lease_enabled
+                and self.node.sim.now <= self._lease_until)
+
+    def _arm_lease_timer(self) -> None:
+        if self._lease_timer is not None:
+            self._lease_timer.cancel()
+        self._lease_timer = self.node.sim.schedule(
+            self._lease_tick_period(), self._lease_tick)
+
+    def _lease_tick(self) -> None:
+        self._lease_timer = None
+        if self.role not in (Role.LEADER, Role.TAKEOVER) \
+                or not self.cfg.lease_enabled:
+            return
+        if self.node.sim.now > self._lease_until:
+            why = ("lease lapsed" if self.role is Role.LEADER
+                   else "takeover timed out (no data-net quorum)")
+            self._abdicate(why, suppress=True)
+            return
+        self._renew_lease()
+        self._arm_lease_timer()
+
+    def _renew_lease(self) -> None:
+        if not self.cfg.lease_enabled:
+            return
+        if self._majority() - 1 == 0:
+            # single-replica cohort: no follower promises needed
+            self._lease_until = max(
+                self._lease_until, self.node.sim.now
+                + self.cfg.lease_duration - self.cfg.max_clock_skew)
+            return
+        self._lease_seq += 1
+        seq = self._lease_seq
+        self._lease_sent[seq] = self.node.sim.now
+        self._lease_acks[seq] = set()
+        # prune stale rounds (acks for them could no longer extend anything)
+        for old in [s for s in self._lease_sent if s < seq - 8]:
+            self._lease_sent.pop(old, None)
+            self._lease_acks.pop(old, None)
+        for p in self.peers:
+            self._send(p, "on_lease", nbytes=96, epoch=self.epoch, seq=seq,
+                       leader=self.node.node_id)
+
+    def on_lease(self, epoch: int, seq: int, leader: int) -> None:
+        """Follower: a lease renewal doubles as a leader heartbeat — ack it
+        and push back our deposal clock (the promise not to elect)."""
+        if self.role not in (Role.FOLLOWER, Role.CATCHUP) \
+                or epoch != self.epoch:
+            return
+        self._leader_seen = self.node.sim.now
+        self._send(leader, "on_lease_ack", nbytes=96, epoch=epoch, seq=seq,
+                   follower=self.node.node_id)
+
+    def on_lease_ack(self, epoch: int, seq: int, follower: int) -> None:
+        if self.role not in (Role.LEADER, Role.TAKEOVER) \
+                or epoch != self.epoch:
+            return
+        self._peer_seen[follower] = self.node.sim.now
+        sent = self._lease_sent.get(seq)
+        acks = self._lease_acks.get(seq)
+        if sent is None or acks is None:
+            return
+        acks.add(follower)
+        if len(acks) >= self._majority() - 1:
+            # the lease window is anchored at the renewal's SEND time: every
+            # acking follower promises `_depose_after` of patience measured
+            # from a clock that saw the renewal AFTER it was sent
+            new_until = sent + self.cfg.lease_duration \
+                - self.cfg.max_clock_skew
+            self._lease_until = max(self._lease_until, new_until)
+
+    def _abdicate(self, why: str, suppress: bool) -> None:
+        """Fence ourselves out of the leader regime: drop the leader znode
+        (if still ours), refuse pending/blocked writes, and go back to
+        ELECTING.  The unresolved queue is KEPT — if we legitimately win a
+        later election these records are re-proposed exactly like after a
+        crash-restart (dropping them here would let `lst` advertise records
+        takeover could no longer resolve)."""
+        if self.role not in (Role.LEADER, Role.TAKEOVER):
+            return
+        self.log(f"abdicating: {why}")
+        self.obs.events.emit("leader_abdicate", node=self.node.node_id,
+                             rid=self.rid, epoch=self.epoch, why=why)
+        self._minc("leader_abdications")
+        leader_path = f"{self.base}/leader"
+        try:
+            lid, ep = self.zk.get(leader_path)
+            if lid == self.node.node_id and ep == self.epoch:
+                self.zk.delete(leader_path)
+        except NoNode:
+            pass
+        self._step_down()
+        for lsn in list(self.pending_reply):
+            cb = self.pending_reply.pop(lsn)
+            cb(Result(ErrorCode.UNAVAILABLE))
+        self._trace_by_lsn.clear()
+        self._suppressed = suppress and self.cfg.lease_enabled
+        self.role = Role.ELECTING
+        self._join_or_elect()
+
+    # --- connectivity probes (ping/pong over the data network) -------------
+    def on_ping(self, frm: int) -> None:
+        if self.role is Role.OFFLINE:
+            return
+        self._peer_seen[frm] = self.node.sim.now
+        self._send(frm, "on_pong", nbytes=96, frm=self.node.node_id)
+
+    def on_pong(self, frm: int) -> None:
+        if self.role is Role.OFFLINE:
+            return
+        self._peer_seen[frm] = self.node.sim.now
+
+    def _fresh_majority_contact(self, window: float = 0.75) -> bool:
+        now = self.node.sim.now
+        fresh = sum(1 for p in self.peers
+                    if now - self._peer_seen.get(p, -1e9) <= window)
+        return 1 + fresh >= self._majority()
+
+    def _probe_connectivity(self) -> None:
+        """Suppressed ex-leader in ELECTING: ping peers and re-enter the
+        join/elect path once a data-network majority answers."""
+        if self.role is not Role.ELECTING or not self._suppressed:
+            return
+        if self._fresh_majority_contact():
+            self._suppressed = False
+            self.log("data-net majority contact restored; candidacy resumes")
+            self._join_or_elect()
+            return
+        for p in self.peers:
+            self._send(p, "on_ping", nbytes=96, frm=self.node.node_id)
+        self.node.sim.schedule(0.25, self._probe_connectivity)
+
+    # --- follower watchdog -------------------------------------------------
+    def _arm_guard_timer(self) -> None:
+        if self._guard_timer is not None:
+            self._guard_timer.cancel()
+        self._guard_timer = self.node.sim.schedule(0.25, self._guard_tick)
+
+    def _guard_tick(self) -> None:
+        self._guard_timer = None
+        if self.role is Role.OFFLINE:
+            return
+        self._arm_guard_timer()
+        if self.role not in (Role.FOLLOWER, Role.CATCHUP):
+            return
+        stale = self.node.sim.now - self._leader_seen
+        leader_path = f"{self.base}/leader"
+        if self.role is Role.CATCHUP \
+                and self.node.sim.now - self._catchup_seen > 0.6:
+            # the catch-up request or its data was lost (flaky link, leader
+            # drop): restart the exchange — idempotent, the leader re-syncs
+            # us from scratch
+            self._catchup_seen = self.node.sim.now   # pace retries
+            if self.leader_id is not None:
+                self._send(self.leader_id, "on_follower_state",
+                           epoch=self.epoch, follower=self.node.node_id,
+                           f_cmt=self.cmt, f_lst=self.lst)
+            return
+        if not self.cfg.lease_enabled or stale <= self._depose_after() / 2:
+            return
+        # recover from a lost leader announcement before suspecting anyone
+        try:
+            lid, ep = self.zk.get(leader_path)
+        except NoNode:
+            return   # znode already gone; the liveness watch re-elects
+        if (lid, ep) != (self.leader_id, self.epoch):
+            if ep > self.epoch and lid != self.node.node_id:
+                self._become_joining_follower(lid, ep)
+            return
+        for p in self.peers:
+            self._send(p, "on_ping", nbytes=96, frm=self.node.node_id)
+        if stale > self._depose_after() and self._fresh_majority_contact():
+            # the leader is silent past any lease it could hold, and we can
+            # see a cohort majority: depose it so the majority side elects.
+            # The get-then-delete pair is atomic here (synchronous ZK model)
+            self.log(f"deposing silent leader n{lid} "
+                     f"(stale {stale:.2f}s > {self._depose_after():.2f}s)")
+            self.obs.events.emit("leader_deposed", node=self.node.node_id,
+                                 rid=self.rid, epoch=ep, leader=lid)
+            self._minc("leader_deposals")
+            try:
+                self.zk.delete(leader_path)
+            except NoNode:
+                pass
+
+    # --- ZK session flap recovery ------------------------------------------
+    def on_session_reestablished(self) -> None:
+        """The node's ZK session expired and came back (gray failure): every
+        ephemeral we held — leader claim, candidacies, /nodes/<id> — is
+        gone, and a leader has dropped us from its in-sync set."""
+        if self.role is Role.OFFLINE:
+            return
+        if self.role in (Role.LEADER, Role.TAKEOVER):
+            # our leader znode vanished with the session; a successor may
+            # already rule.  No suppression: the data network is fine
+            self._abdicate("zk session flapped", suppress=False)
+        elif self.role in (Role.FOLLOWER, Role.CATCHUP) \
+                and self.leader_id is not None:
+            # re-announce so the leader re-syncs us (it zeroed our ack state
+            # when /nodes/<id> disappeared)
+            self._leader_seen = self.node.sim.now
+            self._send(self.leader_id, "on_follower_state", epoch=self.epoch,
+                       follower=self.node.node_id, f_cmt=self.cmt,
+                       f_lst=self.lst)
+        else:
+            self._join_or_elect()
+
+    # --- read-index fallback (quorum-confirmed strong reads) ----------------
+    def _fail_read_confirms(self) -> None:
+        waiting, self._rc_waiting = self._rc_waiting, []
+        self._rc_inflight = False
+        self._rc_acks.clear()
+        for thunk in waiting:
+            thunk(False)
+
+    def _confirm_leadership(self, cb: Callable) -> None:
+        """Serve a strong read without a valid lease: confirm with a
+        follower majority that our regime still stands (one round trip),
+        then read locally.  `cb(ok)` fires with the verdict."""
+        if self._majority() - 1 == 0:
+            cb(True)
+            return
+        self._rc_waiting.append(cb)
+        if self._rc_inflight:
+            return
+        self._rc_inflight = True
+        self._rc_seq += 1
+        self._rc_acks.clear()
+        seq = self._rc_seq
+        for p in self.peers:
+            self._send(p, "on_read_confirm", nbytes=96, epoch=self.epoch,
+                       seq=seq, leader=self.node.node_id)
+
+        def timeout():
+            if self._rc_inflight and self._rc_seq == seq:
+                self._fail_read_confirms()
+
+        self.node.sim.schedule(0.5, timeout)
+
+    def on_read_confirm(self, epoch: int, seq: int, leader: int) -> None:
+        if self.role not in (Role.FOLLOWER, Role.CATCHUP) \
+                or epoch != self.epoch:
+            return
+        self._leader_seen = self.node.sim.now
+        self._send(leader, "on_read_confirm_ack", nbytes=96, epoch=epoch,
+                   seq=seq, follower=self.node.node_id)
+
+    def on_read_confirm_ack(self, epoch: int, seq: int, follower: int) -> None:
+        if self.role is not Role.LEADER or epoch != self.epoch \
+                or seq != self._rc_seq or not self._rc_inflight:
+            return
+        self._peer_seen[follower] = self.node.sim.now
+        self._rc_acks.add(follower)
+        if len(self._rc_acks) >= self._majority() - 1:
+            waiting, self._rc_waiting = self._rc_waiting, []
+            self._rc_inflight = False
+            for thunk in waiting:
+                thunk(True)
 
     # --- leader side: follower catch-up (§6.1 + Fig. 6 lines 3-8) ------------
     def on_follower_state(self, epoch: int, follower: int, f_cmt: int,
@@ -610,6 +975,9 @@ class CohortReplica:
                         truncate_to: Optional[int]) -> None:
         if self.role not in (Role.CATCHUP, Role.FOLLOWER) or epoch != self.epoch:
             return
+        self._leader_seen = self.node.sim.now
+        self._catchup_seen = self.node.sim.now
+        self._suppressed = False   # live data-path contact with the leader
         if truncate_from is not None and truncate_to is not None \
                 and truncate_to > truncate_from:
             # §6.1.1 logical truncation: (f.cmt, f.lst] may contain records
@@ -668,7 +1036,11 @@ class CohortReplica:
                      trace=None) -> None:
         if trace is not None:
             trace.t_cpu = self.node.sim.now
-        if self.role != Role.LEADER or not self.node.has_session():
+        if self.role != Role.LEADER or not self.node.has_session() \
+                or (self.cfg.lease_enabled and not self.lease_valid()):
+            # a lapsed lease fences writes immediately (abdication follows
+            # on the next lease tick): admitting them would let a fenced-off
+            # leader queue work that can never commit, stalling clients
             reply(Result(ErrorCode.NOT_LEADER, leader_hint=self.leader_id))
             return
         if not self._owns(op.key):
@@ -812,7 +1184,8 @@ class CohortReplica:
         sweep only after quorum covers the tail record)."""
         if trace is not None:
             trace.t_cpu = self.node.sim.now
-        if self.role != Role.LEADER or not self.node.has_session():
+        if self.role != Role.LEADER or not self.node.has_session() \
+                or (self.cfg.lease_enabled and not self.lease_valid()):
             reply(Result(ErrorCode.NOT_LEADER, leader_hint=self.leader_id))
             return
         if not all(self._owns(op.key) for op in ops):
@@ -883,6 +1256,7 @@ class CohortReplica:
         watermark — it supersedes every lower ack)."""
         if self.role is not Role.FOLLOWER or epoch != self.epoch:
             return
+        self._leader_seen = self.node.sim.now
         fresh: list[LogRecord] = []
         dup = False
         for record in records:
@@ -1263,6 +1637,7 @@ class CohortReplica:
     def on_commit(self, epoch: int, commit_lsn: int) -> None:
         if self.role is not Role.FOLLOWER or epoch != self.epoch:
             return
+        self._leader_seen = self.node.sim.now
         before = self.cmt
         self._apply_committed(min(commit_lsn, self.lst))
         if self.cmt > before:
@@ -1321,6 +1696,16 @@ class CohortReplica:
         if gate is not None:
             reply(gate)
             return
+        if consistent and not self.lease_valid():
+            # no (valid) lease: fall back to a read-index round — confirm
+            # with a follower majority that this regime still stands, then
+            # read locally.  With a lease the round trip is skipped entirely
+            self._confirm_leadership(
+                lambda ok: self._read_one(key, colname, consistent, reply)
+                if ok and self.role is Role.LEADER
+                else reply(Result(ErrorCode.NOT_LEADER,
+                                  leader_hint=self.leader_id)))
+            return
         self._read_one(key, colname, consistent, reply)
 
     def client_multi_read(self, pairs: list[tuple[str, str]],
@@ -1335,6 +1720,17 @@ class CohortReplica:
         if gate is not None:
             reply(gate)
             return
+        if consistent and not self.lease_valid():
+            self._confirm_leadership(
+                lambda ok: self._serve_multi_read(pairs, consistent, reply)
+                if ok and self.role is Role.LEADER
+                else reply(Result(ErrorCode.NOT_LEADER,
+                                  leader_hint=self.leader_id)))
+            return
+        self._serve_multi_read(pairs, consistent, reply)
+
+    def _serve_multi_read(self, pairs: list[tuple[str, str]],
+                          consistent: bool, reply: Callable) -> None:
         results: list[Optional[Result]] = [None] * len(pairs)
         pending = [len(pairs)]
 

@@ -129,6 +129,7 @@ class FifoServer:
         self.total_busy = 0.0
         self.jobs = 0
         self._open = True
+        self.slow_factor = 1.0  # gray-failure degradation multiplier
 
     def reset(self) -> None:
         """Drop queued work (e.g. on node crash)."""
@@ -148,6 +149,7 @@ class FifoServer:
         """Enqueue a job; returns its completion time."""
         if not self._open:
             return float("inf")
+        service_time *= self.slow_factor
         start = max(self.sim.now, self.busy_until)
         done = start + service_time
         self.busy_until = done
@@ -195,6 +197,10 @@ class Network:
         self._last_delivery: dict[tuple[Any, Any], float] = {}
         self._down: set[Any] = set()
         self._group: dict[Any, int] = {}   # partition membership
+        # one-way partitions: messages src∈A -> dst∈B are blocked, B -> A flow
+        self._oneway: list[tuple[frozenset, frozenset]] = []
+        # per-link gray faults: (src, dst) -> (drop_p, dup_p, delay_factor)
+        self._link_faults: dict[tuple[Any, Any], tuple[float, float, float]] = {}
         self.bytes_sent = 0
         self.msgs_sent = 0
         self.dropped = 0
@@ -225,9 +231,55 @@ class Network:
     def clear_partition(self) -> None:
         self._group = {}
 
+    def set_oneway_partition(self, src_group, dst_group) -> None:
+        """Block messages from `src_group` to `dst_group` only — the reverse
+        direction keeps flowing (asymmetric / gray partition).  Cumulative:
+        each call adds one directed cut."""
+        self._oneway.append((frozenset(src_group), frozenset(dst_group)))
+
+    def clear_oneway_partitions(self) -> None:
+        self._oneway = []
+
+    # -- per-link gray faults -------------------------------------------------
+    def set_link_fault(self, src: Any, dst: Any, drop_p: float = 0.0,
+                       dup_p: float = 0.0, delay_factor: float = 1.0) -> None:
+        """Degrade the directed link src -> dst: drop each message with
+        probability `drop_p`, duplicate it with probability `dup_p`, and
+        multiply its latency by `delay_factor`."""
+        self._link_faults[(src, dst)] = (drop_p, dup_p, delay_factor)
+
+    def update_link_fault(self, src: Any, dst: Any,
+                          drop_p: Optional[float] = None,
+                          dup_p: Optional[float] = None,
+                          delay_factor: Optional[float] = None) -> None:
+        """Merge into an existing link fault: only the given aspects change,
+        so `drop` + `slow link` directives on the same link compose."""
+        cur = self._link_faults.get((src, dst), (0.0, 0.0, 1.0))
+        self._link_faults[(src, dst)] = (
+            cur[0] if drop_p is None else drop_p,
+            cur[1] if dup_p is None else dup_p,
+            cur[2] if delay_factor is None else delay_factor)
+
+    def clear_link_fault(self, src: Any, dst: Any) -> None:
+        self._link_faults.pop((src, dst), None)
+
+    def clear_link_faults(self) -> None:
+        self._link_faults = {}
+
+    def clear_faults(self) -> None:
+        """Heal everything: symmetric + one-way partitions and link faults."""
+        self.clear_partition()
+        self.clear_oneway_partitions()
+        self.clear_link_faults()
+
     def partitioned(self, src: Any, dst: Any) -> bool:
         gs, gd = self._group.get(src), self._group.get(dst)
-        return gs is not None and gd is not None and gs != gd
+        if gs is not None and gd is not None and gs != gd:
+            return True
+        for sg, dg in self._oneway:
+            if src in sg and dst in dg:
+                return True
+        return False
 
     def _blocked(self, src: Any, dst: Any) -> bool:
         return src in self._down or dst in self._down \
@@ -238,25 +290,37 @@ class Network:
         if self._blocked(src, dst):
             self.dropped += 1
             return  # dropped
-        lat = self.sim.jitter(self.p.base_latency, self.p.jitter_cv)
-        lat += nbytes / self.p.bandwidth
-        if cross_switch:
-            lat += self.p.cross_switch_extra
-        key = (src, dst)
-        deliver_at = max(self.sim.now + lat,
-                         self._last_delivery.get(key, 0.0) + 1e-9)
-        self._last_delivery[key] = deliver_at
-        self.bytes_sent += nbytes
-        self.msgs_sent += 1
-
-        def deliver():
-            # recheck liveness and partition membership at delivery time
-            if self._blocked(src, dst):
+        fault = self._link_faults.get((src, dst))
+        copies = 1
+        delay_factor = 1.0
+        if fault is not None:
+            drop_p, dup_p, delay_factor = fault
+            if drop_p and self.sim.rng.random() < drop_p:
                 self.dropped += 1
-                return
-            handler(*args)
+                return  # silently eaten by the flaky link
+            if dup_p and self.sim.rng.random() < dup_p:
+                copies = 2
+        for _ in range(copies):
+            lat = self.sim.jitter(self.p.base_latency, self.p.jitter_cv)
+            lat += nbytes / self.p.bandwidth
+            if cross_switch:
+                lat += self.p.cross_switch_extra
+            lat *= delay_factor
+            key = (src, dst)
+            deliver_at = max(self.sim.now + lat,
+                             self._last_delivery.get(key, 0.0) + 1e-9)
+            self._last_delivery[key] = deliver_at
+            self.bytes_sent += nbytes
+            self.msgs_sent += 1
 
-        self.sim.at(deliver_at, deliver)
+            def deliver():
+                # recheck liveness and partition membership at delivery time
+                if self._blocked(src, dst):
+                    self.dropped += 1
+                    return
+                handler(*args)
+
+            self.sim.at(deliver_at, deliver)
 
 
 @dataclass
@@ -297,6 +361,7 @@ class Disk:
         self.forces = 0
         self.bytes_forced = 0
         self._gen = 0
+        self.slow_factor = 1.0  # gray-failure degradation multiplier
 
     def crash(self) -> None:
         """Drop in-flight IO (node crash).  Durable state is kept by the WAL."""
@@ -327,6 +392,7 @@ class Disk:
         total = sum(b for b, _ in batch)
         lat = self.sim.jitter(self.p.force_latency, self.p.force_cv)
         lat += total / self.p.bandwidth
+        lat *= self.slow_factor
         gen = self._gen
         self.forces += 1
         self.bytes_forced += total

@@ -153,6 +153,10 @@ class Result:
     version: Optional[int] = None
     leader_hint: Optional[int] = None
     latency: float = 0.0
+    # attempts the client spent on this op (retries + 1); a write with
+    # attempts > 1 may have committed more than once (a retry after a lost
+    # ack re-executes), which the linearizability auditor accounts for
+    attempts: int = 1
 
     @property
     def ok(self) -> bool:

@@ -21,6 +21,7 @@ from .metrics import LatencyHistogram, OpLog, WindowSummary
 from .scenario import FaultEvent, FaultSchedule, parse_schedule
 from .experiment import (ExperimentConfig, run_cassandra_breakdown,
                          run_cassandra_workload, run_spinnaker_breakdown,
+                         run_spinnaker_chaos, run_spinnaker_minority_leader,
                          run_spinnaker_rebalance, run_spinnaker_saturation,
                          run_spinnaker_txn, run_spinnaker_workload)
 
@@ -45,6 +46,8 @@ __all__ = [
     "run_cassandra_breakdown",
     "run_cassandra_workload",
     "run_spinnaker_breakdown",
+    "run_spinnaker_chaos",
+    "run_spinnaker_minority_leader",
     "run_spinnaker_rebalance",
     "run_spinnaker_saturation",
     "run_spinnaker_txn",

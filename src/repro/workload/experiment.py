@@ -41,6 +41,10 @@ class ExperimentConfig:
     batch: str = "adaptive"           # adaptive | off
     batch_max_records: int = 32
     batch_deadline: float = 0.5e-3
+    # leader leases (chaos scenarios compare lease-on failover against the
+    # lease-off quorum-read / stall behaviour)
+    lease_enabled: bool = True
+    lease_duration: float = 1.0
     # driver
     driver: str = "closed"            # closed | open
     n_clients: int = 16
@@ -72,7 +76,9 @@ def build_spinnaker(cfg: ExperimentConfig, num_keys: Optional[int] = None):
         node=NodeConfig(replica=ReplicaConfig(
             commit_period=cfg.commit_period, batch=cfg.batch,
             batch_max_records=cfg.batch_max_records,
-            batch_deadline=cfg.batch_deadline),
+            batch_deadline=cfg.batch_deadline,
+            lease_enabled=cfg.lease_enabled,
+            lease_duration=cfg.lease_duration),
                         disk=_DISKS[cfg.disk]()),
         obs=ObsConfig(trace_sample=cfg.trace_sample,
                       metrics_interval=cfg.metrics_interval))
@@ -563,6 +569,287 @@ def run_spinnaker_breakdown(spec: WorkloadSpec,
     log, _t_start, _drv = _drive(sim, adapter, spec, cfg, None, cluster,
                                  n_pre)
     return _breakdown_block(cluster, log, cfg, "write")
+
+
+def _restart_stragglers(cluster) -> list[int]:
+    """Defensively restart nodes a schedule left down (generated schedules
+    restart their own crashes; this keeps hand-written ones honest)."""
+    revived = []
+    for nid, node in sorted(cluster.nodes.items()):
+        if not node.up:
+            cluster.restart_node(nid)
+            revived.append(nid)
+    return revived
+
+
+def _aggregate_robustness(clients) -> dict:
+    agg = {"retries": 0, "backoff_time_s": 0.0, "attempt_timeouts": 0,
+           "retry_exhausted": 0, "error_counts": {}}
+    for c in clients:
+        s = c.robustness_summary()
+        agg["retries"] += s["retries"]
+        agg["backoff_time_s"] = round(
+            agg["backoff_time_s"] + s["backoff_time_s"], 6)
+        agg["attempt_timeouts"] += s["attempt_timeouts"]
+        agg["retry_exhausted"] += s["retry_exhausted"]
+        for code, n in s["error_counts"].items():
+            agg["error_counts"][code] = agg["error_counts"].get(code, 0) + n
+    agg["error_counts"] = dict(sorted(agg["error_counts"].items()))
+    return agg
+
+
+def run_spinnaker_chaos(seed: int = 0,
+                        cfg: Optional[ExperimentConfig] = None,
+                        schedule: Optional[FaultSchedule | str] = None,
+                        duration: float = 18.0,
+                        n_history_clients: int = 4,
+                        history_keys: int = 24,
+                        probe_period: float = 0.25,
+                        recovery_bound: float = 4.0,
+                        write_frac: float = 0.5) -> dict:
+    """One chaos run: drive history clients + per-range probe writers
+    under a (generated or supplied) gray-failure schedule, then audit.
+
+    Four audits close the run, all of which must pass for `ok`:
+
+    - **linearizability** (`chaos.linearizability`): the recorded client
+      history is checked per cell — no duplicate or reordered commit
+      versions, no stale strong reads, no reads from the future;
+    - **availability** (`chaos.availability`): the applied fault timeline
+      is replayed into per-cohort majority-healthy windows; each window
+      longer than `recovery_bound` must keep serving the cohort's probe
+      writes within that bound (a minority-partitioned leader stalling a
+      healthy majority fails exactly here);
+    - **no lost acked writes**: every acknowledged (cell, version) must
+      read back at >= that version after the run settles;
+    - **trace audit**: sampled write traces show no torn commit chains.
+    """
+    from ..chaos import (HistoryRecorder, audit_availability,
+                         check_linearizability, generate_chaos_schedule)
+
+    cfg = cfg or ExperimentConfig(seed=seed, duration=duration)
+    num_keys = max(history_keys, 2 * cfg.n_nodes)
+    sim, cluster = build_spinnaker(cfg, num_keys=num_keys)
+    loader = cluster.make_client("preload")
+    _preload(sim, lambda k, cb: loader.put(k, "c", b"seed", cb), num_keys)
+
+    sched_text = None
+    if schedule is None:
+        schedule = generate_chaos_schedule(
+            seed, n_nodes=cfg.n_nodes, duration=duration,
+            n_ranges=len(cluster.ranges))
+    if isinstance(schedule, str):
+        sched_text = schedule
+        schedule = parse_schedule(schedule)
+    cohorts = {rid: tuple(m) for rid, m in cluster.members.items()}
+
+    # one probe key per base range (lowest preloaded key the range owns)
+    probe_keys = {}
+    for i in range(num_keys):
+        rid = cluster.range_of(key_of(i))
+        probe_keys.setdefault(rid, key_of(i))
+
+    t0 = sim.now + 0.2           # schedule-relative time origin
+    on_event = (lambda msg: cluster.obs.events.emit("fault", detail=msg))
+    schedule.install(sim, cluster, at=t0, on_event=on_event)
+
+    stop = [False]
+    clients = []
+
+    # history clients: closed-loop read/write mix over the shared keyspace
+    recorders = []
+    import random as _random
+    for ci in range(n_history_clients):
+        client = cluster.make_client(f"hist{ci}")
+        clients.append(client)
+        rec = HistoryRecorder(client, sim,
+                              base_versions={(key_of(i), "c"): 1
+                                             for i in range(num_keys)})
+        recorders.append(rec)
+        rng = _random.Random(seed * 1009 + ci)
+
+        def loop(rec=rec, rng=rng):
+            if stop[0]:
+                return
+            key = key_of(rng.randrange(history_keys))
+            if rng.random() < write_frac:
+                rec.put(key, "c", lambda r: loop())
+            else:
+                rec.get(key, "c", lambda r: loop())
+
+        sim.schedule(0.01 * ci, loop)
+
+    # probe writers: open-loop, one per cohort, fresh op every period so
+    # recovery is observed promptly even while older probes back off
+    probe_acks: dict[int, list] = {rid: [] for rid in cohorts}
+    probe_recs = {}
+
+    def make_probe(rid, key, rec):
+        # factory so each cohort's tick chain re-schedules *itself* (a bare
+        # `tick` in the loop body would late-bind to the last iteration)
+        def tick():
+            if stop[0]:
+                return
+            rec.put(key, "probe",
+                    lambda r: (r.ok and probe_acks[rid].append(
+                        round(sim.now - t0, 6))))
+            sim.schedule(probe_period, tick)
+        return tick
+
+    for rid, key in sorted(probe_keys.items()):
+        client = cluster.make_client(f"probe{rid}")
+        clients.append(client)
+        rec = HistoryRecorder(client, sim)
+        probe_recs[rid] = rec
+        sim.schedule(0.05, make_probe(rid, key, rec))
+
+    sim.run(until=t0 + duration)
+    stop[0] = True
+
+    # -- post-run: heal, revive, settle, audit -------------------------------
+    cluster.heal()
+    revived = _restart_stragglers(cluster)
+    sim.run_for(3.0)             # drain in-flight retries / elections
+    cluster.settle(timeout=30.0)
+    sim.run_for(1.0)
+
+    history = [op for rec in recorders for op in rec.history]
+    probe_history = [op for rec in probe_recs.values() for op in rec.history]
+    base = {(key_of(i), "c"): 1 for i in range(num_keys)}
+    violations = check_linearizability(history + probe_history, base)
+
+    availability = audit_availability(
+        schedule.applied_events, cohorts, probe_acks, t_end=duration,
+        recovery_bound=recovery_bound, n_nodes=cfg.n_nodes)
+
+    auditor = cluster.make_client("audit")
+    acked_max: dict[tuple, int] = {}
+    for op in history + probe_history:
+        if op.kind == "write" and op.ok and op.version is not None:
+            cell = (op.key, op.col)
+            acked_max[cell] = max(acked_max.get(cell, 0), op.version)
+    lost = []
+    for (key, col), ver in sorted(acked_max.items()):
+        r = auditor.sync_get(key, col, consistent=True)
+        if not r.ok or (r.version or 0) < ver:
+            lost.append({"key": key, "col": col, "acked_version": ver,
+                         "read": r.code.value, "read_version": r.version})
+
+    trace_audit = cluster.obs.tracer.audit_writes()
+    ok = (not violations and availability["ok"] and not lost
+          and trace_audit.get("ok", True))
+    return {
+        "seed": seed,
+        "lease_enabled": cfg.lease_enabled,
+        "duration_s": duration,
+        "schedule": sched_text,
+        "fault_events": list(schedule.applied),
+        "history_ops": len(history),
+        "probe_writes_acked": {rid: len(a)
+                               for rid, a in sorted(probe_acks.items())},
+        "linearizability": {"ok": not violations, "violations": violations},
+        "availability": availability,
+        "lost_acked_writes": lost,
+        "revived_stragglers": revived,
+        "client_robustness": _aggregate_robustness(clients),
+        "trace_audit": trace_audit,
+        "ok": ok,
+    }
+
+
+def run_spinnaker_minority_leader(lease_enabled: bool = True,
+                                  seed: int = 0,
+                                  partition_at: float = 1.0,
+                                  heal_at: float = 9.0,
+                                  t_end: float = 14.0,
+                                  probe_period: float = 0.1) -> dict:
+    """The chaos harness's signature scenario: symmetric-partition a
+    range's leader into the minority while its ZooKeeper session (direct,
+    not routed through the data network) stays alive.
+
+    Without leases the stale leader keeps the leadership znode, the
+    majority side never re-elects, and the range stalls until the
+    partition heals — the availability red flag.  With time-bounded
+    leases the majority followers depose the silent leader after its
+    lease window provably lapsed and fail over within
+    `lease_duration + election` seconds; the cut-off leader abdicates and
+    fences its own strong path.  Returns failover / stall measurements
+    from the cluster event log plus client-observed write gaps."""
+    cfg = ExperimentConfig(seed=seed, lease_enabled=lease_enabled)
+    num_keys = 20
+    sim, cluster = build_spinnaker(cfg, num_keys=num_keys)
+    loader = cluster.make_client("preload")
+    _preload(sim, lambda k, cb: loader.put(k, "c", b"seed", cb), num_keys)
+
+    rid = 0
+    probe_key = next(key_of(i) for i in range(num_keys)
+                     if cluster.range_of(key_of(i)) == rid)
+    old = cluster.leader_replica(rid)
+    old_leader, old_epoch = old.node.node_id, old.epoch
+    lease_duration = old.cfg.lease_duration
+
+    t0 = sim.now
+    others = {n for n in cluster.nodes if n != old_leader}
+    sim.schedule(partition_at, lambda: cluster.partition({old_leader},
+                                                         others))
+    sim.schedule(heal_at, cluster.heal)
+
+    acks: list[float] = []
+    stop = [False]
+    client = cluster.make_client("probe")
+
+    def tick():
+        if stop[0]:
+            return
+        client.put(probe_key, "probe", b"p",
+                   lambda r: (r.ok and acks.append(sim.now - t0)))
+        sim.schedule(probe_period, tick)
+
+    sim.schedule(0.0, tick)
+
+    # sample the cut-off leader's state well after its lease must have
+    # lapsed (evidence of self-fencing, recorded mid-partition)
+    sample = {}
+
+    def snap():
+        rep = cluster.nodes[old_leader].replicas.get(rid)
+        from ..core.replica import Role
+        sample["old_leader_role"] = rep.role.name if rep else "GONE"
+        sample["old_leader_lease_valid"] = (
+            bool(rep.lease_valid()) if rep else False)
+
+    sim.schedule(partition_at + lease_duration + 1.0, snap)
+
+    sim.run(until=t0 + t_end)
+    stop[0] = True
+    cluster.settle(timeout=30.0)
+
+    failover_s = None
+    for ev in cluster.obs.events.events:
+        if (ev["kind"] == "leader_open" and ev.get("rid") == rid
+                and ev.get("epoch", 0) > old_epoch
+                and ev["t"] >= t0 + partition_at):
+            failover_s = round(ev["t"] - (t0 + partition_at), 6)
+            break
+
+    gap_after_partition = None
+    for t in acks:
+        if t > partition_at:
+            gap_after_partition = round(t - partition_at, 6)
+            break
+    return {
+        "lease_enabled": lease_enabled,
+        "lease_duration_s": lease_duration,
+        "partition_at_s": partition_at,
+        "heal_at_s": heal_at,
+        "old_leader": old_leader,
+        "failover_s": failover_s,          # None: no re-election happened
+        "stalled_until_heal": failover_s is None
+        or failover_s > heal_at - partition_at,
+        "first_ack_gap_s": gap_after_partition,
+        "probe_acks": len(acks),
+        **sample,
+    }
 
 
 def run_cassandra_breakdown(spec: WorkloadSpec,

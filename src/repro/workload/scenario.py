@@ -21,6 +21,17 @@ Grammar (one directive per line, '#' starts a comment):
     at <T>[s] move range <rid> [from <i>] [to <j>]   # replica migration
     at <T>[s] autobalance on|off                 # hotspot balancer
     at <T>[s] crash txn coordinator [lose_disk] [no_expire]  # mid-2PC kill
+    at <T>[s] partition oneway {i,...} -> {j,...}   # asymmetric cut (cumulative)
+    at <T>[s] drop link <i> <j> p=<p>            # directed link loses msgs
+    at <T>[s] dup link <i> <j> p=<p>             # directed link duplicates
+    at <T>[s] slow link <i> <j> x<f>             # directed link delay spike
+    at <T>[s] slow disk on <i> x<f>              # gray log device
+    at <T>[s] slow cpu on <i> x<f>               # gray CPU
+    at <T>[s] flap session of <i> [for <d>s]     # ZK session expiry + rejoin
+
+`heal` clears every injected network fault — symmetric AND one-way
+partitions, per-link drop/dup/delay — and resets disk/CPU gray
+multipliers; crashed nodes need an explicit `restart`.
 
 `crash leader of <rid>` resolves *at fire time* — whoever leads cohort
 `rid` then is killed, so the same scenario file exercises every failover
@@ -53,22 +64,33 @@ _SPLIT = re.compile(r"^split\s+range\s+(\d+)(?:\s+at\s+(\S+))?$")
 _MOVE = re.compile(
     r"^move\s+range\s+(\d+)(?:\s+from\s+(\d+))?(?:\s+to\s+(\d+))?$")
 _AUTOBALANCE = re.compile(r"^autobalance\s+(on|off)$")
+_ONEWAY = re.compile(r"^partition\s+oneway\s+(\{[0-9,\s]*\})\s*->\s*"
+                     r"(\{[0-9,\s]*\})$")
+_LINK = re.compile(r"^(drop|dup)\s+link\s+(\d+)\s+(\d+)\s+p=([0-9.]+)$")
+_SLOW_LINK = re.compile(r"^slow\s+link\s+(\d+)\s+(\d+)\s+x([0-9.]+)$")
+_SLOW_NODE = re.compile(r"^slow\s+(disk|cpu)\s+on\s+(\d+)\s+x([0-9.]+)$")
+_FLAP = re.compile(r"^flap\s+session\s+of\s+(\d+)(?:\s+for\s+([0-9.]+)s?)?$")
 
 
 @dataclass(frozen=True)
 class FaultEvent:
     t: float
     action: str   # crash | crash_leader | crash_txn_coord | restart |
-                  # partition | heal | split | move | autobalance
+                  # partition | partition_oneway | link | slow_disk |
+                  # slow_cpu | flap | heal | split | move | autobalance
     node: Optional[int] = None
     rid: Optional[int] = None
     lose_disk: bool = False
     expire_session: bool = True
     groups: tuple = ()
     key: Optional[str] = None    # split point ('split range ... at <key>')
-    src: Optional[int] = None    # move source node
-    dst: Optional[int] = None    # move destination node
+    src: Optional[int] = None    # move source / link source node
+    dst: Optional[int] = None    # move destination / link destination node
     on: bool = True              # autobalance on/off
+    drop_p: Optional[float] = None   # link drop probability
+    dup_p: Optional[float] = None    # link duplication probability
+    factor: Optional[float] = None   # link delay / disk / cpu multiplier
+    outage: float = 1.0              # session-flap outage duration (s)
 
     def describe(self) -> str:
         if self.action == "crash":
@@ -93,6 +115,28 @@ class FaultEvent:
             return f"t={self.t}: move range {self.rid}{src}{dst}"
         if self.action == "autobalance":
             return f"t={self.t}: autobalance {'on' if self.on else 'off'}"
+        if self.action == "partition_oneway":
+            a, b = self.groups
+            return (f"t={self.t}: partition oneway "
+                    "{" + ",".join(map(str, a)) + "} -> "
+                    "{" + ",".join(map(str, b)) + "}")
+        if self.action == "link":
+            parts = []
+            if self.drop_p:
+                parts.append(f"drop p={self.drop_p}")
+            if self.dup_p:
+                parts.append(f"dup p={self.dup_p}")
+            if self.factor is not None and self.factor != 1.0:
+                parts.append(f"delay x{self.factor}")
+            what = ", ".join(parts) or "clear"
+            return f"t={self.t}: link {self.src}->{self.dst} {what}"
+        if self.action == "slow_disk":
+            return f"t={self.t}: slow disk on node {self.node} x{self.factor}"
+        if self.action == "slow_cpu":
+            return f"t={self.t}: slow cpu on node {self.node} x{self.factor}"
+        if self.action == "flap":
+            return (f"t={self.t}: flap session of node {self.node} "
+                    f"for {self.outage}s")
         return f"t={self.t}: heal"
 
 
@@ -139,6 +183,45 @@ def parse_schedule(text: str) -> "FaultSchedule":
             node = None if tgt == "crashed" else int(tgt.split()[1])
             events.append(FaultEvent(t, "restart", node=node))
             continue
+        om = _ONEWAY.match(body)
+        if om:   # before _PARTITION: both start with 'partition'
+            src = tuple(int(x) for x in _GROUP.match(om.group(1)).group(1)
+                        .split(",") if x.strip())
+            dst = tuple(int(x) for x in _GROUP.match(om.group(2)).group(1)
+                        .split(",") if x.strip())
+            if not src or not dst:
+                raise ValueError(
+                    f"line {lineno}: oneway partition needs non-empty "
+                    f"groups: {raw!r}")
+            events.append(FaultEvent(t, "partition_oneway",
+                                     groups=(src, dst)))
+            continue
+        km = _LINK.match(body)
+        if km:
+            p = float(km.group(4))
+            events.append(FaultEvent(
+                t, "link", src=int(km.group(2)), dst=int(km.group(3)),
+                drop_p=p if km.group(1) == "drop" else None,
+                dup_p=p if km.group(1) == "dup" else None))
+            continue
+        slm = _SLOW_LINK.match(body)
+        if slm:
+            events.append(FaultEvent(t, "link", src=int(slm.group(1)),
+                                     dst=int(slm.group(2)),
+                                     factor=float(slm.group(3))))
+            continue
+        snm = _SLOW_NODE.match(body)
+        if snm:
+            events.append(FaultEvent(t, f"slow_{snm.group(1)}",
+                                     node=int(snm.group(2)),
+                                     factor=float(snm.group(3))))
+            continue
+        fm = _FLAP.match(body)
+        if fm:
+            outage = float(fm.group(2)) if fm.group(2) else 1.0
+            events.append(FaultEvent(t, "flap", node=int(fm.group(1)),
+                                     outage=outage))
+            continue
         pm = _PARTITION.match(body)
         if pm:
             groups = tuple(
@@ -175,6 +258,10 @@ class FaultSchedule:
     """Parsed timeline; `install` arms it on a simulator + cluster."""
     events: list[FaultEvent] = field(default_factory=list)
     applied: list[str] = field(default_factory=list)
+    # structured mirror of `applied` (skips excluded): events as they
+    # actually fired, with fire-time-resolved nodes — the availability
+    # auditor replays this, not the pre-resolution schedule
+    applied_events: list[FaultEvent] = field(default_factory=list)
     last_crashed: Optional[int] = None
 
     def install(self, sim, cluster, at: float = 0.0,
@@ -251,8 +338,36 @@ class FaultSchedule:
                 ev = FaultEvent(ev.t, "restart", node=node)
         elif ev.action == "partition":
             cluster.net.set_partition(ev.groups)
+        elif ev.action == "partition_oneway":
+            if hasattr(cluster, "partition_oneway"):
+                cluster.partition_oneway(set(ev.groups[0]),
+                                         set(ev.groups[1]))
+            else:
+                cluster.net.set_oneway_partition(set(ev.groups[0]),
+                                                 set(ev.groups[1]))
+        elif ev.action == "link":
+            if hasattr(cluster, "set_link_fault"):
+                cluster.set_link_fault(ev.src, ev.dst, drop_p=ev.drop_p,
+                                       dup_p=ev.dup_p,
+                                       delay_factor=ev.factor)
+            else:
+                cluster.net.update_link_fault(ev.src, ev.dst,
+                                              drop_p=ev.drop_p,
+                                              dup_p=ev.dup_p,
+                                              delay_factor=ev.factor)
+        elif ev.action in ("slow_disk", "slow_cpu", "flap"):
+            ok = self._fire_gray_node_event(ev, cluster)
+            if not ok:
+                msg = f"{ev.describe()} skipped (not supported)"
+                self.applied.append(msg)
+                if on_event is not None:
+                    on_event(msg)
+                return
         elif ev.action == "heal":
-            cluster.net.clear_partition()
+            if hasattr(cluster, "heal"):
+                cluster.heal()   # also resets disk/CPU gray multipliers
+            else:
+                cluster.net.clear_faults()
         elif ev.action in ("split", "move", "autobalance"):
             ok = self._fire_range_event(ev, cluster)
             if not ok:
@@ -263,8 +378,43 @@ class FaultSchedule:
                 return
         msg = ev.describe()
         self.applied.append(msg)
+        self.applied_events.append(ev)
         if on_event is not None:
             on_event(msg)
+
+    @staticmethod
+    def _fire_gray_node_event(ev: FaultEvent, cluster) -> bool:
+        """Node-local gray faults need the chaos cluster API (slow_disk /
+        slow_cpu / flap_session); record an honest skip elsewhere."""
+        nodes = getattr(cluster, "nodes", None)
+        if nodes is None or ev.node not in nodes:
+            return False
+        if ev.action == "slow_disk":
+            if hasattr(cluster, "slow_disk"):
+                cluster.slow_disk(ev.node, ev.factor)
+                return True
+            disk = getattr(nodes[ev.node], "disk", None)
+            if disk is None or not hasattr(disk, "slow_factor"):
+                return False
+            disk.slow_factor = ev.factor
+            return True
+        if ev.action == "slow_cpu":
+            if hasattr(cluster, "slow_cpu"):
+                cluster.slow_cpu(ev.node, ev.factor)
+                return True
+            cpu = getattr(nodes[ev.node], "cpu", None)
+            if cpu is None or not hasattr(cpu, "slow_factor"):
+                return False
+            cpu.slow_factor = ev.factor
+            return True
+        # flap
+        if hasattr(cluster, "flap_session"):
+            cluster.flap_session(ev.node, ev.outage)
+            return True
+        if hasattr(nodes[ev.node], "flap_session"):
+            nodes[ev.node].flap_session(ev.outage)
+            return True
+        return False
 
     @staticmethod
     def _fire_range_event(ev: FaultEvent, cluster) -> bool:

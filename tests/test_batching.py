@@ -170,9 +170,11 @@ def test_commit_tick_silent_while_cmt_idle():
         if isinstance(e, CommitMarker) and e.range_id == rid)
     assert markers_after == markers_before, "idle range appended markers"
     assert leader.node.wal.appends == appends_before
-    # the only steady-state traffic left is heartbeats, not on_commit spam:
-    # 5s of 0.05s commit periods over 5 ranges would be >1000 messages
-    assert cluster.net.msgs_sent - msgs_before < 300
+    # the only steady-state traffic left is heartbeats plus lease renewals
+    # (4 small messages per range per lease tick: 2 on_lease + 2 acks,
+    # 5s / 0.25s ticks x 5 ranges = 400), not on_commit spam: 5s of 0.05s
+    # commit periods over 5 ranges would be >1000 on_commit messages alone
+    assert cluster.net.msgs_sent - msgs_before < 300 + 450
 
 
 def test_follower_skips_redundant_commit_marker():

@@ -1,0 +1,498 @@
+"""Chaos harness (PR 7): gray-failure injection primitives, the fault-DSL
+verbs that drive them, the seeded schedule generator, the linearizability
+and availability auditors, and the partition-aware leader leases the
+harness exists to vet — including the signature scenario: a leader
+partitioned into the minority while its ZooKeeper session survives fails
+over within the lease bound instead of stalling the range until heal."""
+
+import numpy as np
+import pytest
+
+from repro.chaos import (CohortHealthTimeline, HistOp, audit_availability,
+                         check_linearizability, generate_chaos_schedule,
+                         majority_healthy_windows)
+from repro.core import (ClusterConfig, ErrorCode, NodeConfig, ReplicaConfig,
+                        Simulator, SpinnakerCluster, key_of)
+from repro.core.sim import DiskParams, Network
+from repro.core.replica import Role
+from repro.workload import parse_schedule
+from repro.workload.experiment import (run_spinnaker_chaos,
+                                       run_spinnaker_minority_leader)
+from repro.workload.scenario import FaultEvent
+
+
+def make_cluster(n=5, seed=0, num_keys=50, lease_enabled=True,
+                 commit_period=0.05, **rep_kw):
+    sim = Simulator(seed=seed)
+    cfg = ClusterConfig(
+        n_nodes=n, num_keys=num_keys,
+        node=NodeConfig(replica=ReplicaConfig(commit_period=commit_period,
+                                              lease_enabled=lease_enabled,
+                                              **rep_kw),
+                        disk=DiskParams.memory()))
+    cluster = SpinnakerCluster(sim, cfg)
+    cluster.start()
+    cluster.settle()
+    return sim, cluster
+
+
+# ======================================================= network primitives
+
+def net_pair():
+    sim = Simulator(seed=1)
+    net = Network(sim)
+    got = []
+    return sim, net, got
+
+
+def test_oneway_partition_blocks_one_direction_only():
+    sim, net, got = net_pair()
+    net.set_oneway_partition({0}, {1})
+    net.send(0, 1, lambda: got.append("0->1"))
+    net.send(1, 0, lambda: got.append("1->0"))
+    sim.run_until_idle()
+    assert got == ["1->0"]
+    net.clear_oneway_partitions()
+    net.send(0, 1, lambda: got.append("0->1"))
+    sim.run_until_idle()
+    assert "0->1" in got
+
+
+def test_link_drop_eats_messages_and_dup_duplicates():
+    sim, net, got = net_pair()
+    net.set_link_fault(0, 1, drop_p=1.0)
+    for _ in range(10):
+        net.send(0, 1, lambda: got.append("x"))
+    sim.run_until_idle()
+    assert got == [] and net.dropped == 10
+    net.set_link_fault(0, 1, dup_p=1.0)
+    net.send(0, 1, lambda: got.append("y"))
+    sim.run_until_idle()
+    assert got == ["y", "y"]       # every message delivered twice
+    # the reverse direction was never faulted
+    net.send(1, 0, lambda: got.append("z"))
+    sim.run_until_idle()
+    assert got[-1] == "z"
+
+
+def test_link_delay_factor_stretches_latency():
+    sim, net, got = net_pair()
+    net.send(0, 1, lambda: got.append(sim.now))
+    sim.run_until_idle()
+    base = got.pop()
+    t0 = sim.now
+    net.set_link_fault(0, 1, delay_factor=50.0)
+    net.send(0, 1, lambda: got.append(sim.now - t0))
+    sim.run_until_idle()
+    assert got[0] > 10 * base
+
+
+def test_update_link_fault_merges_aspects():
+    sim, net, _ = net_pair()
+    net.update_link_fault(0, 1, drop_p=0.3)
+    net.update_link_fault(0, 1, delay_factor=8.0)
+    assert net._link_faults[(0, 1)] == (0.3, 0.0, 8.0)
+    net.update_link_fault(0, 1, drop_p=0.0)   # explicit zero clears drop only
+    assert net._link_faults[(0, 1)] == (0.0, 0.0, 8.0)
+
+
+def test_cluster_heal_clears_every_gray_fault():
+    """Satellite: `heal` restores symmetric + one-way partitions, link
+    faults, and disk/CPU gray multipliers in one call."""
+    sim, cluster = make_cluster(n=3)
+    cluster.partition({0}, {1, 2})
+    cluster.partition_oneway({1}, {2})
+    cluster.set_link_fault(0, 1, drop_p=0.5)
+    cluster.slow_disk(0, 10.0)
+    cluster.slow_cpu(1, 10.0)
+    assert cluster.net.partitioned(0, 1)
+    cluster.heal()
+    assert not cluster.net.partitioned(0, 1)
+    assert not cluster.net.partitioned(1, 2)
+    assert not cluster.net._link_faults
+    assert cluster.nodes[0].disk.slow_factor == 1.0
+    assert cluster.nodes[1].cpu.slow_factor == 1.0
+    sim.run_for(2.0)
+    cluster.settle()
+    c = cluster.make_client()
+    assert c.sync_put(key_of(1), "c", b"post-heal").ok
+
+
+# ================================================================ fault DSL
+
+GRAY_SCHEDULE = """
+# every gray-failure verb once
+at 1.0s partition oneway {0,1} -> {2}
+at 2.0s drop link 0 2 p=0.25
+at 3.0s dup link 2 0 p=0.1
+at 4.0s slow link 1 2 x8
+at 5.0s slow disk on 3 x20
+at 6.0s slow cpu on 4 x15
+at 7.0s flap session of 2 for 1.5s
+at 8.0s heal
+"""
+
+
+def test_parse_and_describe_every_gray_verb():
+    """Satellite: the DSL parses each new verb into the right FaultEvent
+    and `describe` covers them all (no silent fall-through to 'heal')."""
+    sched = parse_schedule(GRAY_SCHEDULE)
+    by_action = {e.action: e for e in sched.events}
+    ow = by_action["partition_oneway"]
+    assert ow.groups == ((0, 1), (2,))
+    drops = [e for e in sched.events if e.action == "link"]
+    assert (drops[0].src, drops[0].dst, drops[0].drop_p) == (0, 2, 0.25)
+    assert (drops[1].src, drops[1].dst, drops[1].dup_p) == (2, 0, 0.1)
+    assert (drops[2].src, drops[2].dst, drops[2].factor) == (1, 2, 8.0)
+    assert by_action["slow_disk"].node == 3
+    assert by_action["slow_disk"].factor == 20.0
+    assert by_action["slow_cpu"].node == 4
+    assert by_action["flap"].node == 2 and by_action["flap"].outage == 1.5
+
+    descs = [e.describe() for e in sched.events]
+    assert any("partition oneway {0,1} -> {2}" in d for d in descs)
+    assert any("link 0->2 drop p=0.25" in d for d in descs)
+    assert any("link 2->0 dup p=0.1" in d for d in descs)
+    assert any("link 1->2 delay x8" in d for d in descs)
+    assert any("slow disk on node 3 x20" in d for d in descs)
+    assert any("slow cpu on node 4 x15" in d for d in descs)
+    assert any("flap session of node 2 for 1.5s" in d for d in descs)
+    # no event's describe() degenerates to the bare-heal fallback
+    assert sum(d.endswith("heal") for d in descs) == 1
+
+
+def test_dsl_fires_gray_faults_against_cluster():
+    sim, cluster = make_cluster()
+    sched = parse_schedule(GRAY_SCHEDULE)
+    sched.install(sim, cluster)
+    sim.run(until=7.5)
+    assert cluster.net._oneway            # oneway applied
+    assert (0, 2) in cluster.net._link_faults
+    assert cluster.nodes[3].disk.slow_factor == 20.0
+    assert cluster.nodes[4].cpu.slow_factor == 15.0
+    sim.run(until=8.5)                    # heal fired
+    assert not cluster.net._oneway and not cluster.net._link_faults
+    assert cluster.nodes[3].disk.slow_factor == 1.0
+    assert cluster.nodes[4].cpu.slow_factor == 1.0
+    assert len(sched.applied) == 8
+    assert len(sched.applied_events) == 8
+    sim.run_for(3.0)
+    cluster.settle()                      # flapped node rejoined
+
+
+def test_chaos_schedule_generator_deterministic_and_parses():
+    a = generate_chaos_schedule(seed=11)
+    b = generate_chaos_schedule(seed=11)
+    assert a == b, "same seed must give the identical schedule"
+    assert a != generate_chaos_schedule(seed=12)
+    sched = parse_schedule(a)
+    assert sched.events and sched.events[-1].t <= 18.0
+    assert any(e.action == "heal" for e in sched.events)
+    # across a seed band, every episode class appears at least once
+    actions = set()
+    for seed in range(8):
+        actions |= {e.action for e in parse_schedule(
+            generate_chaos_schedule(seed)).events}
+    assert {"crash", "restart", "partition", "partition_oneway", "link",
+            "slow_disk", "slow_cpu", "flap", "heal"} <= actions
+
+
+# ==================================================== client retry ordering
+
+def test_retry_gate_serializes_same_key_write_retries():
+    """Two same-key write retries must re-issue in original order: the
+    second one queues behind the first and is released only when the
+    first resolves (prevents CAS overtaking after WRONG_RANGE bounces)."""
+    sim, cluster = make_cluster(n=3)
+    c = cluster.make_client()
+    k = key_of(1)
+    kw_a, kw_b, kw_other = {"a": 1}, {"b": 2}, {"c": 3}
+    c._schedule_retry("write", k, kw_a, lambda r: None, True, 0.0, 0)
+    c._schedule_retry("write", k, kw_b, lambda r: None, True, 0.0, 0)
+    assert c._retry_gate[k] is kw_a
+    assert len(c._retry_waiters[k]) == 1
+    # reads are never gated
+    c._schedule_retry("read", k, kw_other, lambda r: None, True, 0.0, 0)
+    assert len(c._retry_waiters[k]) == 1
+    # a non-owner completing must not release the gate
+    c._gate_release("write", k, kw_other)
+    assert c._retry_gate[k] is kw_a
+    # the owner completing hands the gate to the queued retry, in order
+    c._gate_release("write", k, kw_a)
+    assert c._retry_gate[k] is kw_b
+    assert k not in c._retry_waiters
+    c._gate_release("write", k, kw_b)
+    assert k not in c._retry_gate
+
+
+# ======================================================= linearizability
+
+def W(client, inv, resp, ver, val=None, ok=True, resolved=None, attempts=1):
+    return HistOp(client, "write", "k", "c", inv, resp, ok, ver,
+                  val if val is not None else f"{client}@{ver}",
+                  resolved=ok if resolved is None else resolved,
+                  attempts=attempts)
+
+
+def R(client, inv, resp, ver, val=None):
+    return HistOp(client, "read", "k", "c", inv, resp, True, ver, val)
+
+
+def test_linearizability_clean_history_passes():
+    h = [W("a", 0.0, 1.0, 1), W("b", 1.5, 2.0, 2),
+         R("r", 2.1, 2.2, 2, "b@2"), R("r", 0.5, 0.9, 0)]
+    assert check_linearizability(h) == []
+
+
+def test_linearizability_flags_stale_read():
+    h = [W("a", 0.0, 1.0, 1), R("r", 2.0, 2.1, 0)]
+    v = check_linearizability(h)
+    assert [x["rule"] for x in v] == ["R1"]
+
+
+def test_linearizability_flags_duplicate_version_and_write_reorder():
+    h = [W("a", 0.0, 1.0, 5), W("b", 2.0, 3.0, 5)]
+    assert {x["rule"] for x in check_linearizability(h)} == {"W1", "W2"}
+    h2 = [W("a", 0.0, 1.0, 2), W("b", 2.0, 3.0, 1)]
+    assert [x["rule"] for x in check_linearizability(h2)] == ["W2"]
+
+
+def test_linearizability_flags_future_read_and_value_mismatch():
+    h = [W("a", 0.0, 1.0, 1), R("r", 1.2, 1.3, 7)]
+    assert [x["rule"] for x in check_linearizability(h)] == ["R2"]
+    h2 = [W("a", 0.0, 1.0, 1), R("r", 1.2, 1.3, 1, "not-a@1")]
+    assert [x["rule"] for x in check_linearizability(h2)] == ["R3"]
+
+
+def test_linearizability_unresolved_write_widens_ceiling_not_floor():
+    # a timed-out write MAY have committed: reading its version is legal,
+    # but it never forces later reads to see it
+    h = [W("a", 0.0, 1.0, 1),
+         W("b", 1.5, 9.0, None, ok=False, resolved=False),
+         R("r", 2.0, 2.1, 2),            # allowed: the timeout may have landed
+         R("r", 2.3, 2.4, 1, "a@1")]     # also allowed: or it may not have
+    assert check_linearizability(h) == []
+
+
+def test_linearizability_retry_attempts_raise_ceiling():
+    # an acked write that took 3 attempts may have committed up to 3 times
+    h = [W("a", 0.0, 1.0, 1, attempts=3), R("r", 1.2, 1.3, 3)]
+    assert check_linearizability(h) == []
+    # but with a single attempt the same read is from the future
+    h2 = [W("a", 0.0, 1.0, 1), R("r", 1.2, 1.3, 3)]
+    assert [x["rule"] for x in check_linearizability(h2)] == ["R2"]
+
+
+def test_linearizability_respects_preload_base():
+    h = [R("r", 0.1, 0.2, 1)]
+    assert check_linearizability(h, {("k", "c"): 1}) == []
+    assert [x["rule"] for x in check_linearizability(
+        h, {("k", "c"): 2})] == ["R1"]
+    # an acked write at or below the preload base is a double-commit
+    h2 = [W("a", 0.0, 1.0, 1)]
+    assert [x["rule"] for x in check_linearizability(
+        h2, {("k", "c"): 1})] == ["W1"]
+
+
+# ========================================================== availability
+
+def test_majority_healthy_windows_full_partition_break():
+    events = [FaultEvent(2.0, "partition", groups=((0,), (1,), (2, 3, 4))),
+              FaultEvent(5.0, "heal")]
+    w = majority_healthy_windows(events, (0, 1, 2), t_end=10.0, n_nodes=5)
+    assert w == [[0.0, 2.0], [5.0, 10.0]]
+    # a cohort with 2 members in the big group keeps its majority
+    w2 = majority_healthy_windows(events, (2, 3, 4), t_end=10.0, n_nodes=5)
+    assert w2 == [[0.0, 10.0]]
+
+
+def test_majority_healthy_windows_crashes_and_oneway():
+    events = [FaultEvent(1.0, "crash", node=0),
+              FaultEvent(2.0, "crash", node=1),
+              FaultEvent(6.0, "restart", node=1),
+              FaultEvent(8.0, "partition_oneway", groups=((1,), (2,)))]
+    # with node 0 down the cohort's only live majority is {1,2}; the
+    # one-way cut 1->2 severs that pair, so health ends at 8s
+    w = majority_healthy_windows(events, (0, 1, 2), t_end=10.0, n_nodes=5)
+    assert w == [[0.0, 2.0], [6.0, 8.0]]
+    # a one-way cut that leaves some mutually-connected majority ({3,4})
+    # does NOT break the window — someone there can lead
+    ow = [FaultEvent(2.0, "partition_oneway", groups=((2,), (3, 4)))]
+    w2 = majority_healthy_windows(ow, (2, 3, 4), t_end=10.0, n_nodes=5)
+    assert w2 == [[0.0, 10.0]]
+
+
+def test_availability_audit_detects_probe_stall():
+    events = []   # fully healthy throughout
+    cohorts = {0: (0, 1, 2)}
+    dense = {0: [round(0.2 * i, 3) for i in range(90)]}   # acks to 17.8s
+    r = audit_availability(events, cohorts, dense, t_end=18.0,
+                           recovery_bound=4.0, n_nodes=5)
+    assert r["ok"], r["violations"]
+    stalled = {0: [0.2, 0.4, 0.6]}    # silence from 0.6s onwards
+    r2 = audit_availability(events, cohorts, stalled, t_end=18.0,
+                            recovery_bound=4.0, n_nodes=5)
+    assert not r2["ok"]
+    assert r2["violations"][0]["rid"] == 0
+
+
+# =============================================== leases: the actual fix
+
+def test_minority_partitioned_leader_fails_over_within_lease_bound():
+    """The chaos harness's red-flag scenario, fixed: leader cut into the
+    minority (ZK session alive) => majority deposes it and fails over
+    within lease + election; the old leader self-fences."""
+    r = run_spinnaker_minority_leader(lease_enabled=True)
+    bound = r["lease_duration_s"] + 1.0
+    assert r["failover_s"] is not None, "majority never failed over"
+    assert r["failover_s"] <= bound, (r["failover_s"], bound)
+    assert not r["stalled_until_heal"]
+    assert r["first_ack_gap_s"] <= bound + 0.5, r["first_ack_gap_s"]
+    assert not r["old_leader_lease_valid"]
+    assert r["old_leader_role"] != "LEADER"
+
+
+def test_minority_partitioned_leader_stalls_without_leases():
+    """Contrast run: with leases off the stale leader keeps the znode and
+    the healthy majority serves nothing until the partition heals."""
+    r = run_spinnaker_minority_leader(lease_enabled=False)
+    assert r["failover_s"] is None
+    assert r["stalled_until_heal"]
+    assert r["first_ack_gap_s"] >= r["heal_at_s"] - r["partition_at_s"] - 0.5
+    assert r["old_leader_role"] == "LEADER"   # still squatting
+
+
+def test_partitioned_leader_fences_writes_after_lease_lapse():
+    """Direct fencing check: once its lease lapses, the cut-off leader
+    refuses strong writes locally (NOT_LEADER) instead of queueing them."""
+    sim, cluster = make_cluster()
+    k = key_of(3)
+    rid = cluster.range_of(k)
+    rep = cluster.leader_replica(rid)
+    lid = rep.node.node_id
+    cluster.partition({lid}, {n for n in cluster.nodes if n != lid})
+    sim.run_for(rep.cfg.lease_duration + 0.5)
+    assert not rep.lease_valid()
+    from repro.core import OpType, WriteOp
+    box = []
+    rep.client_write(WriteOp(OpType.PUT, k, "c", b"zombie"), box.append)
+    assert box and box[0].code == ErrorCode.NOT_LEADER
+    cluster.heal()
+    sim.run_for(3.0)
+    cluster.settle()
+
+
+def test_leaseholder_strong_reads_skip_read_index_round():
+    """With a valid lease, strong reads are served locally; with leases
+    disabled every one pays the read-index majority round trip."""
+    def strong_read_latency(lease_enabled):
+        sim, cluster = make_cluster(lease_enabled=lease_enabled)
+        c = cluster.make_client()
+        k = key_of(5)
+        assert c.sync_put(k, "c", b"v").ok
+        sim.run_for(1.0)
+        lats = []
+        for _ in range(20):
+            r = c.sync_get(k, "c", consistent=True)
+            assert r.ok
+            lats.append(r.latency)
+        return float(np.median(lats))
+
+    with_lease = strong_read_latency(True)
+    without = strong_read_latency(False)
+    assert with_lease < without, (with_lease, without)
+
+
+def test_timeline_monotonic_and_strong_fresh_across_asymmetric_partition():
+    """Satellite: under an asymmetric (one-way) partition of the leader,
+    lease expiry, and failover — monotonic timeline reads never regress
+    and strong reads never return a version older than the last acked
+    write at their invocation (lease-bounded staleness)."""
+    sim, cluster = make_cluster(num_keys=50)
+    k = key_of(7)
+    rid = cluster.range_of(k)
+    old = cluster.leader_replica(rid)
+    old_leader, old_epoch = old.node.node_id, old.epoch
+
+    writer = cluster.make_client("writer")
+    sreader = cluster.make_client("strong")
+    treader = cluster.make_client("timeline")
+    acked = []          # (t_done, version)
+    strong = []         # (t_invoke, version)
+    timeline = []
+
+    def write_loop(i=0):
+        if sim.now > 10.0:
+            return
+        writer.put(k, "c", f"v{i}".encode(),
+                   lambda r: (r.ok and acked.append((sim.now, r.version)),
+                              sim.schedule(0.02, write_loop, i + 1))[-1])
+
+    def strong_loop():
+        if sim.now > 10.0:
+            return
+        t_inv = sim.now
+
+        def got(res):
+            if res.ok and res.version is not None:
+                strong.append((t_inv, res.version))
+            sim.schedule(0.03, strong_loop)
+        sreader.get(k, "c", True, got)
+
+    def timeline_loop():
+        if sim.now > 10.0:
+            return
+
+        def got(res):
+            if res.ok and res.version is not None:
+                timeline.append(res.version)
+            sim.schedule(0.01, timeline_loop)
+        treader.get(k, "c", False, got, monotonic=True)
+
+    write_loop(), strong_loop(), timeline_loop()
+    others = {n for n in cluster.nodes if n != old_leader}
+    sim.schedule(2.0, lambda: cluster.partition_oneway({old_leader}, others))
+    sim.schedule(6.0, cluster.heal)
+    sim.run(until=11.0)
+    cluster.settle()
+
+    # failover actually happened (the one-way cut starves lease renewals)
+    now_leader = cluster.leader_replica(rid)
+    assert now_leader.epoch > old_epoch
+    # writes kept flowing on the majority side
+    assert acked, "no writes acked at all"
+    post = [v for t, v in acked if t > 4.0]
+    assert post and max(post) > max(v for t, v in acked if t <= 2.0)
+
+    # timeline monotonicity across the failover
+    assert len(timeline) > 100, "timeline reader starved"
+    diffs = np.diff(timeline)
+    assert (diffs >= 0).all(), f"regressed at {int(np.argmin(diffs))}"
+
+    # strong reads: never stale w.r.t. writes acked before their invoke
+    assert strong, "no strong reads completed"
+    ack_sorted = sorted(acked)
+    import bisect as _b
+    times = [t for t, _ in ack_sorted]
+    pmax = []
+    for _t, v in ack_sorted:
+        pmax.append(max(pmax[-1], v) if pmax else v)
+    for t_inv, ver in strong:
+        i = _b.bisect_left(times, t_inv)
+        floor = pmax[i - 1] if i else 0
+        assert ver >= floor, (t_inv, ver, floor)
+
+
+# ========================================================== end to end
+
+def test_chaos_run_single_seed_all_audits_green():
+    r = run_spinnaker_chaos(seed=3, duration=8.0)
+    assert r["linearizability"]["ok"], r["linearizability"]["violations"][:3]
+    assert r["availability"]["ok"], r["availability"]["violations"][:3]
+    assert not r["lost_acked_writes"], r["lost_acked_writes"][:3]
+    assert r["trace_audit"]["ok"], r["trace_audit"]
+    assert r["ok"]
+    assert r["history_ops"] > 1000
+    assert len(r["fault_events"]) >= 5
+    # every cohort's probe writer made it through the run
+    assert all(n > 10 for n in r["probe_writes_acked"].values())

@@ -294,6 +294,50 @@ def test_participant_leader_killed_holding_locks():
                                  and r2.code == ErrorCode.NOT_FOUND)
 
 
+def test_prepare_timeout_under_participant_partition():
+    """A participant leader is cut off by a symmetric partition (not a
+    crash) with the prepare in flight: the coordinator presumed-aborts
+    within `txn_prepare_timeout` instead of blocking on the dead link,
+    no lock or intent survives the heal, neither leg is visible, and a
+    post-heal transfer over the same keys lands and persists."""
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    k1 = key_of(10)
+    coord0 = cluster.leader_replica(cluster.range_of(k1))
+    k2 = remote_partner_key(cluster, coord0)
+    rid2 = cluster.range_of(k2)
+    victim = cluster.leader_replica(rid2).node.node_id
+    coord, txid, box = start_cross_txn(cluster, k1, k2)
+    # cut the participant leader from everyone (in-flight prepares die at
+    # delivery time too); ZK heartbeats are out-of-band so the victim
+    # keeps its session — only its lease can depose it
+    cluster.partition({victim},
+                      {n for n in cluster.nodes if n != victim})
+    t0 = sim.now
+    drive_until(sim, lambda: bool(box),
+                budget=coord.cfg.txn_prepare_timeout + 2.0)
+    assert box[0].code == ErrorCode.UNAVAILABLE
+    assert sim.now - t0 <= coord.cfg.txn_prepare_timeout + 1.0
+    assert txid not in coord.txn.active
+    # atomicity: the coordinator-side leg must not be visible either
+    assert c.sync_get(k1, "a").code == ErrorCode.NOT_FOUND
+    cluster.heal()
+    sim.run_for(6.0)
+    cluster.settle()
+    assert_clean(cluster)
+    assert c.sync_get(k2, "a").code == ErrorCode.NOT_FOUND
+    # the same cross-range write works once the partition is gone, and
+    # the acked transfer is durable across a full resolution period
+    res = sync(sim, c.transaction,
+               [WriteOp(OpType.PUT, k1, "a", b"after"),
+                WriteOp(OpType.PUT, k2, "a", b"after")])
+    assert res.ok
+    sim.run_for(2.0)
+    assert c.sync_get(k1, "a").value == b"after"
+    assert c.sync_get(k2, "a").value == b"after"
+    assert_clean(cluster)
+
+
 def test_timeline_and_strong_read_isolation_in_doubt():
     """While a transaction is in doubt (prepare committed, coordinator
     dead): timeline reads serve the old committed value — never staged
