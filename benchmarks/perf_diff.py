@@ -1,0 +1,211 @@
+"""Perf-ratchet diff gate: compare two `BENCH_spinnaker.json` artifacts.
+
+    PYTHONPATH=src python benchmarks/perf_diff.py BASELINE.json CANDIDATE.json
+
+Diffs the performance surfaces the repo tracks and exits nonzero when the
+candidate regresses beyond per-metric tolerances:
+
+- breakdown stage p50s (spinnaker write path): each stage and the e2e p50
+  may grow at most --tol-stage (default +10%); stages below an absolute
+  floor are skipped (sub-10µs stages jitter across configs);
+- fig8 claim ratios, recomputed from the raw numbers (write p50 vs
+  eventual, strong-read p50 vs quorum, throughput vs eventual): the
+  write/read gap may grow at most --tol-claim (default +5% relative),
+  throughput may shrink at most the same;
+- saturation knees: per disk class, `peak_write_tput_adaptive` may drop
+  at most --tol-knee (default -10%);
+- profile section: spinnaker `cpu_share_by_component` may shift at most
+  --tol-share percentage points (default 10) per component, and
+  `profile.write_p50_ratio` — the paper's §1 write-gap headline — is the
+  ratchet proper: it may grow at most --tol-claim.
+
+A section present in only one file is skipped with a note (comparing the
+committed full artifact against a fresh `--scenario profile` run gates
+just the profile surface).  Improvements always pass — the ratchet only
+binds in the regression direction.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+STAGE_FLOOR_MS = 0.01       # ignore sub-10µs stages: pure jitter
+
+
+class Diff:
+    def __init__(self):
+        self.failures: list[str] = []
+        self.notes: list[str] = []
+        self.compared = 0
+
+    def check(self, label: str, base: float, cand: float,
+              direction: str, tol: float, absolute: bool = False) -> None:
+        """direction 'up' = candidate may not exceed base by > tol;
+        'down' = candidate may not fall below base by > tol.  `tol` is
+        relative unless `absolute` (then it is an absolute delta)."""
+        self.compared += 1
+        if absolute:
+            delta = cand - base
+            bad = delta > tol if direction == "up" else -delta > tol
+            verdict = f"delta {delta:+.4f} (tol {tol:.4f} abs)"
+        else:
+            rel = (cand - base) / base if base else 0.0
+            bad = rel > tol if direction == "up" else -rel > tol
+            verdict = f"{rel:+.1%} (tol {tol:.0%})"
+        line = f"{label}: {base:.4f} -> {cand:.4f} {verdict}"
+        if bad:
+            self.failures.append(line)
+            print(f"  FAIL {line}")
+        else:
+            print(f"  ok   {line}")
+
+    def skip(self, msg: str) -> None:
+        self.notes.append(msg)
+        print(f"  skip {msg}")
+
+
+def diff_breakdown(d: Diff, base: dict, cand: dict, tol: float) -> None:
+    b = base.get("breakdown", {}).get("spinnaker")
+    c = cand.get("breakdown", {}).get("spinnaker")
+    if not b or not c:
+        d.skip("breakdown section missing on one side")
+        return
+    d.check("breakdown.write_p50_ms", b["p50_ms"], c["p50_ms"], "up", tol)
+    for stage, ms in b.get("stages_p50_ms", {}).items():
+        cms = c.get("stages_p50_ms", {}).get(stage)
+        if cms is None:
+            d.skip(f"breakdown stage '{stage}' missing in candidate")
+            continue
+        if ms < STAGE_FLOOR_MS and cms < STAGE_FLOOR_MS:
+            continue
+        # floor the base so a near-zero stage can't fail on relative noise
+        d.check(f"breakdown.stage.{stage}_ms", max(ms, STAGE_FLOOR_MS),
+                cms, "up", tol)
+
+
+def _fig8_ratios(rec: dict) -> dict | None:
+    f8 = rec.get("fig8")
+    if not f8:
+        return None
+    try:
+        sp = f8["spinnaker_strong"]
+        ce = f8["cassandra_eventual"]
+        cq = f8["cassandra_quorum"]
+    except KeyError:
+        return None
+    return {
+        "write_p50_vs_eventual": sp["writes"]["p50_ms"]
+        / max(ce["writes"]["p50_ms"], 1e-9),
+        "read_p50_vs_quorum": sp["reads"]["p50_ms"]
+        / max(cq["reads"]["p50_ms"], 1e-9),
+        "throughput_vs_eventual": sp["throughput"]
+        / max(ce["throughput"], 1e-9),
+    }
+
+
+def diff_claims(d: Diff, base: dict, cand: dict, tol: float) -> None:
+    b, c = _fig8_ratios(base), _fig8_ratios(cand)
+    if not b or not c:
+        d.skip("fig8 section missing on one side")
+        return
+    d.check("fig8.write_p50_vs_eventual", b["write_p50_vs_eventual"],
+            c["write_p50_vs_eventual"], "up", tol)
+    d.check("fig8.read_p50_vs_quorum", b["read_p50_vs_quorum"],
+            c["read_p50_vs_quorum"], "up", tol)
+    d.check("fig8.throughput_vs_eventual", b["throughput_vs_eventual"],
+            c["throughput_vs_eventual"], "down", tol)
+
+
+def diff_saturation(d: Diff, base: dict, cand: dict, tol: float) -> None:
+    b = base.get("saturation")
+    c = cand.get("saturation")
+    if not b or not c:
+        d.skip("saturation section missing on one side")
+        return
+    for disk in sorted(set(b) & set(c)):
+        bk = b[disk].get("check", {}).get("peak_write_tput_adaptive")
+        ck = c[disk].get("check", {}).get("peak_write_tput_adaptive")
+        if bk is None or ck is None:
+            d.skip(f"saturation[{disk}] knee missing on one side")
+            continue
+        d.check(f"saturation.{disk}.peak_write_tput_adaptive",
+                bk, ck, "down", tol)
+
+
+def diff_profile(d: Diff, base: dict, cand: dict, tol_share: float,
+                 tol_claim: float) -> None:
+    b = base.get("profile")
+    c = cand.get("profile")
+    if not b or not c:
+        d.skip("profile section missing on one side")
+        return
+    d.check("profile.write_p50_ratio", b["write_p50_ratio"],
+            c["write_p50_ratio"], "up", tol_claim)
+    bs = b.get("spinnaker", {}).get("profile", {}) \
+        .get("cpu_share_by_component", {})
+    cs = c.get("spinnaker", {}).get("profile", {}) \
+        .get("cpu_share_by_component", {})
+    for comp in sorted(set(bs) | set(cs)):
+        # share shifts are symmetric: a component ballooning OR vanishing
+        # both mean the capacity mix changed beyond tolerance
+        bv, cv = bs.get(comp, 0.0), cs.get(comp, 0.0)
+        d.compared += 1
+        delta_pp = 100 * (cv - bv)
+        line = (f"profile.cpu_share.{comp}: {100 * bv:.1f}% -> "
+                f"{100 * cv:.1f}% ({delta_pp:+.1f}pp, tol "
+                f"{tol_share:.0f}pp)")
+        if abs(delta_pp) > tol_share:
+            d.failures.append(line)
+            print(f"  FAIL {line}")
+        else:
+            print(f"  ok   {line}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed BENCH_spinnaker.json")
+    ap.add_argument("candidate", help="fresh BENCH json to gate")
+    ap.add_argument("--tol-stage", type=float, default=0.10,
+                    help="max relative growth per breakdown stage p50")
+    ap.add_argument("--tol-claim", type=float, default=0.05,
+                    help="max relative slip per fig8/profile claim ratio")
+    ap.add_argument("--tol-knee", type=float, default=0.10,
+                    help="max relative drop of a saturation knee")
+    ap.add_argument("--tol-share", type=float, default=10.0,
+                    help="max utilization-share shift, percentage points")
+    args = ap.parse_args(argv)
+
+    recs = []
+    for path in (args.baseline, args.candidate):
+        p = Path(path)
+        if not p.exists():
+            print(f"perf_diff: {path} not found")
+            return 2
+        recs.append(json.loads(p.read_text()))
+    base, cand = recs
+
+    print(f"perf_diff: {args.baseline} (baseline) vs "
+          f"{args.candidate} (candidate)")
+    d = Diff()
+    diff_breakdown(d, base, cand, args.tol_stage)
+    diff_claims(d, base, cand, args.tol_claim)
+    diff_saturation(d, base, cand, args.tol_knee)
+    diff_profile(d, base, cand, args.tol_share, args.tol_claim)
+
+    if d.compared == 0:
+        print("perf_diff: FAIL — no comparable sections found")
+        return 1
+    if d.failures:
+        print(f"perf_diff: FAIL — {len(d.failures)} regression(s) across "
+              f"{d.compared} metrics")
+        return 1
+    print(f"perf_diff: ok — {d.compared} metrics within tolerance"
+          + (f" ({len(d.notes)} sections skipped)" if d.notes else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

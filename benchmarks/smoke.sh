@@ -12,8 +12,13 @@
 # seeded gray-failure schedules with linearizability / availability /
 # lost-write / trace audits all clean, plus the minority-partitioned-
 # leader pair: lease-bounded failover vs stall-until-heal) with a schema
-# check of the committed "chaos" block, a perf-regression check against
-# the committed BENCH_spinnaker.json (fig8 write throughput + a capped
+# check of the committed "chaos" block, a profile gate (the component-
+# attributed resource profiler must account for the measured busy time
+# within 5% and be bit-identical to an unprofiled run) with a schema
+# check of the committed "profile" block, the perf_diff.py ratchet (a
+# fresh --scenario profile run must not slip the committed write-gap
+# ratio or utilization shares), a perf-regression check against the
+# committed BENCH_spinnaker.json (fig8 write throughput + a capped
 # saturation quick-sweep must not regress >10% / lose the batching
 # edge), plus the tier-1 test suite.
 #
@@ -202,6 +207,45 @@ print(f"ok: committed chaos block well-formed — {len(ch['runs'])} seeded "
       f"{ck['failover_bound_s']}s, lease-read ratio "
       f"{ck['lease_read_ratio']:.2f}")
 EOF
+
+echo "== profile gate: component attribution + bit-identity =="
+python benchmarks/spinnaker_bench.py --scenario profile --quick \
+    --out /tmp/BENCH_profile_fresh.json
+
+echo "== profile schema check vs committed BENCH_spinnaker.json =="
+python - <<'EOF'
+import json, pathlib
+p = pathlib.Path("BENCH_spinnaker.json")
+if not p.exists():
+    print("skip: no committed BENCH_spinnaker.json")
+    raise SystemExit(0)
+pr = json.loads(p.read_text()).get("profile")
+assert pr, "committed BENCH_spinnaker.json lacks a 'profile' block"
+for system in ("spinnaker", "cassandra_eventual"):
+    prof = pr[system]["profile"]
+    for key in ("nodes", "cpu_share_by_component", "cluster_cpu_busy_s",
+                "heat", "timeline", "elapsed_s"):
+        assert key in prof, (system, key)
+    assert prof["nodes"], system
+    for nid, nb in prof["nodes"].items():
+        for key in ("cpu_busy_s", "cpu_attributed_s", "cpu_by_component",
+                    "disk_busy_s", "disk_attributed_s", "disk_by_component",
+                    "net_msgs_by_component", "queue_wait_s_by_component"):
+            assert key in nb, (system, nid, key)
+    shares = prof["cpu_share_by_component"]
+    assert shares and abs(sum(shares.values()) - 1.0) <= 0.05, shares
+ck = pr["check"]
+assert ck["ok"], ck
+print(f"ok: committed profile block well-formed — attribution rel err "
+      f"{ck['max_attribution_rel_err']:.4f}, bit_identical="
+      f"{ck['bit_identical']}, write p50 ratio "
+      f"{ck['write_p50_ratio']:.2f}")
+EOF
+
+echo "== perf_diff ratchet: fresh profile run vs committed baseline =="
+python benchmarks/perf_diff.py BENCH_spinnaker.json BENCH_spinnaker.json
+python benchmarks/perf_diff.py BENCH_spinnaker.json \
+    /tmp/BENCH_profile_fresh.json
 
 echo "== perf-regression gate vs committed BENCH_spinnaker.json =="
 python benchmarks/spinnaker_bench.py --scenario regress --quick \

@@ -38,6 +38,14 @@ Scenarios:
   tracing-overhead measurement (full sampling must cost < 5% write
   throughput; it models zero sim-time, so the expected cost is exactly
   zero).  `--report` pretty-prints the committed block;
+- `profile` — component-attributed cluster resource profile (PR 8):
+  per-node x per-component CPU/disk/network busy-time shares for
+  Spinnaker vs Cassandra-eventual at a fixed matched load, per-range
+  heat, and a utilization timeline.  Gates: attribution sums to the
+  measured busy time within 5%, and the profiled run is bit-identical
+  to an unprofiled one (the profiler models zero sim-time).  The fixed
+  config is --quick-independent so `benchmarks/perf_diff.py` can ratchet
+  fresh runs against the committed section;
 - `chaos`   — the robustness gate (PR 7): eight seeded gray-failure
   schedules (crashes, partitions incl. one-way, lossy/dup/slow links,
   degraded disks/CPUs, ZK session flaps) driven against concurrent
@@ -72,12 +80,14 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
+from repro.obs import format_profile_report  # noqa: E402
 from repro.workload import (ExperimentConfig, WorkloadSpec,  # noqa: E402
-                            run_cassandra_breakdown, run_cassandra_workload,
-                            run_spinnaker_breakdown, run_spinnaker_chaos,
-                            run_spinnaker_minority_leader,
-                            run_spinnaker_rebalance, run_spinnaker_saturation,
-                            run_spinnaker_txn, run_spinnaker_workload)
+                            run_cassandra_breakdown, run_cassandra_profiled,
+                            run_cassandra_workload, run_spinnaker_breakdown,
+                            run_spinnaker_chaos, run_spinnaker_minority_leader,
+                            run_spinnaker_profiled, run_spinnaker_rebalance,
+                            run_spinnaker_saturation, run_spinnaker_txn,
+                            run_spinnaker_workload)
 
 LEADER_KILL = """
 # Fig. 9/10: kill whichever node currently leads range 0, mid-load;
@@ -581,6 +591,99 @@ def check_breakdown(r: dict) -> dict:
     return out
 
 
+def profile_spec() -> WorkloadSpec:
+    """Fixed 80/20 zipfian mix for the profile scenario — deliberately
+    independent of --quick so the committed section and fresh smoke runs
+    compare like for like in perf_diff.py."""
+    return WorkloadSpec(num_keys=1000, key_dist="zipfian", zipf_theta=0.99,
+                        read_frac=0.80, write_frac=0.20, rmw_frac=0.0,
+                        cond_frac=0.0, value_size=1024)
+
+
+def profile_cfg() -> ExperimentConfig:
+    return ExperimentConfig(n_nodes=5, disk="ssd", seed=7, n_clients=8,
+                            warmup=0.5, duration=3.0, preload_cap=500,
+                            metrics_interval=0.25, profile_interval=0.25)
+
+
+def _print_profile_summary(name: str, r: dict) -> None:
+    prof = r["profile"]
+    shares = prof.get("cpu_share_by_component", {})
+    top = sorted(shares.items(), key=lambda kv: -kv[1])[:5]
+    share_txt = "  ".join(f"{c}={100 * v:.1f}%" for c, v in top)
+    print(f"  {name}: cluster cpu busy "
+          f"{prof['cluster_cpu_busy_s'] * 1e3:.1f}ms over "
+          f"{prof['elapsed_s']:.1f}s; top shares: {share_txt}", flush=True)
+
+
+def run_profile(quick: bool) -> dict:
+    """--scenario profile: component-attributed utilization for Spinnaker
+    vs the Cassandra-eventual baseline at matched load, plus the two
+    profiler invariants (attribution sums to measured busy time; a
+    profiled run is bit-identical to an unprofiled one)."""
+    spec, cfg = profile_spec(), profile_cfg()
+    print("profile: spinnaker component-attributed utilization ...",
+          flush=True)
+    sp = run_spinnaker_profiled(spec, cfg, consistent_reads=True)
+    _print_profile_summary("spinnaker", sp)
+    print("profile: cassandra eventual at matched load ...", flush=True)
+    ce = run_cassandra_profiled(spec, cfg, quorum=False)
+    _print_profile_summary("cassandra_eventual", ce)
+
+    # The profiler models zero sim-time and draws no RNG, so the same
+    # run with all profiler/metrics accounting off must be bit-identical
+    # (op-for-op equal populations and latencies), not merely close.
+    print("profile: bit-identity control run (profiler off) ...", flush=True)
+    cfg_off = dataclasses.replace(cfg, profile=False, profile_interval=0.0,
+                                  metrics_interval=0.0)
+    off = run_spinnaker_profiled(spec, cfg_off, consistent_reads=True)
+    bit_identical = bool(
+        sp["total_ops"] == off["total_ops"]
+        and sp["writes"]["count"] == off["writes"]["count"]
+        and sp["reads"]["count"] == off["reads"]["count"]
+        and sp["writes"]["p50_ms"] == off["writes"]["p50_ms"]
+        and sp["writes"]["p99_ms"] == off["writes"]["p99_ms"]
+        and sp["reads"]["p50_ms"] == off["reads"]["p50_ms"]
+        and sp["reads"]["p99_ms"] == off["reads"]["p99_ms"])
+
+    out = {
+        "spinnaker": sp,
+        "cassandra_eventual": ce,
+        # the ratcheting write-gap metric (paper §1: '5% to 10% slower')
+        "write_p50_ratio": sp["writes"]["p50_ms"]
+        / max(ce["writes"]["p50_ms"], 1e-9),
+        "bit_identical": bit_identical,
+    }
+    out["check"] = check_profile(out)
+    print(f"  write p50 ratio spinnaker/eventual = "
+          f"{out['write_p50_ratio']:.2f}", flush=True)
+    print(f"  {out['check']}", flush=True)
+    return out
+
+
+def check_profile(r: dict) -> dict:
+    """Acceptance surface: per-node per-component busy-time attribution
+    sums to the measured FifoServer/Disk busy time within 5% (i.e. the
+    component labels really partition the capacity), and the profiled
+    run is bit-identical to the unprofiled one."""
+    worst = 0.0
+    for system in ("spinnaker", "cassandra_eventual"):
+        for _nid, nb in r[system]["profile"]["nodes"].items():
+            for kind in ("cpu", "disk"):
+                busy = nb[f"{kind}_busy_s"]
+                if busy > 1e-9:
+                    worst = max(worst, abs(nb[f"{kind}_attributed_s"] - busy)
+                                / busy)
+    out = {
+        "max_attribution_rel_err": worst,
+        "attribution_ok": bool(worst <= 0.05),
+        "bit_identical": bool(r["bit_identical"]),
+        "write_p50_ratio": r["write_p50_ratio"],
+    }
+    out["ok"] = bool(out["attribution_ok"] and out["bit_identical"])
+    return out
+
+
 def print_report(path: str) -> int:
     """--report: pretty-print the committed breakdown block — per-stage
     write-p50 decomposition for both systems plus the ten slowest traces."""
@@ -588,33 +691,51 @@ def print_report(path: str) -> int:
     if not p.exists():
         print(f"report: {path} not found")
         return 1
-    bd = json.loads(p.read_text()).get("breakdown")
-    if not bd:
-        print(f"report: no 'breakdown' block in {path}; run "
-              "--scenario breakdown first")
+    rec = json.loads(p.read_text())
+    bd = rec.get("breakdown")
+    prof = rec.get("profile")
+    if not bd and not prof:
+        print(f"report: no 'breakdown' or 'profile' block in {path}; run "
+              "--scenario breakdown / --scenario profile first")
         return 1
-    for name in ("spinnaker", "cassandra"):
-        print(f"\n== {name}: write-path latency breakdown ==")
-        _print_stage_table(name, bd[name])
-    ov = bd.get("tracing_overhead", {})
-    if ov:
-        print(f"\ntracing overhead: traced {ov['write_tput_traced']:.0f}/s "
-              f"vs untraced {ov['write_tput_untraced']:.0f}/s "
-              f"(ratio {ov['ratio']:.3f})")
-    print("\n== top 10 slowest spinnaker writes ==")
-    for t in bd["spinnaker"].get("top_slowest", []):
-        stages = t.get("stages_ms", {})
-        worst = max(stages, key=stages.get) if stages else "?"
-        print(f"  {t['trace_id']:<10} key={t['key']} node={t['node']} "
-              f"attempts={t['attempts']} e2e={t['e2e_ms']:.3f}ms "
-              f"dominant={worst} ({stages.get(worst, 0.0):.3f}ms)")
-    ck = bd.get("check", {})
-    if ck:
-        print(f"\ncheck: {'ok' if ck.get('ok') else 'FAIL'} "
-              f"(stage-sum rel err: spinnaker "
-              f"{ck['spinnaker_stage_sum_rel_err']:.4f}, cassandra "
-              f"{ck['cassandra_stage_sum_rel_err']:.4f}; overhead ratio "
-              f"{ck['tracing_overhead_ratio']:.3f})")
+    if bd:
+        for name in ("spinnaker", "cassandra"):
+            print(f"\n== {name}: write-path latency breakdown ==")
+            _print_stage_table(name, bd[name])
+        ov = bd.get("tracing_overhead", {})
+        if ov:
+            print(f"\ntracing overhead: traced "
+                  f"{ov['write_tput_traced']:.0f}/s "
+                  f"vs untraced {ov['write_tput_untraced']:.0f}/s "
+                  f"(ratio {ov['ratio']:.3f})")
+        print("\n== top 10 slowest spinnaker writes ==")
+        for t in bd["spinnaker"].get("top_slowest", []):
+            stages = t.get("stages_ms", {})
+            worst = max(stages, key=stages.get) if stages else "?"
+            print(f"  {t['trace_id']:<10} key={t['key']} node={t['node']} "
+                  f"attempts={t['attempts']} e2e={t['e2e_ms']:.3f}ms "
+                  f"dominant={worst} ({stages.get(worst, 0.0):.3f}ms)")
+        ck = bd.get("check", {})
+        if ck:
+            print(f"\ncheck: {'ok' if ck.get('ok') else 'FAIL'} "
+                  f"(stage-sum rel err: spinnaker "
+                  f"{ck['spinnaker_stage_sum_rel_err']:.4f}, cassandra "
+                  f"{ck['cassandra_stage_sum_rel_err']:.4f}; overhead ratio "
+                  f"{ck['tracing_overhead_ratio']:.3f})")
+    if prof:
+        for name in ("spinnaker", "cassandra_eventual"):
+            if name not in prof:
+                continue
+            print(f"\n== {name}: component-attributed resource profile ==")
+            for line in format_profile_report(prof[name]["profile"]):
+                print(line)
+        ck = prof.get("check", {})
+        if ck:
+            print(f"\nprofile check: {'ok' if ck.get('ok') else 'FAIL'} "
+                  f"(max attribution rel err "
+                  f"{ck['max_attribution_rel_err']:.4f}, bit_identical="
+                  f"{ck['bit_identical']}, write p50 ratio "
+                  f"{ck['write_p50_ratio']:.2f})")
     return 0
 
 
@@ -670,8 +791,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scenario", default="all",
                     choices=["fig8", "fig9", "fig10", "saturation",
-                             "rebalance", "txn", "breakdown", "chaos",
-                             "figs8-10", "all", "regress"])
+                             "rebalance", "txn", "breakdown", "profile",
+                             "chaos", "figs8-10", "all", "regress"])
     ap.add_argument("--quick", action="store_true",
                     help="short runs (CI / smoke mode)")
     ap.add_argument("--out", default="BENCH_spinnaker.json")
@@ -709,6 +830,8 @@ def main(argv=None) -> int:
         print(f"  {rec['txn_check']}", flush=True)
     if args.scenario in ("breakdown", "all"):
         rec["breakdown"] = run_breakdown(args.quick)
+    if args.scenario in ("profile", "all"):
+        rec["profile"] = run_profile(args.quick)
     if args.scenario in ("chaos", "all"):
         rec["chaos"] = run_chaos(args.quick)
         rec["chaos"]["check"] = check_chaos(rec["chaos"])
@@ -742,6 +865,10 @@ def main(argv=None) -> int:
     if "breakdown" in rec and not rec["breakdown"]["check"]["ok"]:
         print("FAIL: latency-breakdown gate "
               f"{rec['breakdown']['check']}")
+        rc = 1
+    if "profile" in rec and not rec["profile"]["check"]["ok"]:
+        print("FAIL: resource-profile gate "
+              f"{rec['profile']['check']}")
         rc = 1
     if "chaos" in rec and not rec["chaos"]["check"]["ok"]:
         print("FAIL: chaos gate "

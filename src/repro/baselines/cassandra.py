@@ -59,6 +59,17 @@ CPU_WRITE = (30e-6, 25e-6)
 CPU_FWD = (16e-6, 12e-6)
 CPU_ACK = (8e-6, 0.0)
 
+# message kind -> profiler component label (mirrors core/node.py so the
+# Spinnaker-vs-Cassandra utilization shares compare like for like)
+COMPONENT_OF = {
+    "coord_read": "client.read",
+    "coord_write": "client.write",
+    "replica_write": "replica.fwd",
+    "replica_read": "replica.fwd",
+    "ack": "replica.ack",
+    "read_resp": "replica.ack",
+}
+
 
 class CassandraNode:
     def __init__(self, cluster: "CassandraCluster", node_id: int,
@@ -88,7 +99,7 @@ class CassandraNode:
             if cur is None or ts >= cur.ts:
                 self.data[(key, colname)] = _TCell(value, ts)
             done()
-        self.disk.force(4200, after_force)
+        self.disk.force(4200, after_force, component="wal.force")
 
     def _apply_local(self, key: str, colname: str, value: Any,
                      ts: float) -> None:
@@ -135,8 +146,15 @@ class CassandraNode:
                          "ack": CPU_ACK}.get(kind, CPU_ACK)
         n = len(kw["muts"]) if "muts" in kw else \
             len(kw["tags"]) if "tags" in kw else 1
-        self.cpu.submit(base + per_rec * n,
-                        lambda: getattr(self, kind)(**kw))
+        cost = base + per_rec * n
+        prof = self.cluster.obs.profiler
+        if prof.enabled:
+            wait = self.cpu.queue_delay()
+            prof.cpu_work(self.node_id, COMPONENT_OF.get(kind, "other"),
+                          cost * self.cpu.slow_factor, queue_wait_s=wait)
+            self.cluster.obs.metrics.observe(
+                self.node_id, "cpu_queue_wait_s", wait)
+        self.cpu.submit(cost, lambda: getattr(self, kind)(**kw))
 
     # -- coordinator-side mutation batching ----------------------------------------
     def _enqueue_mut(self, dst: int, key: str, colname: str, value: Any,
@@ -168,7 +186,7 @@ class CassandraNode:
                                   else 16) for _, _, v, _ in muts)
         self.cluster.net.send(self.node_id, dst, node.handle, "replica_write",
                               dict(muts=muts, origin=self.node_id),
-                              nbytes=nbytes)
+                              nbytes=nbytes, component="replica.fwd")
 
     # -- coordinator logic -----------------------------------------------------------
     def coord_write(self, key: str, colname: str, value: Any, w: int,
@@ -216,8 +234,9 @@ class CassandraNode:
                 return
             self.cluster.net.send(self.node_id, origin, node.handle, "ack",
                                   dict(tags=tags),
-                                  nbytes=64 + 96 * len(tags))
-        self.disk.force(4200 * len(muts), done)
+                                  nbytes=64 + 96 * len(tags),
+                                  component="replica.ack")
+        self.disk.force(4200 * len(muts), done, component="wal.force")
 
     def ack(self, tags: list) -> None:
         for tag in tags:
@@ -268,7 +287,8 @@ class CassandraNode:
                     self.cluster.net.send(
                         self.node_id, t, node.handle, "replica_read",
                         dict(key=key, colname=colname, origin=self.node_id,
-                             tag=(key, colname, self.sim.now)), nbytes=300)
+                             tag=(key, colname, self.sim.now)), nbytes=300,
+                        component="replica.fwd")
                 remote()
         self._read_collect[(key, colname)] = collect
 
@@ -283,7 +303,8 @@ class CassandraNode:
         nbytes = 4300 if cell is not None else 200
         self.cluster.net.send(self.node_id, origin, node.handle, "read_resp",
                               dict(key=key, colname=colname, cell=cell,
-                                   frm=self.node_id), nbytes=nbytes)
+                                   frm=self.node_id), nbytes=nbytes,
+                              component="replica.ack")
 
     def read_resp(self, key: str, colname: str, cell: Optional[_TCell],
                   frm: int) -> None:
@@ -299,6 +320,7 @@ class CassandraCluster:
         self.net = Network(sim, self.cfg.net)
         self.obs = Observability(sim, "cassandra", self.cfg.obs)
         self.nodes: dict[int, CassandraNode] = {}
+        self.obs.profiler.attach_network(self.net)
         n = self.cfg.n_nodes
         self.boundaries = [key_of(i * self.cfg.num_keys // n) for i in range(n)]
         for i in range(n):
@@ -306,6 +328,7 @@ class CassandraCluster:
             node._pending_acks = {}
             node._read_collect = {}
             self.nodes[i] = node
+            self.obs.profiler.attach_node(i, node.cpu, node.disk)
             m = self.obs.metrics
             m.add_gauge(i, "cpu_queue_s", node.cpu.queue_delay)
             m.add_gauge(i, "disk_queue", node.disk.queue_depth)
@@ -424,7 +447,8 @@ class CassandraClient:
 
         def reply_via_net(res: Result):
             self.cluster.net.send(target, self.id, on_reply, res,
-                                  nbytes=4300, cross_switch=True)
+                                  nbytes=4300, cross_switch=True,
+                                  component="client.reply")
 
         payload = dict(kw)
         payload.pop("_trace", None)
@@ -435,8 +459,10 @@ class CassandraClient:
             payload["trace"] = tr
         payload["reply"] = reply_via_net
         node = self.cluster.nodes[target]
+        comp = "client.write" if kind == "coord_write" else "client.read"
         self.cluster.net.send(self.id, target, node.handle, kind, payload,
-                              nbytes=nbytes, cross_switch=True)
+                              nbytes=nbytes, cross_switch=True,
+                              component=comp)
 
     # sync helpers for tests
     def sync_write(self, key: str, colname: str, value: Any,

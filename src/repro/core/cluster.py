@@ -73,9 +73,12 @@ class SpinnakerCluster:
             ranges_mod.set_range_meta(self.zk, rid, kr.lo, kr.hi,
                                       self.members[rid])
 
+        self.obs.profiler.attach_network(self.net)
         for i in range(n):
             self.nodes[i] = SpinnakerNode(self, i, self.cfg.node)
             install_node_gauges(self.obs, self.nodes[i])
+            self.obs.profiler.attach_node(i, self.nodes[i].cpu,
+                                          self.nodes[i].disk)
         for rid, kr in self.ranges.items():
             for m in self.members[rid]:
                 peers = tuple(x for x in self.members[rid] if x != m)
@@ -610,7 +613,8 @@ class Client:
         self.cluster.net.send(self.id, target, node.handle_client, rid,
                               "mread", payload,
                               nbytes=200 + 64 * len(items),
-                              cross_switch=True)
+                              cross_switch=True,
+                              component="client.read", rid=rid)
 
     def transaction(self, ops: list[WriteOp], cb: Callable) -> None:
         """Multi-operation transaction.  Single-cohort op sets keep the
@@ -739,9 +743,10 @@ class Client:
         payload["reply"] = self._reply_via_net(target, on_reply)
         node = self.cluster.nodes[target]
         nbytes = 4200 if kind in ("write", "txn") else 300
+        comp = "client.write" if kind in ("write", "txn") else "client.read"
         self.cluster.net.send(self.id, target, node.handle_client, rid,
                               wire_kind, payload, nbytes=nbytes,
-                              cross_switch=True)
+                              cross_switch=True, component=comp, rid=rid)
 
     def _reply_via_net(self, src_node: int, cb: Callable) -> Callable:
         def reply(res):
@@ -753,7 +758,7 @@ class Client:
                 nbytes = 4200 if res is not None and res.value is not None \
                     else 200
             self.cluster.net.send(src_node, self.id, cb, res, nbytes=nbytes,
-                                  cross_switch=True)
+                                  cross_switch=True, component="client.reply")
         return reply
 
     # -- synchronous helpers for tests ------------------------------------------------

@@ -65,6 +65,37 @@ def message_cost(handler: str, kw: dict) -> float:
     return base + per_rec * n
 
 
+# Resource-profiler component labels (obs/profile.py): every protocol
+# message is attributed to the subsystem that sent it, so the profiler can
+# answer "which component is burning this node's CPU/network".
+COMPONENT_OF = {
+    "client_read": "client.read",
+    "client_write": "client.write",
+    "on_propose": "paxos.propose",
+    "on_ack": "paxos.ack",
+    "on_commit": "paxos.commit",
+    "on_new_leader": "election",
+    "on_follower_state": "election",
+    "on_deposed": "election",
+    "on_catchup_data": "catchup",
+    "on_catchup_synced": "catchup",
+    "on_txn_prepare": "txn.prepare",
+    "on_txn_vote": "txn.vote",
+    "on_txn_decide": "txn.decide",
+    "on_txn_decided_ack": "txn.ack",
+    "on_lease": "lease.heartbeat",
+    "on_lease_ack": "lease.heartbeat",
+    "on_ping": "lease.heartbeat",
+    "on_pong": "lease.heartbeat",
+    "on_read_confirm": "paxos.read_confirm",
+    "on_read_confirm_ack": "paxos.read_confirm",
+}
+
+
+def component_of(handler: str) -> str:
+    return COMPONENT_OF.get(handler, "other")
+
+
 @dataclass
 class NodeConfig:
     replica: ReplicaConfig = field(default_factory=ReplicaConfig)
@@ -281,7 +312,8 @@ class SpinnakerNode:
              **kw: Any) -> None:
         dst_node = self.cluster.nodes[dst]
         self.net.send(self.node_id, dst,
-                      dst_node.receive, rid, handler, kw, nbytes=nbytes)
+                      dst_node.receive, rid, handler, kw, nbytes=nbytes,
+                      component=component_of(handler), rid=rid)
 
     def receive(self, rid: int, handler: str, kw: dict) -> None:
         if not self.up:
@@ -289,8 +321,22 @@ class SpinnakerNode:
         replica = self.replicas.get(rid)
         if replica is None:
             return
-        self.cpu.submit(message_cost(handler, kw),
-                        lambda: getattr(replica, handler)(**kw))
+        cost = message_cost(handler, kw)
+        self._profile_cpu(component_of(handler), cost, rid)
+        self.cpu.submit(cost, lambda: getattr(replica, handler)(**kw))
+
+    def _profile_cpu(self, component: str, cost: float, rid: int) -> None:
+        """Attribute one CPU dispatch to the profiler (the slow factor is
+        folded in so component sums match `cpu.total_busy` exactly) and
+        feed the queue-wait histogram."""
+        prof = self.cluster.obs.profiler
+        if not prof.enabled:
+            return
+        wait = self.cpu.queue_delay()
+        prof.cpu_work(self.node_id, component, cost * self.cpu.slow_factor,
+                      rid=rid, queue_wait_s=wait)
+        self.cluster.obs.metrics.observe(self.node_id, "cpu_queue_wait_s",
+                                         wait)
 
     # client entry points (arrive via network; dispatched through the CPU)
     def handle_client(self, rid: int, kind: str, kw: dict) -> None:
@@ -309,24 +355,27 @@ class SpinnakerNode:
         base, per_rec = CPU_COST["client_read" if kind in ("read", "mread")
                                  else "client_write"]
         if kind == "read":
-            self.cpu.submit(base + per_rec, lambda: replica.client_read(**kw))
+            cost, comp = base + per_rec, "client.read"
+            thunk = lambda: replica.client_read(**kw)           # noqa: E731
         elif kind == "mread":
             # batched read service: one message overhead for the group
             n = max(1, len(kw.get("pairs", ())))
-            self.cpu.submit(base + per_rec * n,
-                            lambda: replica.client_multi_read(**kw))
+            cost, comp = base + per_rec * n, "client.read"
+            thunk = lambda: replica.client_multi_read(**kw)     # noqa: E731
         elif kind == "txn":
             n = max(1, len(kw.get("ops", ())))
-            self.cpu.submit(base + per_rec * n,
-                            lambda: replica.client_transaction(
-                                kw["ops"], kw["reply"], trace=tr))
+            cost, comp = base + per_rec * n, "client.txn"
+            thunk = lambda: replica.client_transaction(         # noqa: E731
+                kw["ops"], kw["reply"], trace=tr)
         elif kind == "txn2":
             # cross-range transaction: this leader coordinates 2PC
             n = max(1, sum(len(ops) for ops in kw.get("groups", {}).values()))
-            self.cpu.submit(base + per_rec * n,
-                            lambda: replica.client_txn2(
-                                kw["groups"], kw["reply"], trace=tr))
+            cost, comp = base + per_rec * n, "client.txn"
+            thunk = lambda: replica.client_txn2(                # noqa: E731
+                kw["groups"], kw["reply"], trace=tr)
         else:
-            self.cpu.submit(base + per_rec,
-                            lambda: replica.client_write(
-                                kw["op"], kw["reply"], trace=tr))
+            cost, comp = base + per_rec, "client.write"
+            thunk = lambda: replica.client_write(               # noqa: E731
+                kw["op"], kw["reply"], trace=tr)
+        self._profile_cpu(comp, cost, rid)
+        self.cpu.submit(cost, thunk)

@@ -214,9 +214,12 @@ class RangeBalancer:
     stats and shedding hotspots via split/move.
 
     One action per tick at most, with a cooldown, so the cluster settles
-    between moves instead of thrashing.  Decisions use leader-side served
-    op counters (reads+writes), the closest sim analogue of the per-range
-    load stats a real master would scrape.
+    between moves instead of thrashing.  Decisions use the resource
+    profiler's per-range heat (cluster-global served-op counts, so a
+    leader change between ticks cannot corrupt the delta); when the
+    profiler is disabled they fall back to leader-side served-op
+    counters, the closest sim analogue of the per-range load stats a
+    real master would scrape.
     """
 
     def __init__(self, cluster: "SpinnakerCluster",
@@ -248,19 +251,28 @@ class RangeBalancer:
 
     # -- sampling -----------------------------------------------------------
     def _sample_loads(self) -> dict[int, float]:
-        """ops/s served per range since the last tick (leader counters)."""
+        """ops/s served per range since the last tick (profiler heat, or
+        leader counters when the profiler is off)."""
+        prof = self.cluster.obs.profiler
         loads: dict[int, float] = {}
         for rid in list(self.cluster.ranges):
             rep = self.cluster.leader_replica(rid)
             if rep is None:
                 continue
-            total = rep.writes_served + rep.reads_served
+            if prof.enabled:
+                total = prof.range_ops(rid)
+            else:
+                total = rep.writes_served + rep.reads_served
             prev = self._last.get(rid)
             self._last[rid] = total
             if prev is None:
                 continue
             loads[rid] = max(0, total - prev) / self.cfg.period
         return loads
+
+    def _heat_reading(self, rid: int) -> dict:
+        """The heat snapshot that triggered a decision (for the event)."""
+        return self.cluster.obs.profiler.heat_snapshot(rid)
 
     def _node_loads(self, loads: dict[int, float]) -> dict[int, float]:
         """Per-node hosted load: leaders carry the full range load,
@@ -293,6 +305,11 @@ class RangeBalancer:
         for rid, load in sorted(loads.items(), key=lambda kv: -kv[1]):
             if load < self.cfg.split_threshold:
                 return False
+            self.cluster.obs.events.emit(
+                "balancer_split_decision", rid=rid,
+                load_ops_s=round(load, 3),
+                threshold=self.cfg.split_threshold,
+                heat=self._heat_reading(rid))
             if self.cluster.admin_split(rid):
                 self.actions.append(
                     f"t={self.sim.now:.2f}: split range {rid} "
@@ -325,6 +342,12 @@ class RangeBalancer:
                     or node_loads[src] < self.cfg.move_imbalance * max(
                         node_loads[cold], 1e-9):
                 continue
+            self.cluster.obs.events.emit(
+                "balancer_move_decision", rid=rid, src=src, dst=cold,
+                load_ops_s=round(load, 3),
+                src_node_load=round(node_loads[src], 3),
+                dst_node_load=round(node_loads[cold], 3),
+                heat=self._heat_reading(rid))
             if self.cluster.admin_move(rid, src, cold):
                 self.actions.append(
                     f"t={self.sim.now:.2f}: move range {rid} replica "

@@ -205,6 +205,13 @@ class CohortReplica:
     def _minc(self, name: str, v: float = 1.0) -> None:
         self.obs.metrics.inc(self.node.node_id, name, v)
 
+    def _heat(self, nbytes: int = 0) -> None:
+        """Bump this range's heat (served ops + payload bytes) in the
+        cluster-global profiler — the balancer's load signal."""
+        prof = self.obs.profiler
+        if prof.enabled:
+            prof.range_op(self.rid, nbytes)
+
     # ============================================================== lifecycle
     def start(self) -> None:
         """Called after the node's local recovery pass for this range."""
@@ -1008,7 +1015,8 @@ class CohortReplica:
             self.queue[rec.lsn] = rec
             self.lst = max(self.lst, rec.lsn)
             last = i == len(fresh) - 1
-            self.node.wal.append(rec, force=last, cb=complete if last else None)
+            self.node.wal.append(rec, force=last, cb=complete if last else None,
+                                 component="catchup", rid=self.rid)
 
     def on_deposed(self, epoch: int) -> None:
         """The leader says we are not in this cohort's member set (we
@@ -1082,6 +1090,7 @@ class CohortReplica:
             trace.lsn = lsn
             self._trace_by_lsn[lsn] = trace
         self.writes_served += 1
+        self._heat(rec.nbytes())
         self._batch_append(rec)
         self._maybe_flush_batch()
 
@@ -1166,7 +1175,7 @@ class CohortReplica:
             self._on_self_forced(tail)
             self._maybe_flush_batch()   # drain what queued during the force
 
-        self.node.wal.force(cb=on_forced)
+        self.node.wal.force(cb=on_forced, component="wal.force", rid=self.rid)
         nbytes = sum(r.nbytes() for r in batch) + 64
         for f in self.insync:
             self._send(f, "on_propose", nbytes=nbytes, epoch=self.epoch,
@@ -1225,6 +1234,7 @@ class CohortReplica:
             self.queue[lsn] = rec
             records.append(rec)
         self.writes_served += 1
+        self._heat(sum(r.nbytes() for r in records))
         # client acked on the LAST record's commit (atomic prefix rule);
         # the records ride the shared batch accumulator — atomicity comes
         # from txn_tail in _apply_committed, not from sharing one force
@@ -1276,7 +1286,8 @@ class CohortReplica:
                 self.node.wal.append(
                     record, force=last,
                     cb=(lambda: self._on_follower_forced(tail, e0))
-                    if last else None)
+                    if last else None,
+                    component="wal.force", rid=self.rid)
         elif dup:
             # nothing new to force: re-ack the watermark
             self._ack(max(self._follower_forced, self.cmt))
@@ -1679,6 +1690,7 @@ class CohortReplica:
                 self.txn.defer_read(owner, key, colname, reply)
                 return
         self.reads_served += 1
+        self._heat()
         # Store.get contract: deletes surface as tombstone cells, not None
         # — report NOT_FOUND but keep the tombstone's version so clients
         # can conditional-put over a deleted key

@@ -204,6 +204,8 @@ class Network:
         self.bytes_sent = 0
         self.msgs_sent = 0
         self.dropped = 0
+        # resource profiler attribution (obs/profile.py); accounting only
+        self.profiler = None
 
     def set_down(self, endpoint: Any, down: bool = True) -> None:
         if down:
@@ -286,7 +288,8 @@ class Network:
             or self.partitioned(src, dst)
 
     def send(self, src: Any, dst: Any, handler: Callable, *args: Any,
-             nbytes: int = 256, cross_switch: bool = False) -> None:
+             nbytes: int = 256, cross_switch: bool = False,
+             component: Optional[str] = None, rid: Any = None) -> None:
         if self._blocked(src, dst):
             self.dropped += 1
             return  # dropped
@@ -300,6 +303,7 @@ class Network:
                 return  # silently eaten by the flaky link
             if dup_p and self.sim.rng.random() < dup_p:
                 copies = 2
+        prof = self.profiler
         for _ in range(copies):
             lat = self.sim.jitter(self.p.base_latency, self.p.jitter_cv)
             lat += nbytes / self.p.bandwidth
@@ -312,6 +316,8 @@ class Network:
             self._last_delivery[key] = deliver_at
             self.bytes_sent += nbytes
             self.msgs_sent += 1
+            if prof is not None and prof.enabled:
+                prof.net_msg(src, component or "other", nbytes, rid)
 
             def deliver():
                 # recheck liveness and partition membership at delivery time
@@ -357,11 +363,16 @@ class Disk:
         self.p = params or DiskParams()
         self.name = name
         self.busy = False
-        self._waiters: list[tuple[int, Callable]] = []  # (nbytes, cb)
+        # (nbytes, cb, component, rid)
+        self._waiters: list[tuple[int, Callable, Optional[str], Any]] = []
         self.forces = 0
         self.bytes_forced = 0
+        self.total_busy = 0.0
         self._gen = 0
         self.slow_factor = 1.0  # gray-failure degradation multiplier
+        # resource profiler attribution (obs/profile.py); accounting only
+        self.profiler = None
+        self.profiler_node = None
 
     def crash(self) -> None:
         """Drop in-flight IO (node crash).  Durable state is kept by the WAL."""
@@ -373,13 +384,14 @@ class Disk:
         """Force requests queued or in flight (metrics gauge)."""
         return len(self._waiters) + (1 if self.busy else 0)
 
-    def force(self, nbytes: int, cb: Callable) -> None:
+    def force(self, nbytes: int, cb: Callable,
+              component: Optional[str] = None, rid: Any = None) -> None:
         """Request a durable write of `nbytes`; `cb()` fires on completion.
 
         Requests arriving while the head is busy are coalesced into one
         batch force when the head frees up — this IS group commit [13].
         """
-        self._waiters.append((nbytes, cb))
+        self._waiters.append((nbytes, cb, component, rid))
         if not self.busy:
             self._start_batch()
 
@@ -389,20 +401,30 @@ class Disk:
         batch = self._waiters
         self._waiters = []
         self.busy = True
-        total = sum(b for b, _ in batch)
+        total = sum(b[0] for b in batch)
         lat = self.sim.jitter(self.p.force_latency, self.p.force_cv)
         lat += total / self.p.bandwidth
         lat *= self.slow_factor
         gen = self._gen
         self.forces += 1
         self.bytes_forced += total
+        self.total_busy += lat
+        prof = self.profiler
+        if prof is not None and prof.enabled:
+            # attribute the batch's head time proportionally by bytes (equal
+            # split when the batch carries no payload) so component sums
+            # match total_busy exactly
+            for nb, _cb, comp, rid in batch:
+                share = lat * (nb / total) if total else lat / len(batch)
+                prof.disk_busy(self.profiler_node, comp or "wal.force",
+                               share, nb, rid)
 
         def done():
             if gen != self._gen:
                 return
             self.busy = False
-            for _, cb in batch:
-                cb()
+            for b in batch:
+                b[1]()
             self._start_batch()
 
         self.sim.schedule(lat, done)

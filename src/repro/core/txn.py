@@ -109,7 +109,7 @@ class TxnManager:
         self.prepared: dict[str, PreparedTxn] = {}
         self.resolved: dict[str, tuple[str, int]] = {}  # txid -> (outcome, coord_rid)
         self.deciding: set[str] = set()            # TXN_COMMIT/ABORT in flight
-        self.deferred: dict[str, list[tuple]] = {}  # txid -> [(key, col, reply)]
+        self.deferred: dict[str, list[tuple]] = {}  # txid -> [(key, col, reply, t0)]
         # coordinator state
         self.active: dict[str, _Coord] = {}
         self.decided: dict[str, tuple[str, tuple[int, ...]]] = {}
@@ -250,7 +250,8 @@ class TxnManager:
 
     def _fail_deferred(self) -> None:
         for waiters in list(self.deferred.values()):
-            for _key, _col, reply in waiters:
+            for _key, _col, reply, t0 in waiters:
+                self._note_lock_wait(t0)
                 reply(Result(ErrorCode.NOT_LEADER,
                              leader_hint=self.rep.leader_id))
         self.deferred.clear()
@@ -270,10 +271,22 @@ class TxnManager:
     def defer_read(self, txid: str, key: str, colname: str,
                    reply: Callable) -> None:
         self.reads_deferred += 1
-        self.deferred.setdefault(txid, []).append((key, colname, reply))
+        self.deferred.setdefault(txid, []).append(
+            (key, colname, reply, self.rep.node.sim.now))
+
+    def _note_lock_wait(self, t0: float) -> None:
+        """Account how long a strong read waited on an in-doubt 2PC key —
+        the lock-wait dimension of the range's heat."""
+        rep = self.rep
+        wait = rep.node.sim.now - t0
+        prof = rep.obs.profiler
+        if prof.enabled:
+            prof.lock_wait(rep.rid, wait)
+        rep.obs.metrics.observe(rep.node.node_id, "lock_wait_s", wait)
 
     def _flush_deferred(self, txid: str) -> None:
-        for key, colname, reply in self.deferred.pop(txid, []):
+        for key, colname, reply, t0 in self.deferred.pop(txid, []):
+            self._note_lock_wait(t0)
             self.rep._read_one(key, colname, True, reply)
 
     def _release_locks(self, p: PreparedTxn) -> None:

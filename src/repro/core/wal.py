@@ -63,9 +63,13 @@ class WAL:
             = None
 
     # -- write path ---------------------------------------------------------
-    def append(self, entry: Entry, force: bool, cb: Optional[Callable] = None) -> None:
+    def append(self, entry: Entry, force: bool, cb: Optional[Callable] = None,
+               component: str = "wal.force",
+               rid: Optional[int] = None) -> None:
         """Append an entry.  If `force`, `cb()` fires when it is durable.
-        Non-forced entries ride along with the next force (commit markers)."""
+        Non-forced entries ride along with the next force (commit markers).
+        `component`/`rid` label the resulting device force for the resource
+        profiler (e.g. catch-up installs vs the normal data path)."""
         self.appends += 1
         if isinstance(entry, LogRecord):
             # re-appending an LSN supersedes an earlier logical truncation of
@@ -76,9 +80,11 @@ class WAL:
                 sk.discard(entry.lsn)
         self._buffer.append(_Pending(entry, force, cb))
         if force:
-            self.force()
+            self.force(component=component, rid=rid)
 
-    def force(self, cb: Optional[Callable] = None) -> None:
+    def force(self, cb: Optional[Callable] = None,
+              component: str = "wal.force",
+              rid: Optional[int] = None) -> None:
         """Force the buffered tail to disk with one device write; `cb()`
         fires when every buffered entry (and everything forced before it —
         the device is FIFO) is durable.  This is the leader-side batch
@@ -100,7 +106,7 @@ class WAL:
             if cb is not None:
                 cb()
 
-        self.disk.force(nbytes, on_durable)
+        self.disk.force(nbytes, on_durable, component=component, rid=rid)
 
     @staticmethod
     def _entry_bytes(entry: Entry) -> int:

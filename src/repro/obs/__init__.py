@@ -12,12 +12,14 @@ from dataclasses import dataclass
 
 from .events import EventLog
 from .metrics import MetricsRegistry
+from .profile import Profiler, format_profile_report
 from .trace import (OpTrace, Tracer, TxnTrace, stage_breakdown,
                     CASSANDRA_CHAIN, SPINNAKER_CHAIN)
 
 __all__ = [
     "ObsConfig", "Observability", "Tracer", "OpTrace", "TxnTrace",
-    "EventLog", "MetricsRegistry", "stage_breakdown",
+    "EventLog", "MetricsRegistry", "Profiler", "format_profile_report",
+    "stage_breakdown",
     "SPINNAKER_CHAIN", "CASSANDRA_CHAIN", "install_node_gauges",
 ]
 
@@ -30,10 +32,17 @@ class ObsConfig:
     sampling — see `Tracer`); 2PC chains are always traced when enabled
     since the completeness audit must see *every* committed transaction.
     `metrics_interval` <= 0 leaves the scrape ticker unarmed (on-demand
-    `scrape()` only), so plain unit-test clusters carry no timers."""
+    `scrape()` only), so plain unit-test clusters carry no timers.
+
+    `profile` enables the component-attributed resource profiler (pure
+    accounting — a profiled run is bit-identical to an unprofiled one);
+    `profile_interval` > 0 additionally records a per-interval
+    utilization timeline (one timer, no RNG draws)."""
     enabled: bool = True
     trace_sample: float = 1.0
     metrics_interval: float = 0.0
+    profile: bool = True
+    profile_interval: float = 0.0
 
 
 class Observability:
@@ -44,10 +53,20 @@ class Observability:
                              enabled=self.cfg.enabled)
         self.events = EventLog(sim)
         self.metrics = MetricsRegistry(sim, interval=self.cfg.metrics_interval)
+        self.profiler = Profiler(sim, system,
+                                 enabled=self.cfg.enabled and self.cfg.profile,
+                                 interval=self.cfg.profile_interval)
 
     def start(self) -> None:
         if self.cfg.enabled and self.cfg.metrics_interval > 0:
             self.metrics.start()
+        self.profiler.start()
+
+    def stop(self) -> None:
+        """End-of-run flush: final metrics scrape + final profiler
+        utilization snapshot.  Idempotent."""
+        self.metrics.stop()
+        self.profiler.stop()
 
 
 def install_node_gauges(obs: Observability, node) -> None:

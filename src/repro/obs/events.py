@@ -10,6 +10,7 @@ caused it.
 
 from __future__ import annotations
 
+import json
 from typing import Optional
 
 
@@ -41,3 +42,14 @@ class EventLog:
             e["t"] = round(e["t"] - t0, 6)
             out.append(e)
         return out
+
+    def to_jsonl(self, t0: float = 0.0, kinds: Optional[set] = None) -> str:
+        """One JSON object per line with stable field ordering (`t`,
+        `kind`, then remaining fields sorted by name), so exports diff
+        cleanly run-to-run.  Non-JSON field values fall back to `str`."""
+        lines = []
+        for ev in self.export(t0=t0, kinds=kinds):
+            rest = {k: ev[k] for k in sorted(ev) if k not in ("t", "kind")}
+            ordered = {"t": ev["t"], "kind": ev["kind"], **rest}
+            lines.append(json.dumps(ordered, default=str))
+        return "\n".join(lines) + ("\n" if lines else "")

@@ -20,10 +20,12 @@ from .generators import Op, OpKind, OpStream, WorkloadSpec
 from .metrics import LatencyHistogram, OpLog, WindowSummary
 from .scenario import FaultEvent, FaultSchedule, parse_schedule
 from .experiment import (ExperimentConfig, run_cassandra_breakdown,
-                         run_cassandra_workload, run_spinnaker_breakdown,
-                         run_spinnaker_chaos, run_spinnaker_minority_leader,
-                         run_spinnaker_rebalance, run_spinnaker_saturation,
-                         run_spinnaker_txn, run_spinnaker_workload)
+                         run_cassandra_profiled, run_cassandra_workload,
+                         run_spinnaker_breakdown, run_spinnaker_chaos,
+                         run_spinnaker_minority_leader,
+                         run_spinnaker_profiled, run_spinnaker_rebalance,
+                         run_spinnaker_saturation, run_spinnaker_txn,
+                         run_spinnaker_workload)
 
 __all__ = [
     "AckLedgerAdapter",
@@ -44,10 +46,12 @@ __all__ = [
     "WorkloadSpec",
     "parse_schedule",
     "run_cassandra_breakdown",
+    "run_cassandra_profiled",
     "run_cassandra_workload",
     "run_spinnaker_breakdown",
     "run_spinnaker_chaos",
     "run_spinnaker_minority_leader",
+    "run_spinnaker_profiled",
     "run_spinnaker_rebalance",
     "run_spinnaker_saturation",
     "run_spinnaker_txn",

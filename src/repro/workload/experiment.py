@@ -63,6 +63,10 @@ class ExperimentConfig:
     # (0 leaves the registry scrape-on-demand only)
     trace_sample: float = 1.0
     metrics_interval: float = 0.0
+    # component-attributed resource profiler (pure accounting — zero
+    # modeled cost); profile_interval > 0 records a utilization timeline
+    profile: bool = True
+    profile_interval: float = 0.0
 
 
 def build_spinnaker(cfg: ExperimentConfig, num_keys: Optional[int] = None):
@@ -81,7 +85,9 @@ def build_spinnaker(cfg: ExperimentConfig, num_keys: Optional[int] = None):
             lease_duration=cfg.lease_duration),
                         disk=_DISKS[cfg.disk]()),
         obs=ObsConfig(trace_sample=cfg.trace_sample,
-                      metrics_interval=cfg.metrics_interval))
+                      metrics_interval=cfg.metrics_interval,
+                      profile=cfg.profile,
+                      profile_interval=cfg.profile_interval))
     if num_keys is not None:
         ccfg.num_keys = num_keys
     cluster = SpinnakerCluster(sim, ccfg)
@@ -99,7 +105,9 @@ def build_cassandra(cfg: ExperimentConfig):
                              batch_deadline=cfg.batch_deadline,
                              obs=ObsConfig(
                                  trace_sample=cfg.trace_sample,
-                                 metrics_interval=cfg.metrics_interval)))
+                                 metrics_interval=cfg.metrics_interval,
+                                 profile=cfg.profile,
+                                 profile_interval=cfg.profile_interval)))
     return sim, cluster
 
 
@@ -531,11 +539,62 @@ def run_cassandra_workload(spec: WorkloadSpec,
     return out
 
 
+def run_spinnaker_profiled(spec: WorkloadSpec,
+                           cfg: Optional[ExperimentConfig] = None,
+                           consistent_reads: bool = True) -> dict:
+    """One Spinnaker run with the full resource profile attached: the
+    usual workload result block plus `out["profile"]` — per-node x
+    per-component busy-time attribution, utilization timeline, and
+    per-range heat (`Profiler.summary()`)."""
+    cfg = cfg or ExperimentConfig()
+    sim, cluster = build_spinnaker(cfg, num_keys=_aligned_presplit(cfg, spec))
+    loader = cluster.make_client("preload")
+    n_pre = min(cfg.preload_keys or spec.num_keys, cfg.preload_cap,
+                spec.num_keys)
+    _preload(sim, lambda k, cb: loader.put(k, "c", b"x" * spec.value_size,
+                                           cb), n_pre)
+    adapter = SpinnakerAdapter(cluster.make_client("bench"),
+                               consistent=consistent_reads)
+    log, t_start, _drv = _drive(sim, adapter, spec, cfg, None, cluster, n_pre)
+    read_kind = "read" if consistent_reads else "timeline_read"
+    out = _result(log, cfg, read_kind, "write", None, t_start)
+    out["trace_audit"] = cluster.obs.tracer.audit_writes()
+    cluster.obs.stop()
+    out["profile"] = cluster.obs.profiler.summary()
+    if cfg.metrics_interval > 0:
+        out["metrics"] = cluster.obs.metrics.summary()
+    return out
+
+
+def run_cassandra_profiled(spec: WorkloadSpec,
+                           cfg: Optional[ExperimentConfig] = None,
+                           quorum: bool = True) -> dict:
+    """Cassandra-baseline counterpart of `run_spinnaker_profiled`."""
+    cfg = cfg or ExperimentConfig()
+    sim, cluster = build_cassandra(cfg)
+    loader = cluster.make_client("preload")
+    n_pre = min(cfg.preload_keys or spec.num_keys, cfg.preload_cap,
+                spec.num_keys)
+    _preload(sim, lambda k, cb: loader.write(k, "c", b"x" * spec.value_size,
+                                             True, cb), n_pre)
+    adapter = CassandraAdapter(cluster.make_client("bench"), quorum=quorum)
+    log, t_start, _drv = _drive(sim, adapter, spec, cfg, None, cluster, n_pre)
+    prefix = "" if quorum else "eventual_"
+    out = _result(log, cfg, f"{prefix}read", f"{prefix}write", None, t_start)
+    out["trace_audit"] = cluster.obs.tracer.audit_writes()
+    cluster.obs.stop()
+    out["profile"] = cluster.obs.profiler.summary()
+    if cfg.metrics_interval > 0:
+        out["metrics"] = cluster.obs.metrics.summary()
+    return out
+
+
 def _breakdown_block(cluster, log, cfg: ExperimentConfig,
                      write_kind: str) -> dict:
     """Latency-breakdown result block shared by both systems: per-stage
     p50 decomposition from the traces, cross-checked against the OpLog's
     independently measured percentiles."""
+    cluster.obs.stop()      # flush the tail scrape before summarizing
     bd = stage_breakdown(cluster.obs.tracer.traces, kind=write_kind)
     w = log.summary(write_kind, duration=cfg.duration)
     bd["measured_write_p50_ms"] = w["p50_ms"]

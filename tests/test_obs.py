@@ -14,12 +14,14 @@ The load-bearing invariants:
 - a traced run is op-for-op identical to an untraced one.
 """
 
+import json
 import math
 
 import pytest
 
 from repro.core import (ClusterConfig, OpType, Simulator, SpinnakerCluster,
                         WriteOp, key_of)
+from repro.core.ranges import BalancerConfig
 from repro.obs import ObsConfig
 from repro.obs.events import EventLog
 from repro.obs.metrics import MetricsRegistry
@@ -218,18 +220,19 @@ def test_metrics_scrape_series_and_summary():
         sim.schedule(0.1 * i + 0.01, lambda i=i: (
             reg.inc(1, "writes", 10), box.__setitem__("v", float(i))))
     sim.run(until=0.55)
-    reg.stop()
+    reg.stop()      # emits the final tail scrape at t=0.55
     exp = reg.export()
     assert "n3.broken" not in exp
     writes = exp["n1.writes"]
-    assert len(writes) == 5
+    assert len(writes) == 6
+    assert writes[-1][0] == pytest.approx(0.55)
     # counters export cumulatively
-    assert [v for _, v in writes] == [10.0, 20.0, 30.0, 40.0, 50.0]
+    assert [v for _, v in writes] == [10.0, 20.0, 30.0, 40.0, 50.0, 50.0]
     gauge = exp["n2.queue_depth"]
-    assert [v for _, v in gauge] == [0.0, 1.0, 2.0, 3.0, 4.0]
+    assert [v for _, v in gauge] == [0.0, 1.0, 2.0, 3.0, 4.0, 4.0]
     s = reg.summary()
     assert s["n1.writes"]["last"] == 50.0 and s["n1.writes"]["max"] == 50.0
-    assert s["n2.queue_depth"]["mean"] == pytest.approx(2.0)
+    assert s["n2.queue_depth"]["mean"] == pytest.approx(14 / 6)
 
 
 def test_metrics_ticker_not_armed_without_start():
@@ -276,3 +279,172 @@ def test_node_gauges_registered_per_node():
         key = f"n{node_id}.wal_forces"
         assert key in exp and len(exp[key]) >= 2
     assert any(k.endswith(".cpu_queue_s") for k in exp)
+
+
+def test_histogram_metric_observe_scrape_and_summary():
+    sim = Simulator(seed=0)
+    reg = MetricsRegistry(sim, interval=0.1)
+    reg.start()
+    samples = [0.001, 0.002, 0.004, 0.008, 0.0005]   # seconds
+    for i, v in enumerate(samples):
+        sim.schedule(0.05 + 0.1 * i,
+                     lambda v=v: reg.observe(1, "lock_wait_s", v))
+    sim.run(until=0.55)
+    reg.stop()
+    # histograms scrape their cumulative sample count like a counter
+    series = reg.export()["n1.lock_wait_s"]
+    assert [v for _, v in series] == [1, 2, 3, 4, 5, 5]
+    s = reg.summary()["n1.lock_wait_s"]
+    assert s["count"] == 5
+    assert s["mean_ms"] == pytest.approx(
+        sum(samples) / len(samples) * 1e3, rel=1e-9)
+    # log-binned: p50 lands on the 2 ms sample's bin edge (≤3.3% error)
+    assert 1.5 <= s["p50_ms"] <= 3.0
+    assert s["p99_ms"] >= s["p50_ms"]
+
+
+def test_event_log_to_jsonl_stable_field_order():
+    sim = Simulator(seed=0)
+    log = EventLog(sim)
+    log.emit("split", rid=3, parent=0)
+    sim.schedule(1.0, lambda: log.emit("move", z_last=1, a_first=2, rid=4))
+    sim.run(until=2.0)
+    out = log.to_jsonl()
+    assert out.endswith("\n")
+    lines = out.splitlines()
+    assert len(lines) == 2
+    # stable ordering: t, kind, then remaining fields sorted by name
+    assert list(json.loads(lines[0])) == ["t", "kind", "parent", "rid"]
+    assert list(json.loads(lines[1])) == ["t", "kind", "a_first", "rid",
+                                          "z_last"]
+    assert json.loads(lines[1])["kind"] == "move"
+    assert log.to_jsonl(kinds={"move"}).splitlines() == [lines[1]]
+    assert EventLog(sim).to_jsonl() == ""
+
+
+# ---------------------------------------------------------------------------
+# resource profiler
+# ---------------------------------------------------------------------------
+
+
+def test_profiler_attribution_matches_measured_busy():
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    for i in range(30):
+        assert sync(sim, c.put, key_of(i % 20), "c", b"v").ok
+    for i in range(10):
+        assert sync(sim, c.get, key_of(i), "c", True).ok
+    prof = cluster.obs.profiler.summary()
+    assert prof["nodes"]
+    for nid, nb in prof["nodes"].items():
+        # every modeled busy second carries a component label: attribution
+        # sums match the servers' measured totals (the 5% gate, here exact
+        # up to rounding)
+        if nb["cpu_busy_s"] > 1e-9:
+            assert nb["cpu_attributed_s"] == pytest.approx(
+                nb["cpu_busy_s"], rel=0.05), (nid, nb)
+        if nb["disk_busy_s"] > 1e-9:
+            assert nb["disk_attributed_s"] == pytest.approx(
+                nb["disk_busy_s"], rel=0.05), (nid, nb)
+    shares = prof["cpu_share_by_component"]
+    assert shares and sum(shares.values()) == pytest.approx(1.0, abs=0.01)
+    assert any(c.startswith("paxos.") for c in shares)
+    # per-range heat saw every served client op
+    heat = prof["heat"]
+    assert sum(h["ops"] for h in heat.values()) >= 40
+    assert sum(h["bytes"] for h in heat.values()) > 0
+
+
+def test_profiler_does_not_perturb_the_run():
+    spec = WorkloadSpec(num_keys=100, value_size=256,
+                        read_frac=0.5, write_frac=0.5, rmw_frac=0,
+                        cond_frac=0)
+    outs = []
+    for profile in (True, False):
+        cfg = ExperimentConfig(n_nodes=3, disk="mem", n_clients=2,
+                               warmup=0.2, duration=1.5, preload_cap=50,
+                               profile=profile,
+                               profile_interval=0.25 if profile else 0.0)
+        outs.append(run_spinnaker_workload(spec, cfg))
+    on, off = outs
+    # pure accounting: the profiled run is op-for-op the unprofiled run
+    assert on["total_ops"] == off["total_ops"]
+    assert on["writes"]["count"] == off["writes"]["count"]
+    assert on["writes"]["p50_ms"] == off["writes"]["p50_ms"]
+    assert on["reads"]["p99_ms"] == off["reads"]["p99_ms"]
+
+
+def test_trace_continuity_across_wrong_range_redirect():
+    sim, cluster = make_cluster()
+    c = cluster.make_client()
+    for i in range(40):                    # populate + load the table
+        assert sync(sim, c.put, key_of(i), "c", b"v").ok
+    rt = c.range_table
+    stale = (list(rt._los), list(rt._rids), dict(rt._members))
+    parent = cluster.range_of(key_of(3))
+    assert cluster.admin_split(parent)
+    sim.run_for(2.0)
+    cluster.settle()
+    # wind the client cache back to the pre-split table: the next op on a
+    # moved key routes to the old leader and bounces with WRONG_RANGE
+    rt._los, rt._rids, rt._members = stale
+    rt._loaded = True
+    moved = next(key_of(i) for i in range(1000)
+                 if rt.lookup(key_of(i)) == parent
+                 and cluster.range_of(key_of(i)) != parent)
+    before = c.wrong_range_redirects
+    res = sync(sim, c.put, moved, "c", b"v2")
+    assert res.ok
+    assert c.wrong_range_redirects > before
+    # the redirected op's trace still closes its full write chain
+    audit = cluster.obs.tracer.audit_writes()
+    assert audit["ok"], audit
+
+
+def test_trace_continuity_across_mid_op_split():
+    sim, cluster = make_cluster(seed=3)
+    c = cluster.make_client()
+    acked = []
+
+    def put_i(i):
+        c.put(key_of(i % 40), "c", b"x", lambda r: acked.append(r))
+
+    for i in range(60):
+        sim.schedule(0.01 * i, put_i, i)
+    rid = cluster.range_of(key_of(0))
+    sim.schedule(0.25, lambda: cluster.admin_split(rid))
+    sim.run_for(8.0)
+    assert len(acked) == 60 and all(r.ok for r in acked)
+    assert len(cluster.ranges) > 1
+    audit = cluster.obs.tracer.audit_writes()
+    assert audit["ok"], audit
+
+
+def test_balancer_decision_events_carry_heat():
+    sim, cluster = make_cluster(seed=9)
+    c = cluster.make_client("hot")
+    for i in range(20):
+        assert sync(sim, c.put, key_of(i % 15), "c", b"v").ok
+    cluster.set_autobalance(True, BalancerConfig(
+        period=0.2, split_threshold=100.0, cooldown=0.3,
+        min_node_load=1e9))   # moves disabled; splits only
+
+    def hammer(i=0):
+        c.put(key_of(i % 15), "c", b"hot", lambda r: hammer(i + 1))
+
+    for _ in range(4):
+        hammer()
+    sim.run_for(4.0)
+    cluster.set_autobalance(False)
+    evs = [e for e in cluster.obs.events.events
+           if e["kind"] == "balancer_split_decision"]
+    assert evs, [e["kind"] for e in cluster.obs.events.events]
+    ev = evs[0]
+    # the decision event records the triggering heat reading
+    assert ev["load_ops_s"] > 0 and ev["threshold"] == 100.0
+    assert set(ev["heat"]) == {"ops", "bytes", "lock_wait_s"}
+    assert ev["heat"]["ops"] > 0
+    # decision events serialize through the stable jsonl export
+    line = cluster.obs.events.to_jsonl(
+        kinds={"balancer_split_decision"}).splitlines()[0]
+    assert list(json.loads(line))[:2] == ["t", "kind"]
