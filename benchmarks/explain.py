@@ -1,0 +1,484 @@
+"""Offline protocol-journal replayer and root-cause explainer.
+
+    PYTHONPATH=src python benchmarks/explain.py DUMP.jsonl [--rid N]
+        [--stall T_LO T_HI] [--json]
+    PYTHONPATH=src python benchmarks/explain.py --demo takeover_wedge
+    PYTHONPATH=src python benchmarks/explain.py --demo chaos --seed 3
+
+Consumes a protocol-journal dump (`ProtocolJournal.to_jsonl`) — the
+flight recorder every run keeps for free — and answers the debugging
+questions a failed run raises:
+
+- **per-range timeline**: leadership regimes reconstructed from the
+  journal (takeover → open-for-writes → commits → how the regime ended:
+  abdication, lease lapse, deposal, crash), with election context
+  (candidate set, winner's LST vs the cohort max);
+- **failover narratives**: one paragraph per regime change — who took
+  over, why the predecessor fell, how long until writes reopened;
+- **stall explanations**: for a `[t_lo, t_hi]` window, which spans had
+  no open leader and what the range was doing instead (elections,
+  catch-up, a wedged takeover);
+- **anomaly signatures**: named patterns matched against the whole dump
+  — `takeover_wedge` (a takeover advertising records it cannot re-send,
+  or a range cycling through regimes that never reopen),
+  `catchup_starvation` (a CATCHUP replica hearing a live leader's lease
+  beats yet making no progress), `split_brain_precursor` (overlapping
+  lease claims, classified benign-handoff vs genuine overlap);
+- **invariant replay**: the online watchdog re-run offline over the
+  dump (`InvariantWatchdog.replay`), so a dump from a run that had the
+  watchdog disabled still gets the full invariant sweep.
+
+`--demo` runs a known scenario in-process (a seeded chaos schedule or a
+mutation-corpus bug), dumps its journal to a JSONL file, and explains
+that dump — the end-to-end path a real postmortem takes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.obs.journal import ProtocolJournal  # noqa: E402
+from repro.obs.watchdog import InvariantWatchdog  # noqa: E402
+
+LSN_SEQ_BITS = 40
+
+
+def _fmt_lsn(lsn) -> str:
+    if lsn is None:
+        return "-"
+    return f"{lsn >> LSN_SEQ_BITS}.{lsn & ((1 << LSN_SEQ_BITS) - 1)}"
+
+
+def load_entries(path: str) -> list[dict]:
+    return ProtocolJournal.load_jsonl(Path(path).read_text())
+
+
+def journal_rids(entries: list[dict]) -> list[int]:
+    return sorted({e["rid"] for e in entries if "rid" in e})
+
+
+# -- per-range regime reconstruction ----------------------------------------
+
+
+def regimes(entries: list[dict], rid: int) -> list[dict]:
+    """Leadership regimes of one range, in order.  A regime starts at a
+    `takeover` entry and ends at the leader's abdication / lease lapse /
+    deposal / crash (or when a later takeover supersedes it)."""
+    regs: list[dict] = []
+    cur: dict | None = None
+    election: dict | None = None
+    for e in entries:
+        erid = e.get("rid")
+        if erid is not None and erid != rid:
+            continue
+        k = e["kind"]
+        if k == "elect_decide" and erid == rid:
+            # stash election context for the takeover that follows it
+            election = e
+        elif k == "takeover":
+            if cur is not None and cur["t_end"] is None:
+                cur["t_end"] = e["t"]
+                cur["end_reason"] = "superseded by next takeover"
+            cur = {
+                "rid": rid, "epoch": e.get("epoch"), "leader": e["node"],
+                "t_takeover": e["t"], "t_open": None, "t_end": None,
+                "end_reason": None, "n_commits": 0, "last_commit_lsn": None,
+                "cmt_at_takeover": e.get("cmt"),
+                "lst_at_takeover": e.get("lst"),
+                "unresolved": e.get("unresolved", 0),
+                "missing": e.get("missing", 0),
+                "election": None,
+            }
+            if election is not None and election.get("winner") == e["node"]:
+                cur["election"] = {
+                    "candidates": election.get("candidates"),
+                    "winner_lst": election.get("winner_lst"),
+                    "max_lst": election.get("max_lst"),
+                }
+            regs.append(cur)
+        elif cur is None:
+            continue
+        elif (k == "leader_open" and e["node"] == cur["leader"]
+              and e.get("epoch") == cur["epoch"]):
+            if cur["t_open"] is None:
+                cur["t_open"] = e["t"]
+        elif k == "commit" and e["node"] == cur["leader"]:
+            cur["n_commits"] += 1
+            cur["last_commit_lsn"] = e.get("lsn")
+        elif cur["t_end"] is not None:
+            continue
+        elif (k in ("abdicate", "lease_lapse")
+              and e["node"] == cur["leader"]):
+            why = e.get("why", "")
+            cur["t_end"] = e["t"]
+            cur["end_reason"] = f"{k}({why})" if why else k
+        elif k == "deposed" and e.get("leader") == cur["leader"]:
+            cur["t_end"] = e["t"]
+            cur["end_reason"] = f"deposed by node {e['node']}"
+        elif (k == "node_crash" and erid is None
+              and e["node"] == cur["leader"]):
+            cur["t_end"] = e["t"]
+            cur["end_reason"] = ("leader crashed (disk lost)"
+                                 if e.get("lose_disk") else "leader crashed")
+    return regs
+
+
+def explain_failover(entries: list[dict], rid: int) -> list[str]:
+    """One narrative paragraph per leadership regime of `rid`."""
+    lines: list[str] = []
+    prev = None
+    for reg in regimes(entries, rid):
+        head = (f"t={reg['t_takeover']:.3f}s range {rid} epoch "
+                f"{reg['epoch']}: node {reg['leader']} took over "
+                f"(cmt={_fmt_lsn(reg['cmt_at_takeover'])}, "
+                f"lst={_fmt_lsn(reg['lst_at_takeover'])}, "
+                f"{reg['unresolved']} unresolved)")
+        if prev is not None and prev["t_end"] is not None:
+            gap = (reg["t_takeover"] - prev["t_end"]) * 1e3
+            head += (f" — {gap:.0f}ms after epoch {prev['epoch']} ended "
+                     f"[{prev['end_reason']}]")
+        lines.append(head)
+        if reg["election"]:
+            el = reg["election"]
+            lines.append(
+                f"    elected from candidates {el['candidates']} "
+                f"(winner lst={_fmt_lsn(el['winner_lst'])}, cohort max "
+                f"lst={_fmt_lsn(el['max_lst'])})")
+        if reg["missing"]:
+            lines.append(
+                f"    TAKEOVER INCOMPLETE: {reg['missing']} durable "
+                f"record(s) of the unresolved window were not reloaded — "
+                f"the regime advertises an LST it can never re-send "
+                f"(takeover-wedge signature)")
+        if reg["t_open"] is not None:
+            dt = (reg["t_open"] - reg["t_takeover"]) * 1e3
+            lines.append(f"    opened for writes +{dt:.0f}ms; "
+                         f"{reg['n_commits']} commit advance(s), last "
+                         f"cmt={_fmt_lsn(reg['last_commit_lsn'])}")
+        else:
+            lines.append("    NEVER OPENED for writes"
+                         + (f"; ended t={reg['t_end']:.3f}s "
+                            f"[{reg['end_reason']}]"
+                            if reg["t_end"] is not None else
+                            " (still closed at end of dump)"))
+        if reg["t_open"] is not None and reg["t_end"] is not None:
+            lines.append(f"    ended t={reg['t_end']:.3f}s "
+                         f"[{reg['end_reason']}]")
+        prev = reg
+    if not lines:
+        lines.append(f"range {rid}: no takeover entries in dump")
+    return lines
+
+
+def explain_stall(entries: list[dict], rid: int,
+                  t_lo: float, t_hi: float) -> list[str]:
+    """Why did range `rid` stall in [t_lo, t_hi]?  Reports the sub-spans
+    with no open leader and what the cohort was doing instead."""
+    regs = regimes(entries, rid)
+    lines = [f"range {rid}, window [{t_lo:.3f}s, {t_hi:.3f}s]:"]
+    # open intervals: [t_open, t_end-or-inf) per regime
+    open_spans = [(r["t_open"], r["t_end"] if r["t_end"] is not None
+                   else float("inf"), r)
+                  for r in regs if r["t_open"] is not None]
+    t = t_lo
+    covered = []
+    for lo, hi, r in sorted(open_spans):
+        if hi <= t_lo or lo >= t_hi:
+            continue
+        covered.append((max(lo, t_lo), min(hi, t_hi), r))
+    if not covered:
+        lines.append("  no open leader at any point in the window")
+    gaps = []
+    for lo, hi, r in covered:
+        if lo > t + 1e-9:
+            gaps.append((t, lo))
+        lines.append(f"  [{lo:.3f}, {hi:.3f}] node {r['leader']} open "
+                     f"(epoch {r['epoch']})")
+        t = max(t, hi)
+    if t < t_hi - 1e-9:
+        gaps.append((t, t_hi))
+    for lo, hi in gaps:
+        lines.append(f"  [{lo:.3f}, {hi:.3f}] NO LEADER OPEN "
+                     f"({(hi - lo) * 1e3:.0f}ms write stall)")
+        # what was the cohort doing during the gap?
+        doing: dict[str, int] = {}
+        for e in entries:
+            if e.get("rid") == rid and lo <= e["t"] <= hi:
+                doing[e["kind"]] = doing.get(e["kind"], 0) + 1
+        busy = {k: n for k, n in sorted(doing.items())
+                if k not in ("append", "flush", "ack", "commit",
+                             "commit_idx", "lease_renew", "lease_heard")}
+        if busy:
+            lines.append(f"    cohort activity: "
+                         + ", ".join(f"{k}×{n}" for k, n in busy.items()))
+    return lines
+
+
+# -- anomaly signatures ------------------------------------------------------
+
+
+def sig_takeover_wedge(entries: list[dict]) -> list[dict]:
+    """A takeover that advertised durable records it cannot re-send
+    (`missing` > 0), or a range cycling through regimes that never
+    reopen for writes."""
+    out = []
+    for rid in journal_rids(entries):
+        regs = regimes(entries, rid)
+        for r in regs:
+            if r["missing"]:
+                out.append({
+                    "rid": rid, "t": r["t_takeover"], "severity": "bug",
+                    "detail": f"epoch {r['epoch']} takeover by node "
+                              f"{r['leader']} is missing {r['missing']} "
+                              f"durable record(s) of its unresolved window",
+                })
+        never_open = [r for r in regs if r["t_open"] is None
+                      and r["t_end"] is not None]
+        if len(never_open) >= 2:
+            out.append({
+                "rid": rid, "t": never_open[0]["t_takeover"],
+                "severity": "warning",
+                "detail": f"{len(never_open)} successive regimes (epochs "
+                          f"{[r['epoch'] for r in never_open]}) never "
+                          f"reopened for writes — the range is wedged",
+            })
+    return out
+
+
+def sig_catchup_starvation(entries: list[dict],
+                           stall_s: float = 2.0) -> list[dict]:
+    """A CATCHUP replica hearing a live leader's lease beats yet never
+    completing catch-up — the retry clock is not firing."""
+    out = []
+    episodes: dict[tuple, dict] = {}
+    for e in entries:
+        key = (e["node"], e.get("rid"))
+        k = e["kind"]
+        if k == "catchup_enter":
+            episodes[key] = {"t_enter": e["t"], "t_last_req": e["t"],
+                             "beats": 0, "t_last_beat": None}
+        elif key not in episodes:
+            continue
+        elif k == "catchup_retry":
+            episodes[key]["t_last_req"] = e["t"]
+        elif k == "lease_heard" and e.get("role") == "CATCHUP":
+            ep = episodes[key]
+            ep["beats"] += 1
+            ep["t_last_beat"] = e["t"]
+        elif k in ("catchup_exit", "node_crash", "replica_retired"):
+            episodes.pop(key, None)
+    for (node, rid), ep in sorted(episodes.items()):
+        if ep["beats"] < 3 or ep["t_last_beat"] is None:
+            continue
+        starved = ep["t_last_beat"] - max(ep["t_enter"], ep["t_last_req"])
+        if starved > stall_s:
+            out.append({
+                "rid": rid, "t": ep["t_last_beat"], "severity": "bug",
+                "detail": f"node {node} sat in CATCHUP for {starved:.2f}s "
+                          f"hearing {ep['beats']} leader lease beats "
+                          f"without re-requesting data",
+            })
+    return out
+
+
+def sig_split_brain_precursor(entries: list[dict]) -> list[dict]:
+    """Two simultaneously-live lease claims on one range.  A claim by a
+    strictly newer epoch overlapping the old one is the bounded takeover
+    handoff (benign, epoch-fenced); same-or-older epoch overlap is the
+    genuine precursor the watchdog's `lease_disjoint` hardens against."""
+    out = []
+    claims: dict[tuple, dict] = {}        # (rid, node) -> lease entry
+    for e in entries:
+        k = e["kind"]
+        rid = e.get("rid")
+        if k == "lease_acquire":
+            t, until = e["t"], e.get("until", 0.0)
+            for (crid, cnode), c in list(claims.items()):
+                if crid != rid or cnode == e["node"]:
+                    continue
+                if c.get("until", 0.0) > t + 1e-9:
+                    newer = (e.get("epoch") or 0) > (c.get("epoch") or 0)
+                    out.append({
+                        "rid": rid, "t": t,
+                        "severity": "benign-handoff" if newer
+                        else "precursor",
+                        "detail": f"node {e['node']} (epoch {e.get('epoch')})"
+                                  f" acquired a lease while node {cnode} "
+                                  f"(epoch {c.get('epoch')}) holds one for "
+                                  f"another {(c['until'] - t) * 1e3:.0f}ms",
+                    })
+            claims[(rid, e["node"])] = e
+        elif k in ("lease_lapse", "abdicate"):
+            claims.pop((rid, e["node"]), None)
+        elif k == "deposed":
+            claims.pop((rid, e.get("leader")), None)
+        elif k in ("node_crash", "session_flap"):
+            for key in [key for key in claims if key[1] == e["node"]]:
+                claims.pop(key, None)
+    return out
+
+
+SIGNATURES = {
+    "takeover_wedge": sig_takeover_wedge,
+    "catchup_starvation": sig_catchup_starvation,
+    "split_brain_precursor": sig_split_brain_precursor,
+}
+
+
+def scan_signatures(entries: list[dict]) -> dict[str, list[dict]]:
+    return {name: fn(entries) for name, fn in SIGNATURES.items()}
+
+
+# -- slow-op narrative (merges a trace's spans with its journal window) -----
+
+
+def explain_slow_op(trace: dict, entries: list[dict] | None = None
+                    ) -> list[str]:
+    """Narrate one slow traced op: dominant stage from its span chain,
+    plus what its range's protocol journal shows for the op's lifetime.
+    `trace` is a `top_slowest` dict (bench breakdown block); `entries`
+    overrides the embedded window summary with a full dump."""
+    stages = trace.get("stages_ms", {})
+    worst = max(stages, key=stages.get) if stages else None
+    lines = [f"trace {trace.get('trace_id')} key={trace.get('key')} "
+             f"e2e={trace.get('e2e_ms', 0.0):.3f}ms "
+             f"attempts={trace.get('attempts')}"
+             + (f" — dominant stage {worst} ({stages[worst]:.3f}ms)"
+                if worst else "")]
+    rid = trace.get("rid")
+    t0, t1 = trace.get("t_issue"), trace.get("t_done")
+    if entries is not None and rid is not None and t0 is not None:
+        win = [e for e in entries
+               if e.get("rid") == rid and t0 <= e["t"] <= t1]
+        notable = [e for e in win if e["kind"] in
+                   ("takeover", "leader_open", "abdicate", "deposed",
+                    "lease_lapse", "elect_decide", "catchup_enter",
+                    "node_crash", "node_restart")]
+        summary = {"n_entries": len(win), "notable": notable}
+    else:
+        summary = trace.get("journal") or {}
+    if summary:
+        lines.append(f"    journal window: {summary.get('n_entries', 0)} "
+                     f"range-{rid} entries during the op")
+        for e in summary.get("notable", []):
+            extra = e.get("why") or e.get("winner")
+            lines.append(f"      t={e['t']:.3f}s {e['kind']} "
+                         f"node={e['node']}"
+                         + (f" ({extra})" if extra is not None else ""))
+        if not summary.get("notable"):
+            lines.append("      no regime changes — latency is queueing/"
+                         "service time, not a protocol stall")
+    return lines
+
+
+# -- whole-dump analysis -----------------------------------------------------
+
+
+def analyze(entries: list[dict]) -> dict:
+    """Structured report over a dump: per-range regimes, the watchdog
+    replayed offline, and the anomaly-signature scan."""
+    rids = journal_rids(entries)
+    return {
+        "n_entries": len(entries),
+        "t_span": [entries[0]["t"], entries[-1]["t"]] if entries else [0, 0],
+        "ranges": {rid: regimes(entries, rid) for rid in rids},
+        "watchdog": InvariantWatchdog.replay(entries).summary(),
+        "signatures": scan_signatures(entries),
+    }
+
+
+def narrate(entries: list[dict], rid: int | None = None,
+            stall: tuple[float, float] | None = None) -> str:
+    rep = analyze(entries)
+    out = [f"journal: {rep['n_entries']} entries over "
+           f"[{rep['t_span'][0]:.3f}s, {rep['t_span'][1]:.3f}s], "
+           f"ranges {list(rep['ranges'])}"]
+    rids = [rid] if rid is not None else list(rep["ranges"])
+    for r in rids:
+        out.append(f"\n== range {r}: failover timeline ==")
+        out.extend(explain_failover(entries, r))
+        if stall is not None:
+            out.append(f"\n== range {r}: stall window ==")
+            out.extend(explain_stall(entries, r, *stall))
+    out.append("\n== anomaly signatures ==")
+    any_sig = False
+    for name, findings in rep["signatures"].items():
+        for f in findings:
+            any_sig = True
+            out.append(f"  [{f['severity']}] {name} rid={f['rid']} "
+                       f"t={f['t']:.3f}s: {f['detail']}")
+    if not any_sig:
+        out.append("  none matched")
+    wd = rep["watchdog"]
+    out.append(f"\n== invariant replay ==")
+    out.append(f"  {'ok' if wd['ok'] else 'VIOLATIONS'}: "
+               f"{wd['entries_checked']} entries checked, "
+               f"{wd['n_violations']} violation(s)")
+    for v in wd["violations"][:10]:
+        out.append(f"  [{v['invariant']}] t={v['t']:.3f}s rid={v['rid']} "
+                   f"node={v['node']} at {v['kind']}: {v['detail']}")
+    return "\n".join(out)
+
+
+# -- demo mode ---------------------------------------------------------------
+
+
+def _demo_entries(name: str, seed: int) -> list[dict]:
+    if name == "chaos":
+        from repro.workload.experiment import run_spinnaker_chaos
+        r = run_spinnaker_chaos(seed=seed, duration=10.0,
+                                export_journal=True)
+        return ProtocolJournal.load_jsonl(r["journal_jsonl"])
+    from repro.chaos.mutations import MUTATIONS, run_mutation
+    if name not in MUTATIONS:
+        raise SystemExit(f"unknown demo '{name}' (choose from chaos, "
+                         f"{', '.join(MUTATIONS)})")
+    r = run_mutation(name, mutated=True, seed=seed, export_journal=True)
+    return ProtocolJournal.load_jsonl(r["journal_jsonl"])
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("dump", nargs="?", help="journal JSONL dump to explain")
+    ap.add_argument("--rid", type=int, default=None,
+                    help="restrict the narrative to one range")
+    ap.add_argument("--stall", nargs=2, type=float, metavar=("T_LO", "T_HI"),
+                    help="explain a write-stall window [T_LO, T_HI] (sim s)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the structured report instead of prose")
+    ap.add_argument("--demo", default=None,
+                    help="run a scenario in-process and explain its journal:"
+                         " chaos | takeover_wedge | catchup_starvation |"
+                         " ack_before_force")
+    ap.add_argument("--seed", type=int, default=0, help="demo seed")
+    ap.add_argument("--out", default=None,
+                    help="also write the (demo) journal dump here")
+    args = ap.parse_args(argv)
+
+    if args.demo:
+        entries = _demo_entries(args.demo, args.seed)
+        if args.out:
+            Path(args.out).write_text(
+                "\n".join(json.dumps(e) for e in entries) + "\n")
+            print(f"journal dump written to {args.out}")
+    elif args.dump:
+        entries = load_entries(args.dump)
+    else:
+        ap.error("need a DUMP file or --demo")
+        return 2
+
+    if args.json:
+        print(json.dumps(analyze(entries), indent=2, default=str))
+    else:
+        print(narrate(entries, rid=args.rid,
+                      stall=tuple(args.stall) if args.stall else None))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

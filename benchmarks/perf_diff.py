@@ -17,7 +17,14 @@ candidate regresses beyond per-metric tolerances:
 - profile section: spinnaker `cpu_share_by_component` may shift at most
   --tol-share percentage points (default 10) per component, and
   `profile.write_p50_ratio` — the paper's §1 write-gap headline — is the
-  ratchet proper: it may grow at most --tol-claim.
+  ratchet proper: it may grow at most --tol-claim;
+- chaos section: the minority-partitioned-leader failover time may grow
+  at most --tol-failover seconds (absolute, default 0.5) and must stay
+  within the candidate's own `lease + election` bound; the lease-read
+  p50 ratio may slip at most --tol-claim;
+- txn section: the 2PC cross/local commit-latency ratio may grow at
+  most --tol-txn (default +10%) and the coordinator-kill abort rate at
+  most --tol-abort (default +0.05 absolute).
 
 A section present in only one file is skipped with a note (comparing the
 committed full artifact against a fresh `--scenario profile` run gates
@@ -135,6 +142,66 @@ def diff_saturation(d: Diff, base: dict, cand: dict, tol: float) -> None:
                 bk, ck, "down", tol)
 
 
+def diff_chaos(d: Diff, base: dict, cand: dict, tol_failover_s: float,
+               tol_claim: float) -> None:
+    """Failover-time ratchet: the minority-partitioned-leader failover
+    must stay within the committed bound and may not creep up by more
+    than an absolute tolerance; the lease-read advantage may not slip."""
+    b = base.get("chaos", {}).get("check")
+    c = cand.get("chaos", {}).get("check")
+    if not b or not c:
+        d.skip("chaos section missing on one side")
+        return
+    bf, cf = b.get("failover_s_with_lease"), c.get("failover_s_with_lease")
+    if bf is None or cf is None:
+        d.skip("chaos failover time missing on one side")
+    else:
+        d.check("chaos.failover_s_with_lease", bf, cf, "up",
+                tol_failover_s, absolute=True)
+        # the hard bound travels with the candidate's own lease config
+        bound = c.get("failover_bound_s")
+        if bound is not None:
+            d.compared += 1
+            line = (f"chaos.failover_within_bound: {cf:.4f}s "
+                    f"(bound {bound:.4f}s)")
+            if cf > bound:
+                d.failures.append(line)
+                print(f"  FAIL {line}")
+            else:
+                print(f"  ok   {line}")
+    if b.get("lease_read_ratio") is None or c.get("lease_read_ratio") is None:
+        d.skip("chaos lease_read_ratio missing on one side")
+    else:
+        d.check("chaos.lease_read_ratio", b["lease_read_ratio"],
+                c["lease_read_ratio"], "up", tol_claim)
+
+
+def diff_txn(d: Diff, base: dict, cand: dict, tol_ratio: float,
+             tol_abort_pp: float) -> None:
+    """Transaction ratchet: the cross/local commit-latency ratio (the
+    2PC overhead headline) and the coordinator-kill abort rate may not
+    regress beyond tolerance."""
+    b = base.get("txn")
+    c = cand.get("txn")
+    if not b or not c:
+        d.skip("txn section missing on one side")
+        return
+    br = b.get("cross_local_p50_ratio")
+    cr = c.get("cross_local_p50_ratio")
+    if br is None or cr is None:
+        d.skip("txn cross/local ratio missing on one side")
+    else:
+        d.check("txn.cross_local_p50_ratio", br, cr, "up", tol_ratio)
+    try:
+        ba = b["kill"]["txn"]["txn_abort_rate"]
+        ca = c["kill"]["txn"]["txn_abort_rate"]
+    except (KeyError, TypeError):
+        d.skip("txn kill-run abort rate missing on one side")
+        return
+    d.check("txn.kill_abort_rate", ba, ca, "up", tol_abort_pp,
+            absolute=True)
+
+
 def diff_profile(d: Diff, base: dict, cand: dict, tol_share: float,
                  tol_claim: float) -> None:
     b = base.get("profile")
@@ -176,6 +243,15 @@ def main(argv=None) -> int:
                     help="max relative drop of a saturation knee")
     ap.add_argument("--tol-share", type=float, default=10.0,
                     help="max utilization-share shift, percentage points")
+    ap.add_argument("--tol-failover", type=float, default=0.5,
+                    help="max absolute growth of the lease failover "
+                         "time, seconds")
+    ap.add_argument("--tol-txn", type=float, default=0.10,
+                    help="max relative growth of the 2PC cross/local "
+                         "latency ratio")
+    ap.add_argument("--tol-abort", type=float, default=0.05,
+                    help="max absolute growth of the coordinator-kill "
+                         "txn abort rate")
     args = ap.parse_args(argv)
 
     recs = []
@@ -194,6 +270,8 @@ def main(argv=None) -> int:
     diff_claims(d, base, cand, args.tol_claim)
     diff_saturation(d, base, cand, args.tol_knee)
     diff_profile(d, base, cand, args.tol_share, args.tol_claim)
+    diff_chaos(d, base, cand, args.tol_failover, args.tol_claim)
+    diff_txn(d, base, cand, args.tol_txn, args.tol_abort)
 
     if d.compared == 0:
         print("perf_diff: FAIL — no comparable sections found")

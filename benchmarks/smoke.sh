@@ -12,7 +12,12 @@
 # seeded gray-failure schedules with linearizability / availability /
 # lost-write / trace audits all clean, plus the minority-partitioned-
 # leader pair: lease-bounded failover vs stall-until-heal) with a schema
-# check of the committed "chaos" block, a profile gate (the component-
+# check of the committed "chaos" block, a watchdog gate (the consensus-
+# invariant watchdog must stay silent on seeded chaos schedules, detect
+# every mutation-corpus bug at the violating transition with silent
+# fixed-protocol controls, and journaling must be bit-identical to a
+# journal-off run) with a schema check of the committed "watchdog"
+# block, a profile gate (the component-
 # attributed resource profiler must account for the measured busy time
 # within 5% and be bit-identical to an unprofiled run) with a schema
 # check of the committed "profile" block, the perf_diff.py ratchet (a
@@ -206,6 +211,44 @@ print(f"ok: committed chaos block well-formed — {len(ch['runs'])} seeded "
       f"schedules all green, failover {ck['failover_s_with_lease']}s <= "
       f"{ck['failover_bound_s']}s, lease-read ratio "
       f"{ck['lease_read_ratio']:.2f}")
+EOF
+
+echo "== watchdog gate: invariant silence + mutation corpus + bit-identity =="
+python benchmarks/spinnaker_bench.py --scenario watchdog --quick \
+    --out /tmp/BENCH_watchdog_fresh.json
+
+echo "== watchdog schema check vs committed BENCH_spinnaker.json =="
+python - <<'EOF'
+import json, pathlib
+p = pathlib.Path("BENCH_spinnaker.json")
+if not p.exists():
+    print("skip: no committed BENCH_spinnaker.json")
+    raise SystemExit(0)
+wd = json.loads(p.read_text()).get("watchdog")
+assert wd, "committed BENCH_spinnaker.json lacks a 'watchdog' block"
+for key in ("silence", "corpus", "bit_identity", "check"):
+    assert key in wd, key
+# zero false positives across every committed seeded schedule
+assert len(wd["silence"]) >= 8, len(wd["silence"])
+for s in wd["silence"]:
+    assert s["ok"] and s["n_violations"] == 0, s
+    assert s["entries_checked"] > 10_000, s
+# every mutation-corpus bug detected at the violating transition, with
+# the fixed control arm silent
+muts = wd["corpus"]["mutations"]
+assert len(muts) >= 3, list(muts)
+for name, m in muts.items():
+    assert m["detected"], name
+    assert m["detected_at"] is not None, name
+    assert m["control_silent"], name
+assert wd["bit_identity"]["ok"], wd["bit_identity"]
+ck = wd["check"]
+assert ck["ok"], ck
+print(f"ok: committed watchdog block well-formed — "
+      f"{len(wd['silence'])} schedules silent "
+      f"({ck['entries_checked']} entries, 0 false positives), "
+      f"{len(muts)} mutations detected with silent controls, "
+      f"bit_identical={ck['bit_identical']}")
 EOF
 
 echo "== profile gate: component attribution + bit-identity =="

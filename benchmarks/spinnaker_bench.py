@@ -477,6 +477,99 @@ def check_chaos(r: dict) -> dict:
     return out
 
 
+def run_watchdog(quick: bool) -> dict:
+    """--scenario watchdog (PR 9): the consensus-invariant watchdog gate.
+
+    Three legs: (1) zero false positives — the watchdog must stay silent
+    across the seeded gray-failure chaos schedules; (2) the mutation
+    corpus — each known-fixed protocol bug re-introduced behind its
+    test-only switch must be pinpointed at the violating transition,
+    with the fixed control run silent; (3) bit-identity — a journaled +
+    watchdog-monitored run must be op-for-op identical to one with the
+    flight recorder off (observability is pure measurement)."""
+    from repro.chaos.mutations import run_corpus
+
+    seeds = range(2 if quick else CHAOS_SEEDS)
+    duration = 8.0 if quick else 12.0
+    silence = []
+    for seed in seeds:
+        print(f"watchdog: chaos schedule seed={seed} ...", flush=True)
+        r = run_spinnaker_chaos(seed=seed, duration=duration)
+        wd = r["watchdog"]
+        print(f"  {'silent' if wd['ok'] else 'VIOLATIONS'}: "
+              f"{wd['entries_checked']} journal entries checked, "
+              f"{wd['n_violations']} violation(s)", flush=True)
+        silence.append({"seed": seed, "ok": wd["ok"],
+                        "entries_checked": wd["entries_checked"],
+                        "n_violations": wd["n_violations"],
+                        "by_invariant": wd["by_invariant"],
+                        "violations": wd["violations"][:5]})
+
+    print("watchdog: mutation corpus (3 known-fixed bugs, both arms) ...",
+          flush=True)
+    corpus = run_corpus()
+    for name, m in corpus["mutations"].items():
+        at = m["detected_at"]
+        print(f"  {name}: detected={m['detected']}"
+              + (f" at {at['kind']} t={at['t']:.3f}s" if at else "")
+              + f", control_silent={m['control_silent']}", flush=True)
+
+    print("watchdog: bit-identity, journaled vs un-journaled ...", flush=True)
+    spec = WorkloadSpec(num_keys=500, key_dist="zipfian", zipf_theta=0.99,
+                        read_frac=0.5, write_frac=0.5, rmw_frac=0.0,
+                        cond_frac=0.0, value_size=1024)
+    cfg = ExperimentConfig(n_nodes=5, disk="ssd", seed=11, n_clients=8,
+                           warmup=0.5, duration=3.0, preload_cap=300)
+    on = run_spinnaker_workload(spec, cfg, consistent_reads=True)
+    cfg_off = dataclasses.replace(cfg, journal=False)
+    off = run_spinnaker_workload(spec, cfg_off, consistent_reads=True)
+    bit_identical = bool(
+        on["total_ops"] == off["total_ops"]
+        and on["writes"]["count"] == off["writes"]["count"]
+        and on["reads"]["count"] == off["reads"]["count"]
+        and on["writes"]["p50_ms"] == off["writes"]["p50_ms"]
+        and on["writes"]["p99_ms"] == off["writes"]["p99_ms"]
+        and on["reads"]["p50_ms"] == off["reads"]["p50_ms"]
+        and on["reads"]["p99_ms"] == off["reads"]["p99_ms"])
+    print(f"  bit_identical={bit_identical} "
+          f"({on['total_ops']} ops each way)", flush=True)
+
+    out = {"silence": silence, "corpus": corpus,
+           "bit_identity": {"ok": bit_identical,
+                            "total_ops": on["total_ops"],
+                            "write_p50_ms": on["writes"]["p50_ms"],
+                            "read_p50_ms": on["reads"]["p50_ms"]}}
+    out["check"] = check_watchdog(out)
+    print(f"  {out['check']}", flush=True)
+    return out
+
+
+def check_watchdog(r: dict) -> dict:
+    """Acceptance surface: every chaos schedule watchdog-silent with a
+    non-trivial number of entries checked, every mutation detected at
+    the expected transition with its control arm silent, and the
+    journaled run bit-identical to the un-journaled one."""
+    silence = r["silence"]
+    corpus = r["corpus"]["mutations"]
+    out = {
+        "n_schedules": len(silence),
+        "all_silent": all(s["ok"] for s in silence),
+        "entries_checked": sum(s["entries_checked"] for s in silence),
+        "false_positives": sum(s["n_violations"] for s in silence),
+        "mutations_detected": {n: m["detected"] for n, m in corpus.items()},
+        "controls_silent": {n: m["control_silent"]
+                            for n, m in corpus.items()},
+        "bit_identical": r["bit_identity"]["ok"],
+    }
+    out["ok"] = bool(out["all_silent"]
+                     and out["entries_checked"] > 10_000
+                     and all(out["mutations_detected"].values())
+                     and all(out["controls_silent"].values())
+                     and len(corpus) >= 3
+                     and out["bit_identical"])
+    return out
+
+
 def breakdown_spec(quick: bool) -> WorkloadSpec:
     """Plain read/write mix — no rmw/cond legs, so the 'write' trace
     population is exactly the strong-write path the report decomposes."""
@@ -684,9 +777,40 @@ def check_profile(r: dict) -> dict:
     return out
 
 
+def _print_trace_journal(t: dict) -> None:
+    """One indented line per notable protocol-journal entry implicated
+    in a slow trace's lifetime (regime changes, catch-up, crashes)."""
+    jw = t.get("journal")
+    if not jw:
+        return
+    for e in jw.get("notable", []):
+        extra = e.get("why") or e.get("winner")
+        print(f"      journal rid={t.get('rid')}: t={e['t']:.3f}s "
+              f"{e['kind']} node={e['node']}"
+              + (f" ({extra})" if extra is not None else ""))
+
+
+def _print_txn_chains(chains: list[dict]) -> None:
+    """Slowest 2PC transactions, keyed by txid, with their milestone
+    chains and the txid's own journal entries."""
+    for c in chains:
+        print(f"  {c['txid']}: {c['outcome']} e2e={c['e2e_ms']:.3f}ms "
+              f"coord=r{c['coordinator']} participants="
+              f"{c['participants']}")
+        print(f"      prepare_sent={c['prepare_sent_ms']} "
+              f"vote={c['vote_ms']} decide={c['decide_ms']}ms "
+              f"resolve={c['resolve_ms']} ack={c['client_ack_ms']}ms")
+        for e in c.get("journal", [])[:12]:
+            print(f"      journal: t={e['t']:.3f}s {e['kind']} "
+                  f"node={e['node']} rid={e.get('rid')}"
+                  + (f" {e.get('outcome')}" if e.get("outcome") else ""))
+
+
 def print_report(path: str) -> int:
     """--report: pretty-print the committed breakdown block — per-stage
-    write-p50 decomposition for both systems plus the ten slowest traces."""
+    write-p50 decomposition for both systems, the ten slowest traces
+    with their implicated journal windows, the slowest txid-keyed 2PC
+    chains, and the watchdog gate summary."""
     p = Path(path)
     if not p.exists():
         print(f"report: {path} not found")
@@ -694,9 +818,11 @@ def print_report(path: str) -> int:
     rec = json.loads(p.read_text())
     bd = rec.get("breakdown")
     prof = rec.get("profile")
-    if not bd and not prof:
-        print(f"report: no 'breakdown' or 'profile' block in {path}; run "
-              "--scenario breakdown / --scenario profile first")
+    txn = rec.get("txn")
+    wd = rec.get("watchdog")
+    if not bd and not prof and not txn and not wd:
+        print(f"report: no 'breakdown' / 'profile' / 'txn' / 'watchdog' "
+              f"block in {path}; run the matching --scenario first")
         return 1
     if bd:
         for name in ("spinnaker", "cassandra"):
@@ -715,6 +841,7 @@ def print_report(path: str) -> int:
             print(f"  {t['trace_id']:<10} key={t['key']} node={t['node']} "
                   f"attempts={t['attempts']} e2e={t['e2e_ms']:.3f}ms "
                   f"dominant={worst} ({stages.get(worst, 0.0):.3f}ms)")
+            _print_trace_journal(t)
         ck = bd.get("check", {})
         if ck:
             print(f"\ncheck: {'ok' if ck.get('ok') else 'FAIL'} "
@@ -736,6 +863,31 @@ def print_report(path: str) -> int:
                   f"{ck['max_attribution_rel_err']:.4f}, bit_identical="
                   f"{ck['bit_identical']}, write p50 ratio "
                   f"{ck['write_p50_ratio']:.2f})")
+    if txn:
+        chains = (txn.get("kill", {}).get("txn", {})
+                  .get("slow_txn_chains")
+                  or txn.get("cross", {}).get("txn", {})
+                  .get("slow_txn_chains"))
+        if chains:
+            print("\n== slowest 2PC transactions (txid-keyed chains, "
+                  "ms from txn start) ==")
+            _print_txn_chains(chains)
+    if wd:
+        ck = wd.get("check", {})
+        print("\n== invariant watchdog ==")
+        print(f"  {'ok' if ck.get('ok') else 'FAIL'}: "
+              f"{ck.get('n_schedules')} chaos schedules "
+              f"(all_silent={ck.get('all_silent')}, "
+              f"{ck.get('entries_checked')} journal entries checked, "
+              f"{ck.get('false_positives')} false positives); "
+              f"bit_identical={ck.get('bit_identical')}")
+        for name, det in (ck.get("mutations_detected") or {}).items():
+            at = next((m.get("detected_at") for n, m in
+                       wd.get("corpus", {}).get("mutations", {}).items()
+                       if n == name), None)
+            print(f"  mutation {name}: detected={det}"
+                  + (f" at {at['kind']} t={at['t']:.3f}s "
+                     f"[{at['invariant']}]" if at else ""))
     return 0
 
 
@@ -792,7 +944,8 @@ def main(argv=None) -> int:
     ap.add_argument("--scenario", default="all",
                     choices=["fig8", "fig9", "fig10", "saturation",
                              "rebalance", "txn", "breakdown", "profile",
-                             "chaos", "figs8-10", "all", "regress"])
+                             "chaos", "watchdog", "figs8-10", "all",
+                             "regress"])
     ap.add_argument("--quick", action="store_true",
                     help="short runs (CI / smoke mode)")
     ap.add_argument("--out", default="BENCH_spinnaker.json")
@@ -836,8 +989,20 @@ def main(argv=None) -> int:
         rec["chaos"] = run_chaos(args.quick)
         rec["chaos"]["check"] = check_chaos(rec["chaos"])
         print(f"  {rec['chaos']['check']}", flush=True)
+    if args.scenario in ("watchdog", "all"):
+        rec["watchdog"] = run_watchdog(args.quick)
 
-    Path(args.out).write_text(json.dumps(rec, indent=2))
+    # merge into an existing artifact instead of clobbering it: a single-
+    # scenario run refreshes its own section and leaves the rest intact
+    out_path = Path(args.out)
+    if args.scenario != "all" and out_path.exists():
+        try:
+            merged = json.loads(out_path.read_text())
+        except json.JSONDecodeError:
+            merged = {}
+        merged.update(rec)
+        rec = merged
+    out_path.write_text(json.dumps(rec, indent=2))
     print(f"wrote {args.out}")
     for c in rec.get("claims", []):
         print("claim:", c)
@@ -873,6 +1038,10 @@ def main(argv=None) -> int:
     if "chaos" in rec and not rec["chaos"]["check"]["ok"]:
         print("FAIL: chaos gate "
               f"{rec['chaos']['check']}")
+        rc = 1
+    if "watchdog" in rec and not rec["watchdog"]["check"]["ok"]:
+        print("FAIL: invariant-watchdog gate "
+              f"{rec['watchdog']['check']}")
         rc = 1
     return rc
 

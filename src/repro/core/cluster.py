@@ -194,11 +194,14 @@ class SpinnakerCluster:
                    expire_session: bool = True) -> None:
         self.obs.events.emit("node_crash", node=node_id,
                              lose_disk=lose_disk)
+        self.obs.journal.record("node_crash", node=node_id,
+                                lose_disk=lose_disk)
         self.nodes[node_id].crash(lose_disk=lose_disk,
                                   expire_session=expire_session)
 
     def restart_node(self, node_id: int) -> None:
         self.obs.events.emit("node_restart", node=node_id)
+        self.obs.journal.record("node_restart", node=node_id)
         self.nodes[node_id].restart()
 
     def partition(self, *groups) -> None:
@@ -238,6 +241,10 @@ class SpinnakerCluster:
         """Expire the node's ZK session while it keeps running; the client
         library reconnects after `outage` seconds."""
         self.obs.events.emit("session_flap", node=node_id, outage=outage)
+        # a flapped node's ephemerals (leader claims, candidacies) vanish
+        # with the session: any lease it believed in is protocol-moot, so
+        # tell the watchdog not to hold it against a successor
+        self.obs.journal.record("session_flap", node=node_id, outage=outage)
         self.nodes[node_id].flap_session(outage)
 
     def heal(self) -> None:

@@ -117,9 +117,13 @@ class SpinnakerNode:
         self.cpu = FifoServer(self.sim, name=f"cpu{node_id}")
         self.disk = Disk(self.sim, cfg.disk, name=f"log{node_id}")
         self.wal = WAL(self.sim, self.disk, segment_bytes=cfg.wal_segment_bytes)
-        self.wal.on_gc_event = (
-            lambda kind, rid, lsn: cluster.obs.events.emit(
-                kind, node=node_id, rid=rid, lsn=lsn))
+        def gc_event(kind, rid, lsn):
+            # kind ∈ {gc_floor_pin, gc_floor_release}: surfaced in both the
+            # cluster event log and the protocol journal (the watchdog's
+            # gc_floor_safe invariant reads the journal side)
+            cluster.obs.events.emit(kind, node=node_id, rid=rid, lsn=lsn)
+            cluster.obs.journal.record(kind, node=node_id, rid=rid, lsn=lsn)
+        self.wal.on_gc_event = gc_event
         self.replicas: dict[int, CohortReplica] = {}
         self.session: Optional[int] = None
         self._hb_timer = None
@@ -155,6 +159,10 @@ class SpinnakerNode:
         if rep is None:
             return
         rep.stop()
+        # the watchdog drops its per-(node, range) expectations here — a
+        # later re-add starts this replica's watermarks from scratch
+        self.cluster.obs.journal.record("replica_retired", node=self.node_id,
+                                        rid=rid)
         for name, (data, _cz) in list(
                 self.zk.get_children(f"/ranges/{rid}/candidates").items()):
             if data[0] == self.node_id:

@@ -48,6 +48,7 @@ from .txn import TxnManager
 from .types import (CommitMarker, ErrorCode, KeyRange, LogRecord, OpType,
                     Result, TXN_OPS, WriteOp, fmt_lsn, lsn_epoch, lsn_seq,
                     make_lsn)
+from ..obs.journal import record_digest
 
 if TYPE_CHECKING:
     from .node import SpinnakerNode
@@ -96,6 +97,18 @@ class ReplicaConfig:
     lease_enabled: bool = True
     lease_duration: float = 1.0
     max_clock_skew: float = 0.05
+    # -- mutation corpus (test-only switches; never enable in production
+    # configs).  Each one deliberately reintroduces a known-fixed protocol
+    # bug so the invariant watchdog (obs/watchdog.py) can be validated to
+    # pinpoint it at the violating transition — see chaos/mutations.py.
+    bug_catchup_starvation: bool = False   # pace catch-up retries off the
+                                           # lease-heartbeat clock again
+    bug_takeover_wedge: bool = False       # skip the WAL reload of the
+                                           # unresolved window at takeover
+    bug_ack_before_force: bool = False     # follower acks a proposal at
+                                           # receive time, before its force
+    drop_first_catchup: bool = False       # fault hook: swallow the first
+                                           # catch-up data delivery
 
 
 class CohortReplica:
@@ -211,6 +224,13 @@ class CohortReplica:
         prof = self.obs.profiler
         if prof.enabled:
             prof.range_op(self.rid, nbytes)
+
+    def _jrec(self, kind: str, **fields) -> None:
+        """Record a protocol transition in the flight-recorder journal
+        (obs/journal.py) — pure measurement, zero modeled cost."""
+        jr = self.obs.journal
+        if jr.enabled:
+            jr.record(kind, node=self.node.node_id, rid=self.rid, **fields)
 
     # ============================================================== lifecycle
     def start(self) -> None:
@@ -359,6 +379,8 @@ class CohortReplica:
                        data=(self.node.node_id, self.lst, self._election_round),
                        ephemeral_session=self.node.session,
                        sequential=True)
+        self._jrec("elect_start", epoch=self.epoch,
+                   round=self._election_round, lst=self.lst)
         self._evaluate_election()
 
     def _evaluate_election(self, _path: str = "") -> None:
@@ -400,6 +422,13 @@ class CohortReplica:
                 if leader_id != self.node.node_id:
                     self._become_joining_follower(leader_id, epoch)
                 return
+            self._jrec("elect_decide", epoch=new_epoch,
+                       round=self._election_round,
+                       candidates=sorted(d[0] for d in cands.values()),
+                       winner=winner_node,
+                       winner_lst=cands[winner_name][1],
+                       max_lst=max(d[1] for d in cands.values()),
+                       n_cohort=len(self.peers) + 1)
             self._start_takeover(new_epoch)
         else:
             # line 11 + liveness: watch for the winner's claim, and for
@@ -444,7 +473,7 @@ class CohortReplica:
         # dropped the volatile tail (an aborted join under a leader that
         # never sent catch-up data, e.g. one-way-partitioned away): the
         # durable, never-truncated copies are still ours to re-commit
-        if self.lst > self.cmt \
+        if not self.cfg.bug_takeover_wedge and self.lst > self.cmt \
                 and not all(l in self.queue
                             for l in range(self.cmt + 1, self.lst + 1)):
             for rec in (self.node.wal.records_between(
@@ -486,6 +515,18 @@ class CohortReplica:
         self.obs.events.emit("leader_takeover", node=self.node.node_id,
                              rid=self.rid, epoch=new_epoch,
                              unresolved=len(self.queue))
+        if self.obs.journal.enabled:
+            # `missing` = durable, never-truncated records of the unresolved
+            # window that takeover did NOT reload into its re-proposal queue
+            # — always 0 for a correct takeover; the watchdog flags any gap
+            # (the PR 6 takeover-wedge shape) at this very transition
+            durable = self.node.wal.range_lsns_between(
+                self.rid, self.cmt, self.lst) or []
+            self._jrec("takeover", epoch=new_epoch, cmt=self.cmt,
+                       lst=self.lst,
+                       unresolved=sum(1 for l in self.queue if l > self.cmt),
+                       missing=sum(1 for l in durable if l not in self.queue),
+                       n_cohort=len(self.peers) + 1)
         # `forced_upto = lst` above re-establishes local durability for the
         # whole queue; traces carried across the regime change would
         # otherwise never see their flush/force milestones again
@@ -510,6 +551,8 @@ class CohortReplica:
         # data-partitioned never hears an ack and abdicates instead of
         # squatting on the range
         self._lease_until = self.node.sim.now + self.cfg.lease_duration
+        self._jrec("lease_acquire", epoch=new_epoch,
+                   until=self._lease_until, grace=True)
         self._lease_sent.clear()
         self._lease_acks.clear()
         self._arm_lease_timer()
@@ -551,6 +594,7 @@ class CohortReplica:
         self.role = Role.CATCHUP
         self._leader_seen = self.node.sim.now
         self._catchup_seen = self.node.sim.now
+        self._jrec("catchup_enter", epoch=epoch, leader=leader_id)
         self._drop_uncommitted_tail()
         self._watch_leader_liveness()
         self._send(leader_id, "on_follower_state", epoch=epoch,
@@ -626,8 +670,18 @@ class CohortReplica:
         if self.node.sim.now > self._lease_until:
             why = ("lease lapsed" if self.role is Role.LEADER
                    else "takeover timed out (no data-net quorum)")
+            self.obs.events.emit("lease_lapse", node=self.node.node_id,
+                                 rid=self.rid, epoch=self.epoch, why=why)
+            self._jrec("lease_lapse", epoch=self.epoch, why=why)
             self._abdicate(why, suppress=True)
             return
+        prev = self._lease_acks.get(self._lease_seq)
+        if prev is not None and len(prev) < self._majority() - 1:
+            # the previous renewal round never reached a majority — the
+            # lease is burning down; surface it in the cluster event log
+            self.obs.events.emit("lease_renew_fail", node=self.node.node_id,
+                                 rid=self.rid, epoch=self.epoch,
+                                 seq=self._lease_seq, acks=len(prev))
         self._renew_lease()
         self._arm_lease_timer()
 
@@ -636,14 +690,17 @@ class CohortReplica:
             return
         if self._majority() - 1 == 0:
             # single-replica cohort: no follower promises needed
-            self._lease_until = max(
-                self._lease_until, self.node.sim.now
-                + self.cfg.lease_duration - self.cfg.max_clock_skew)
+            new_until = (self.node.sim.now
+                         + self.cfg.lease_duration - self.cfg.max_clock_skew)
+            if new_until > self._lease_until:
+                self._lease_until = new_until
+                self._jrec("lease_acquire", epoch=self.epoch, until=new_until)
             return
         self._lease_seq += 1
         seq = self._lease_seq
         self._lease_sent[seq] = self.node.sim.now
         self._lease_acks[seq] = set()
+        self._jrec("lease_renew", epoch=self.epoch, seq=seq)
         # prune stale rounds (acks for them could no longer extend anything)
         for old in [s for s in self._lease_sent if s < seq - 8]:
             self._lease_sent.pop(old, None)
@@ -659,6 +716,11 @@ class CohortReplica:
                 or epoch != self.epoch:
             return
         self._leader_seen = self.node.sim.now
+        if self.role is Role.CATCHUP:
+            # CATCHUP beats feed the watchdog's starvation monitor: a
+            # replica kept alive by heartbeats but starved of catch-up data
+            self._jrec("lease_heard", epoch=epoch, role="CATCHUP",
+                       leader=leader)
         self._send(leader, "on_lease_ack", nbytes=96, epoch=epoch, seq=seq,
                    follower=self.node.node_id)
 
@@ -678,7 +740,20 @@ class CohortReplica:
             # from a clock that saw the renewal AFTER it was sent
             new_until = sent + self.cfg.lease_duration \
                 - self.cfg.max_clock_skew
-            self._lease_until = max(self._lease_until, new_until)
+            if new_until > self._lease_until:
+                self._lease_until = new_until
+                self._jrec("lease_acquire", epoch=epoch, until=new_until)
+                if self._lease_event_epoch != epoch:
+                    # event-log satellite: one lease_acquire event per
+                    # regime (renewals extend silently; the journal keeps
+                    # the per-renewal record)
+                    self._lease_event_epoch = epoch
+                    self.obs.events.emit(
+                        "lease_acquire", node=self.node.node_id,
+                        rid=self.rid, epoch=epoch,
+                        until=round(new_until, 6))
+
+    _lease_event_epoch = -1
 
     def _abdicate(self, why: str, suppress: bool) -> None:
         """Fence ourselves out of the leader regime: drop the leader znode
@@ -692,6 +767,7 @@ class CohortReplica:
         self.log(f"abdicating: {why}")
         self.obs.events.emit("leader_abdicate", node=self.node.node_id,
                              rid=self.rid, epoch=self.epoch, why=why)
+        self._jrec("abdicate", epoch=self.epoch, why=why)
         self._minc("leader_abdications")
         leader_path = f"{self.base}/leader"
         try:
@@ -756,12 +832,19 @@ class CohortReplica:
             return
         stale = self.node.sim.now - self._leader_seen
         leader_path = f"{self.base}/leader"
+        # bug_catchup_starvation (mutation corpus): the original PR 6 bug
+        # paced catch-up retries off `_leader_seen`, which lease heartbeats
+        # keep perpetually fresh — so a CATCHUP replica whose data was lost
+        # never re-requested it and starved behind a live leader
+        catchup_clock = (self._leader_seen if self.cfg.bug_catchup_starvation
+                         else self._catchup_seen)
         if self.role is Role.CATCHUP \
-                and self.node.sim.now - self._catchup_seen > 0.6:
+                and self.node.sim.now - catchup_clock > 0.6:
             # the catch-up request or its data was lost (flaky link, leader
             # drop): restart the exchange — idempotent, the leader re-syncs
             # us from scratch
             self._catchup_seen = self.node.sim.now   # pace retries
+            self._jrec("catchup_retry", epoch=self.epoch)
             if self.leader_id is not None:
                 self._send(self.leader_id, "on_follower_state",
                            epoch=self.epoch, follower=self.node.node_id,
@@ -788,6 +871,7 @@ class CohortReplica:
                      f"(stale {stale:.2f}s > {self._depose_after():.2f}s)")
             self.obs.events.emit("leader_deposed", node=self.node.node_id,
                                  rid=self.rid, epoch=ep, leader=lid)
+            self._jrec("deposed", epoch=ep, leader=lid)
             self._minc("leader_deposals")
             try:
                 self.zk.delete(leader_path)
@@ -956,6 +1040,7 @@ class CohortReplica:
         self._next_seq = max(self._next_seq, lsn_seq(self.lst) + 1)
         self.obs.events.emit("leader_open", node=self.node.node_id,
                              rid=self.rid, epoch=self.epoch)
+        self._jrec("leader_open", epoch=self.epoch, lsn=self.cmt)
         self.log(f"open for writes (next lsn {self.epoch}.{self._next_seq})")
         # self-heal range metadata: a dead leader may have applied a range
         # op without publishing it (idempotent — no version churn when the
@@ -982,6 +1067,12 @@ class CohortReplica:
                         truncate_to: Optional[int]) -> None:
         if self.role not in (Role.CATCHUP, Role.FOLLOWER) or epoch != self.epoch:
             return
+        if self.cfg.drop_first_catchup and not self._dropped_catchup:
+            # test-only fault hook (chaos/mutations.py): pretend the first
+            # catch-up delivery was lost on the wire — the retry logic in
+            # _guard_tick must recover; bug_catchup_starvation defeats it
+            self._dropped_catchup = True
+            return
         self._leader_seen = self.node.sim.now
         self._catchup_seen = self.node.sim.now
         self._suppressed = False   # live data-path contact with the leader
@@ -1002,6 +1093,7 @@ class CohortReplica:
             if self.role == Role.OFFLINE or self.epoch != e0:
                 return
             self._apply_committed(commit_lsn)
+            self._jrec("catchup_exit", epoch=self.epoch, lsn=commit_lsn)
             if self.role == Role.CATCHUP:
                 self.role = Role.FOLLOWER
             self._send(self.leader_id, "on_catchup_synced",
@@ -1011,9 +1103,15 @@ class CohortReplica:
         if not fresh:
             complete()
             return
+        jr = self.obs.journal
         for i, rec in enumerate(fresh):
             self.queue[rec.lsn] = rec
             self.lst = max(self.lst, rec.lsn)
+            if jr.enabled:
+                jr.record("append", node=self.node.node_id, rid=self.rid,
+                          epoch=lsn_epoch(rec.lsn), lsn=rec.lsn,
+                          digest=record_digest(rec), op=rec.op.name,
+                          via="catchup")
             last = i == len(fresh) - 1
             self.node.wal.append(rec, force=last, cb=complete if last else None,
                                  component="catchup", rid=self.rid)
@@ -1119,6 +1217,11 @@ class CohortReplica:
         """Stage a record: WAL-buffered (rides along with the next force)
         and queued for the next multi-record propose."""
         self.node.wal.append(rec, force=False)
+        jr = self.obs.journal
+        if jr.enabled:
+            jr.record("append", node=self.node.node_id, rid=self.rid,
+                      epoch=lsn_epoch(rec.lsn), lsn=rec.lsn,
+                      digest=record_digest(rec), op=rec.op.name)
         self._batch.append(rec)
         self._batch_bytes += rec.nbytes()
 
@@ -1257,6 +1360,7 @@ class CohortReplica:
         if self.role not in (Role.LEADER, Role.TAKEOVER):
             return
         self.forced_upto = max(self.forced_upto, lsn)
+        self._jrec("flush", epoch=self.epoch, lsn=self.forced_upto)
         self._advance_commit()
 
     def on_propose(self, epoch: int, records: list[LogRecord],
@@ -1281,7 +1385,18 @@ class CohortReplica:
         if fresh:
             e0 = self.epoch
             tail = fresh[-1].lsn
+            if self.cfg.bug_ack_before_force:
+                # mutation corpus: claim durability the moment the batch
+                # arrives, before our WAL force completes — the ack the
+                # commit rule counts is a lie until the force lands
+                self._ack(tail)
+            jr = self.obs.journal
             for i, record in enumerate(fresh):
+                if jr.enabled:
+                    jr.record("append", node=self.node.node_id, rid=self.rid,
+                              epoch=lsn_epoch(record.lsn), lsn=record.lsn,
+                              digest=record_digest(record), op=record.op.name,
+                              via="propose")
                 last = i == len(fresh) - 1
                 self.node.wal.append(
                     record, force=last,
@@ -1295,6 +1410,7 @@ class CohortReplica:
             self._apply_committed(min(commit_lsn, self.lst))
 
     _follower_forced = 0
+    _dropped_catchup = False   # drop_first_catchup fault-hook latch
 
     def _on_follower_forced(self, lsn: int, epoch: int) -> None:
         """Durability callback, EPOCH-BOUND: a force that was in flight
@@ -1305,6 +1421,7 @@ class CohortReplica:
         if epoch != self.epoch:
             return
         self._follower_forced = max(self._follower_forced, lsn)
+        self._jrec("flush", epoch=self.epoch, lsn=self._follower_forced)
         # forces are FIFO and proposes arrive in LSN order, so the
         # watermark is the highest *contiguous* durable LSN: ack it once
         # for the whole batch instead of once per record
@@ -1314,6 +1431,7 @@ class CohortReplica:
         if self.role is not Role.FOLLOWER:
             return
         self.acks_sent += 1
+        self._jrec("ack", epoch=self.epoch, lsn=lsn)
         self._send(self.leader_id, "on_ack", epoch=self.epoch,
                    follower=self.node.node_id, lsn=lsn, nbytes=96)
 
@@ -1344,6 +1462,8 @@ class CohortReplica:
         new_cmt = min(self.forced_upto, best)
         if new_cmt <= self.cmt:
             return
+        self._jrec("commit", epoch=self.epoch, lsn=new_cmt,
+                   n_cohort=len(self.peers) + 1)
         self._apply_committed(new_cmt)
         self._after_quorum_progress()
 
@@ -1389,6 +1509,7 @@ class CohortReplica:
                 ver = rec.columns[0][2] if rec.columns else None
                 cb(Result(ErrorCode.OK, version=ver))
         self.cmt = upto
+        self._jrec("commit_idx", epoch=self.epoch, lsn=upto)
         flushed = self.store.maybe_flush(self.cmt)
         if flushed is not None:
             self.node.wal.note_flushed(self.rid, flushed)
@@ -1549,6 +1670,9 @@ class CohortReplica:
         self.obs.events.emit("split_applied", node=self.node.node_id,
                              rid=self.rid, child_rid=child_rid,
                              split_key=split_key)
+        self._jrec("split", epoch=lsn_epoch(rec.lsn), lsn=rec.lsn,
+                   child=child_rid, split_key=split_key,
+                   n_cohort=len(members))
         self.log(f"SPLIT applied at {split_key!r}: forked child r{child_rid}"
                  f" [{split_key!r}, {child_hi!r})")
         # registration is idempotent — the first applier wins, later
@@ -1568,12 +1692,17 @@ class CohortReplica:
         members = tuple(rec.columns[0][1])
         me = self.node.node_id
         self._pending_member_change = False
+        self._jrec("member_change", epoch=lsn_epoch(rec.lsn), lsn=rec.lsn,
+                   members=sorted(members))
         if me not in members:
             meta = ranges_mod.get_range_meta(self.zk, self.rid)
             if meta is not None and me in meta[2]:
                 # stale record replayed through catch-up, superseded by a
                 # later re-add: adopt the registered set instead
                 self.peers = tuple(sorted(m for m in meta[2] if m != me))
+                self._jrec("member_change", epoch=lsn_epoch(rec.lsn),
+                           lsn=rec.lsn, members=sorted(meta[2]),
+                           superseded=True)
                 return
             self.log(f"retired from cohort (members now {members})")
             if self.role in (Role.LEADER, Role.TAKEOVER):

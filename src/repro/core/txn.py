@@ -210,6 +210,8 @@ class TxnManager:
             rep.log(f"txn {name}: presumed abort (intent without decision)")
             rep.obs.events.emit("txn_presumed_abort", txid=name,
                                 rid=rep.rid, node=rep.node.node_id)
+            rep._jrec("txn_decide", epoch=rep.epoch, txid=name,
+                      outcome="abort", reason="presumed_abort")
             self.tracer.txn_mark(name, "abort")
             self.aborts += 1
             for rid in participants:
@@ -346,6 +348,8 @@ class TxnManager:
         staged = tuple((key, tuple(cols)) for key, cols in by_key.items())
         rec = rep.propose_record(OpType.TXN_PREPARE, txid,
                                  txn=(txid, coord_rid, staged))
+        rep._jrec("txn_prepare", epoch=rep.epoch, lsn=rec.lsn, txid=txid,
+                  coord=coord_rid)
         p = PreparedTxn(txid, coord_rid, rec, staged)
         self.prepared[txid] = p
         for k in p.keys:
@@ -369,6 +373,8 @@ class TxnManager:
             p.committed = True
             for k in p.keys:
                 self.locks[k] = txid
+            rep._jrec("txn_prepared", epoch=rep.epoch, lsn=rec.lsn,
+                      txid=txid)
             self._set_gc_floor()
             if leaderish and txid not in self.resolved \
                     and txid not in self.deciding:
@@ -388,6 +394,8 @@ class TxnManager:
         txid = rec.txn[0]
         commit = rec.op is OpType.TXN_COMMIT
         self.tracer.txn_mark(txid, "resolve", self.rep.rid)
+        self.rep._jrec("txn_resolve", epoch=self.rep.epoch, lsn=rec.lsn,
+                       txid=txid, outcome="commit" if commit else "abort")
         self.deciding.discard(txid)
         p = self.prepared.pop(txid, None)
         if p is not None:
@@ -447,6 +455,8 @@ class TxnManager:
         leader = self._leader_of(coord_rid)
         if leader is None:
             return      # re-vote tick (or prepare timeout) covers it
+        self.rep._jrec("txn_vote", epoch=self.rep.epoch, txid=txid,
+                       vote="yes" if ok else "no", reason=reason)
         self.rep.node.send(leader, coord_rid, "on_txn_vote",
                            nbytes=128 + 24 * len(versions), txid=txid,
                            prid=self.rep.rid, ok=ok,
@@ -521,6 +531,8 @@ class TxnManager:
                 self._send_decide(txid, prid, commit=dec[0] == "commit")
             elif not self._queued_decision(txid):
                 # unknown and undecided ⇒ it aborted (presumed abort)
+                rep._jrec("txn_decide", epoch=rep.epoch, txid=txid,
+                          outcome="abort", reason="presumed_abort")
                 self._send_decide(txid, prid, commit=False)
             return
         if inst.state != "preparing":
@@ -533,6 +545,8 @@ class TxnManager:
         if set(inst.votes) >= set(inst.groups):
             # all YES: log the decision — its commit IS the commit point
             inst.state = "deciding"
+            rep._jrec("txn_decide", epoch=rep.epoch, txid=txid,
+                      outcome="commit")
             # the decision record's force/commit milestones ARE the client
             # op's: the replica's batch instrumentation stamps
             # t_flush/t_forced/t_commit on the riding trace
@@ -549,6 +563,8 @@ class TxnManager:
         txid, outcome, participants = rec.txn
         self.decided[txid] = (outcome, participants)
         self._decision_rec[txid] = rec
+        rep._jrec("txn_decision", epoch=rep.epoch, lsn=rec.lsn, txid=txid,
+                  outcome=outcome)
         self.tracer.txn_mark(txid, outcome)
         if rep.role in (Role.LEADER, Role.TAKEOVER):
             # resend duty is leader-only: followers never receive acks, so
@@ -573,6 +589,8 @@ class TxnManager:
         participants, bounce the client with a retryable/terminal code."""
         self.active.pop(inst.txid, None)
         self.aborts += 1
+        self.rep._jrec("txn_decide", epoch=self.rep.epoch, txid=inst.txid,
+                       outcome="abort", reason=reason)
         self.tracer.txn_mark(inst.txid, "abort")
         for rid in sorted(inst.groups):
             self._send_decide(inst.txid, rid, commit=False)
@@ -671,8 +689,21 @@ class TxnManager:
             del self._decision_rec[txid]
         lsns = [p.record.lsn for p in self.prepared.values()]
         lsns += [r.lsn for r in self._decision_rec.values()]
-        self.rep.node.wal.set_gc_floor(self.rep.rid,
-                                       min(lsns) if lsns else None)
+        floor = min(lsns) if lsns else None
+        if floor != self._last_pin:
+            # journal every floor *move* — the WAL's own gc_floor_pin /
+            # gc_floor_release events fire only on the none<->some edges
+            rep = self.rep
+            if floor is None:
+                rep._jrec("txn_unpin", epoch=rep.epoch)
+            else:
+                rep._jrec("txn_pin", epoch=rep.epoch, lsn=floor,
+                          n_prepared=len(self.prepared),
+                          n_decisions=len(self._decision_rec))
+            self._last_pin = floor
+        self.rep.node.wal.set_gc_floor(self.rep.rid, floor)
+
+    _last_pin: Optional[int] = None
 
     def _prune_done(self) -> None:
         """Bound the per-transaction outcome maps.  `resolved` entries

@@ -11,15 +11,18 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from .events import EventLog
+from .journal import ProtocolJournal, record_digest
 from .metrics import MetricsRegistry
 from .profile import Profiler, format_profile_report
 from .trace import (OpTrace, Tracer, TxnTrace, stage_breakdown,
                     CASSANDRA_CHAIN, SPINNAKER_CHAIN)
+from .watchdog import InvariantWatchdog
 
 __all__ = [
     "ObsConfig", "Observability", "Tracer", "OpTrace", "TxnTrace",
     "EventLog", "MetricsRegistry", "Profiler", "format_profile_report",
-    "stage_breakdown",
+    "stage_breakdown", "ProtocolJournal", "InvariantWatchdog",
+    "record_digest",
     "SPINNAKER_CHAIN", "CASSANDRA_CHAIN", "install_node_gauges",
 ]
 
@@ -37,12 +40,18 @@ class ObsConfig:
     `profile` enables the component-attributed resource profiler (pure
     accounting — a profiled run is bit-identical to an unprofiled one);
     `profile_interval` > 0 additionally records a per-interval
-    utilization timeline (one timer, no RNG draws)."""
+    utilization timeline (one timer, no RNG draws).
+
+    `journal` enables the protocol flight recorder (obs/journal.py);
+    `watchdog` additionally runs the online invariant checker over it —
+    both pure measurement, bit-identical on/off."""
     enabled: bool = True
     trace_sample: float = 1.0
     metrics_interval: float = 0.0
     profile: bool = True
     profile_interval: float = 0.0
+    journal: bool = True
+    watchdog: bool = True
 
 
 class Observability:
@@ -56,6 +65,12 @@ class Observability:
         self.profiler = Profiler(sim, system,
                                  enabled=self.cfg.enabled and self.cfg.profile,
                                  interval=self.cfg.profile_interval)
+        self.journal = ProtocolJournal(
+            sim, enabled=self.cfg.enabled and self.cfg.journal)
+        self.watchdog = InvariantWatchdog(
+            self.journal,
+            enabled=self.cfg.enabled and self.cfg.journal
+            and self.cfg.watchdog)
 
     def start(self) -> None:
         if self.cfg.enabled and self.cfg.metrics_interval > 0:

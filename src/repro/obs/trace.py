@@ -308,6 +308,9 @@ def stage_breakdown(traces, kind: str = "write",
     slowest = [{
         "trace_id": t.trace_id, "key": t.key, "node": t.node,
         "attempts": t.attempts, "e2e_ms": t.e2e * 1e3,
+        # absolute sim-time bounds, so consumers can pull the implicated
+        # protocol-journal window for root-cause annotation
+        "t_issue": t.t_issue, "t_done": t.t_done,
         "stages_ms": {s: v * 1e3 for s, v in t.stages().items()},
     } for t in done[-top_n:]][::-1]
     return {

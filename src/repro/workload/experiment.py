@@ -67,6 +67,10 @@ class ExperimentConfig:
     # modeled cost); profile_interval > 0 records a utilization timeline
     profile: bool = True
     profile_interval: float = 0.0
+    # protocol flight recorder + invariant watchdog (pure measurement —
+    # a journaled run is bit-identical to an un-journaled one; the bench
+    # watchdog scenario gates exactly that)
+    journal: bool = True
 
 
 def build_spinnaker(cfg: ExperimentConfig, num_keys: Optional[int] = None):
@@ -87,7 +91,9 @@ def build_spinnaker(cfg: ExperimentConfig, num_keys: Optional[int] = None):
         obs=ObsConfig(trace_sample=cfg.trace_sample,
                       metrics_interval=cfg.metrics_interval,
                       profile=cfg.profile,
-                      profile_interval=cfg.profile_interval))
+                      profile_interval=cfg.profile_interval,
+                      journal=cfg.journal,
+                      watchdog=cfg.journal))
     if num_keys is not None:
         ccfg.num_keys = num_keys
     cluster = SpinnakerCluster(sim, ccfg)
@@ -394,6 +400,44 @@ def run_spinnaker_rebalance(spec: WorkloadSpec,
     return out
 
 
+def _slow_txn_chains(cluster, top_n: int = 5) -> list[dict]:
+    """Slowest decided 2PC transactions, keyed by txid: the milestone
+    chain (ms relative to t_start) plus the txid's own journal entries —
+    the `--report` drill-down for 'why was this transfer slow'."""
+    journal = cluster.obs.journal
+    ranked = []
+    for tr in cluster.obs.tracer.txns.values():
+        stamps = [s for s in ([tr.t_decided, tr.t_client_ack]
+                              + list(tr.prepare_sent.values())
+                              + list(tr.voted.values())
+                              + list(tr.resolved.values())) if s is not None]
+        if tr.outcome is None or not stamps:
+            continue
+        ranked.append((max(stamps) - tr.t_start, tr))
+    ranked.sort(key=lambda x: (-x[0], x[1].txid))
+    out = []
+    for e2e, tr in ranked[:top_n]:
+        def rel(t, _t0=tr.t_start):
+            return None if t is None else round((t - _t0) * 1e3, 3)
+        out.append({
+            "txid": tr.txid,
+            "coordinator": tr.coordinator,
+            "participants": list(tr.participants),
+            "outcome": tr.outcome,
+            "t_start": round(tr.t_start, 6),
+            "e2e_ms": round(e2e * 1e3, 3),
+            "prepare_sent_ms": {r: rel(t)
+                                for r, t in sorted(tr.prepare_sent.items())},
+            "vote_ms": {r: rel(t) for r, t in sorted(tr.voted.items())},
+            "decide_ms": rel(tr.t_decided),
+            "resolve_ms": {r: rel(t) for r, t in sorted(tr.resolved.items())},
+            "client_ack_ms": rel(tr.t_client_ack),
+            "journal": journal.txn_entries(tr.txid) if journal.enabled
+            else [],
+        })
+    return out
+
+
 def run_spinnaker_txn(spec: WorkloadSpec,
                       cfg: Optional[ExperimentConfig] = None,
                       cross_frac: Optional[float] = None,
@@ -505,6 +549,7 @@ def run_spinnaker_txn(spec: WorkloadSpec,
         # audited after the settle: every committed 2PC txn must show the
         # full prepare -> vote -> decide -> per-participant resolve chain
         "trace_audit": cluster.obs.tracer.audit_txns(),
+        "slow_txn_chains": _slow_txn_chains(cluster),
     }
     out["trace_audit"] = cluster.obs.tracer.audit_writes()
     if schedule is not None:
@@ -596,6 +641,15 @@ def _breakdown_block(cluster, log, cfg: ExperimentConfig,
     independently measured percentiles."""
     cluster.obs.stop()      # flush the tail scrape before summarizing
     bd = stage_breakdown(cluster.obs.tracer.traces, kind=write_kind)
+    # annotate each slowest trace with the implicated protocol-journal
+    # window (what the trace's range was going through while the op ran)
+    journal = getattr(cluster.obs, "journal", None)
+    if journal is not None and journal.enabled:
+        for t in bd.get("top_slowest", []):
+            rid = cluster.range_of(t["key"])
+            t["rid"] = rid
+            t["journal"] = journal.window_summary(t["t_issue"], t["t_done"],
+                                                  rid)
     w = log.summary(write_kind, duration=cfg.duration)
     bd["measured_write_p50_ms"] = w["p50_ms"]
     bd["measured_write_p99_ms"] = w["p99_ms"]
@@ -665,7 +719,8 @@ def run_spinnaker_chaos(seed: int = 0,
                         history_keys: int = 24,
                         probe_period: float = 0.25,
                         recovery_bound: float = 4.0,
-                        write_frac: float = 0.5) -> dict:
+                        write_frac: float = 0.5,
+                        export_journal: bool = False) -> dict:
     """One chaos run: drive history clients + per-range probe writers
     under a (generated or supplied) gray-failure schedule, then audit.
 
@@ -795,9 +850,16 @@ def run_spinnaker_chaos(seed: int = 0,
                          "read": r.code.value, "read_version": r.version})
 
     trace_audit = cluster.obs.tracer.audit_writes()
+    watchdog = cluster.obs.watchdog.summary()
     ok = (not violations and availability["ok"] and not lost
-          and trace_audit.get("ok", True))
+          and trace_audit.get("ok", True) and watchdog["ok"])
+    extra = {}
+    if export_journal:
+        # full flight-recorder dump for the offline explainer
+        # (benchmarks/explain.py) — opt-in, it dwarfs the result dict
+        extra["journal_jsonl"] = cluster.obs.journal.to_jsonl()
     return {
+        **extra,
         "seed": seed,
         "lease_enabled": cfg.lease_enabled,
         "duration_s": duration,
@@ -812,6 +874,7 @@ def run_spinnaker_chaos(seed: int = 0,
         "revived_stragglers": revived,
         "client_robustness": _aggregate_robustness(clients),
         "trace_audit": trace_audit,
+        "watchdog": watchdog,
         "ok": ok,
     }
 

@@ -1,0 +1,394 @@
+"""Protocol flight recorder (PR 9): journal, invariant watchdog, and the
+offline explainer.
+
+The load-bearing invariants:
+
+- the journal is pure measurement — a journaled + watchdog-monitored
+  run is op-for-op identical to one with the flight recorder off;
+- each consensus invariant trips on a hand-built journal fragment that
+  violates it and stays silent on the lawful variant;
+- the watchdog is silent across seeded gray-failure chaos schedules
+  (zero false positives under crashes, partitions, flaps, gray links);
+- the mutation corpus — three known-fixed protocol bugs re-introduced
+  behind test-only switches — is pinpointed at the violating journal
+  transition, with the fixed-protocol control runs silent;
+- the offline explainer reconstructs regimes from a JSONL dump and
+  matches the named anomaly signatures.
+"""
+
+import dataclasses
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.chaos.mutations import MUTATIONS, run_corpus, run_mutation
+from repro.obs.journal import ProtocolJournal
+from repro.obs.watchdog import InvariantWatchdog
+from repro.workload import (ExperimentConfig, WorkloadSpec,
+                            run_spinnaker_chaos, run_spinnaker_workload)
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent
+                       / "benchmarks"))
+import explain  # noqa: E402
+
+
+def E(t, kind, node, **kw):
+    return {"t": t, "kind": kind, "node": node, **kw}
+
+
+def replay(entries):
+    return InvariantWatchdog.replay(entries)
+
+
+def invariants(entries):
+    return [v["invariant"] for v in replay(entries).violations]
+
+
+# -- journal substrate -------------------------------------------------------
+
+
+class _Sim:
+    now = 0.0
+
+
+def test_journal_record_export_window_roundtrip():
+    sim = _Sim()
+    j = ProtocolJournal(sim)
+    for i in range(5):
+        sim.now = float(i)
+        j.record("flush", node=i % 2, rid=i % 3, epoch=1, lsn=10 + i)
+    assert len(j.entries) == 5
+    # export shifts times and filters
+    ex = j.export(t0=2.0, rid=2)
+    assert all(e["rid"] == 2 for e in ex)
+    assert ex[0]["t"] == 0.0           # shifted relative to t0
+    # window keeps absolute times
+    win = j.window(1.0, 3.0)
+    assert [e["t"] for e in win] == [1.0, 2.0, 3.0]
+    # JSONL round-trips
+    back = ProtocolJournal.load_jsonl(j.to_jsonl())
+    assert len(back) == 5
+    assert back[0]["kind"] == "flush" and back[4]["lsn"] == 14
+
+
+def test_journal_cap_drops_storage_not_listeners():
+    sim = _Sim()
+    j = ProtocolJournal(sim, cap=3)
+    seen = []
+    j.listeners.append(seen.append)
+    for i in range(5):
+        j.record("flush", node=0, rid=0, lsn=i)
+    assert len(j.entries) == 3 and j.dropped == 2
+    assert len(seen) == 5              # the watchdog never goes blind
+
+
+def test_journal_window_summary_counts_and_notables():
+    sim = _Sim()
+    j = ProtocolJournal(sim)
+    sim.now = 1.0
+    j.record("ack", node=1, rid=0, lsn=5)
+    j.record("takeover", node=2, rid=0, epoch=3)
+    s = j.window_summary(0.0, 2.0, rid=0)
+    assert s["n_entries"] == 2
+    assert s["by_kind"] == {"ack": 1, "takeover": 1}
+    assert [e["kind"] for e in s["notable"]] == ["takeover"]
+
+
+# -- per-invariant unit tests (hand-built fragments) -------------------------
+
+
+def test_single_leader_per_epoch():
+    ok = [E(0.0, "takeover", 1, rid=0, epoch=5, cmt=0, lst=0, missing=0,
+            n_cohort=3),
+          E(1.0, "takeover", 2, rid=0, epoch=6, cmt=0, lst=0, missing=0,
+            n_cohort=3)]
+    assert invariants(ok) == []
+    bad = ok[:1] + [E(0.1, "takeover", 2, rid=0, epoch=5, cmt=0, lst=0,
+                      missing=0, n_cohort=3)]
+    assert invariants(bad) == ["single_leader_per_epoch"]
+
+
+def test_takeover_completeness_flags_missing_records():
+    bad = [E(0.0, "takeover", 1, rid=0, epoch=2, cmt=4, lst=9,
+             unresolved=3, missing=2, n_cohort=3)]
+    wd = replay(bad)
+    assert invariants(bad) == ["takeover_completeness"]
+    assert "missing 2 durable" in wd.violations[0]["detail"]
+    ok = [dict(bad[0], missing=0)]
+    assert invariants(ok) == []
+
+
+def test_lease_disjoint_overlap_and_lawful_renewal():
+    base = [E(0.0, "takeover", 1, rid=0, epoch=1, n_cohort=3),
+            E(0.0, "lease_acquire", 1, rid=0, epoch=1, until=1.0)]
+    # same holder extending its own lease is lawful
+    assert invariants(base + [E(0.5, "lease_acquire", 1, rid=0, epoch=1,
+                                until=1.5)]) == []
+    # another node acquiring inside the live window is the precursor
+    bad = base + [E(0.5, "lease_acquire", 2, rid=0, epoch=2, until=1.4)]
+    assert invariants(bad) == ["lease_disjoint"]
+    # ...unless the old holder's window lapsed first
+    ok = base + [E(1.2, "lease_lapse", 1, rid=0, epoch=1),
+                 E(1.3, "lease_acquire", 2, rid=0, epoch=2, until=2.3)]
+    assert invariants(ok) == []
+
+
+def test_lease_disjoint_session_fence_exemption():
+    # a flapped leader's stale-epoch renewal racing the successor's
+    # takeover is handoff noise, not a split-brain claim
+    frag = [E(0.0, "takeover", 1, rid=0, epoch=1, n_cohort=3),
+            E(0.0, "lease_acquire", 1, rid=0, epoch=1, until=1.0),
+            E(0.4, "session_flap", 1, outage=0.5),
+            E(0.5, "takeover", 2, rid=0, epoch=2, n_cohort=3),
+            E(0.5, "lease_acquire", 2, rid=0, epoch=2, until=1.5,
+              grace=True),
+            E(0.50003, "lease_acquire", 1, rid=0, epoch=1, until=1.45)]
+    assert invariants(frag) == []
+
+
+def test_quorum_intersection_minority_election_and_short_log_winner():
+    minority = [E(0.0, "elect_decide", 1, rid=0, epoch=2, round=1,
+                  candidates=[1], winner=1, winner_lst=5, max_lst=5,
+                  n_cohort=3)]
+    assert invariants(minority) == ["quorum_intersection"]
+    short = [E(0.0, "elect_decide", 1, rid=0, epoch=2, round=1,
+               candidates=[1, 2], winner=1, winner_lst=3, max_lst=9,
+               n_cohort=3)]
+    assert invariants(short) == ["quorum_intersection"]
+    ok = [E(0.0, "elect_decide", 1, rid=0, epoch=2, round=1,
+            candidates=[1, 2], winner=1, winner_lst=9, max_lst=9,
+            n_cohort=3)]
+    assert invariants(ok) == []
+
+
+def test_acked_durable_requires_local_evidence():
+    ok = [E(0.0, "flush", 2, rid=0, epoch=1, lsn=10),
+          E(0.1, "ack", 2, rid=0, epoch=1, lsn=10)]
+    assert invariants(ok) == []
+    bad = ok + [E(0.2, "ack", 2, rid=0, epoch=1, lsn=20)]
+    assert invariants(bad) == ["acked_durable"]
+    # an applied commit index is evidence too (dup re-ack after cmt)
+    cmt = [E(0.0, "commit_idx", 2, rid=0, epoch=1, lsn=30),
+           E(0.1, "ack", 2, rid=0, epoch=1, lsn=30)]
+    assert invariants(cmt) == []
+
+
+def test_acked_committed_majority():
+    both = [E(0.0, "flush", 1, rid=0, epoch=1, lsn=10),
+            E(0.0, "flush", 2, rid=0, epoch=1, lsn=10),
+            E(0.1, "commit", 1, rid=0, epoch=1, lsn=10, n_cohort=3)]
+    assert invariants(both) == []
+    solo = [E(0.0, "flush", 1, rid=0, epoch=1, lsn=10),
+            E(0.1, "commit", 1, rid=0, epoch=1, lsn=10, n_cohort=3)]
+    assert invariants(solo) == ["acked_committed_majority"]
+
+
+def test_commit_monotonic_allows_crash_rewind():
+    bad = [E(0.0, "commit_idx", 1, rid=0, epoch=1, lsn=10),
+           E(0.1, "commit_idx", 1, rid=0, epoch=1, lsn=5)]
+    assert invariants(bad) == ["commit_monotonic"]
+    crash = [E(0.0, "commit_idx", 1, rid=0, epoch=1, lsn=10),
+             E(0.1, "node_crash", 1),
+             E(0.2, "commit_idx", 1, rid=0, epoch=1, lsn=5)]
+    assert invariants(crash) == []
+
+
+def test_log_matching_digest_divergence():
+    ok = [E(0.0, "append", 1, rid=0, epoch=1, lsn=7, digest=111),
+          E(0.1, "append", 2, rid=0, epoch=1, lsn=7, digest=111)]
+    assert invariants(ok) == []
+    bad = ok + [E(0.2, "append", 3, rid=0, epoch=1, lsn=7, digest=222)]
+    assert invariants(bad) == ["log_matching"]
+
+
+def test_txn_decision_stable():
+    ok = [E(0.0, "txn_decide", 1, rid=0, txid="x1", outcome="commit"),
+          E(0.1, "txn_resolve", 2, rid=1, txid="x1", outcome="commit")]
+    assert invariants(ok) == []
+    bad = ok + [E(0.2, "txn_resolve", 3, rid=2, txid="x1",
+                  outcome="abort")]
+    assert invariants(bad) == ["txn_decision_stable"]
+
+
+def test_gc_floor_safe_vs_unresolved_prepares():
+    prep = [E(0.0, "txn_prepared", 1, rid=0, epoch=1, lsn=5, txid="x1")]
+    assert invariants(prep + [E(0.1, "gc_floor_pin", 1, rid=0,
+                                lsn=7)]) == ["gc_floor_safe"]
+    assert invariants(prep + [E(0.1, "txn_unpin", 1, rid=0,
+                                epoch=1)]) == ["gc_floor_safe"]
+    resolved = prep + [E(0.1, "txn_resolve", 1, rid=0, txid="x1",
+                         outcome="commit"),
+                       E(0.2, "gc_floor_pin", 1, rid=0, lsn=7)]
+    assert invariants(resolved) == []
+
+
+def test_catchup_progress_starvation_vs_active_retry():
+    def frag(retry_at=None):
+        es = [E(0.0, "catchup_enter", 2, rid=0, epoch=1, leader=1)]
+        if retry_at is not None:
+            es.append(E(retry_at, "catchup_retry", 2, rid=0, epoch=1))
+        es += [E(1.0, "lease_heard", 2, rid=0, epoch=1, role="CATCHUP"),
+               E(2.0, "lease_heard", 2, rid=0, epoch=1, role="CATCHUP"),
+               E(3.1, "lease_heard", 2, rid=0, epoch=1, role="CATCHUP")]
+        return es
+    assert invariants(frag()) == ["catchup_progress"]
+    assert invariants(frag(retry_at=2.5)) == []
+    # a FOLLOWER hearing beats is not in catch-up at all
+    follower = [E(1.0, "lease_heard", 2, rid=0, epoch=1,
+                  role="FOLLOWER")] * 5
+    assert invariants(follower) == []
+
+
+def test_violation_shape_and_dedup():
+    bad = [E(0.0, "flush", 2, rid=0, epoch=1, lsn=10)] + \
+        [E(0.1 * i, "ack", 2, rid=0, epoch=1, lsn=20 + i)
+         for i in range(1, 5)]
+    wd = replay(bad)
+    assert len(wd.violations) == 1      # dedup per (rid, node) ack site
+    v = wd.violations[0]
+    for key in ("t", "invariant", "rid", "node", "kind", "detail",
+                "window"):
+        assert key in v
+    s = wd.summary()
+    assert not s["ok"] and s["by_invariant"] == {"acked_durable": 1}
+
+
+# -- bit-identity: the flight recorder is pure measurement -------------------
+
+
+@pytest.mark.filterwarnings("ignore::UserWarning")
+def test_journaled_run_bit_identical_to_unjournaled():
+    spec = WorkloadSpec(num_keys=100, value_size=256, read_frac=0.5,
+                        write_frac=0.5, rmw_frac=0, cond_frac=0)
+    cfg = ExperimentConfig(n_nodes=5, disk="mem", n_clients=4, warmup=0.5,
+                           duration=2.0, preload_cap=100)
+    on = run_spinnaker_workload(spec, cfg, consistent_reads=True)
+    off = run_spinnaker_workload(spec, dataclasses.replace(cfg,
+                                                           journal=False),
+                                 consistent_reads=True)
+    assert on["total_ops"] == off["total_ops"]
+    for kind in ("reads", "writes"):
+        assert on[kind]["count"] == off[kind]["count"]
+        assert on[kind]["p50_ms"] == off[kind]["p50_ms"]
+        assert on[kind]["p99_ms"] == off[kind]["p99_ms"]
+
+
+# -- chaos silence: zero false positives -------------------------------------
+
+
+@pytest.mark.filterwarnings("ignore::UserWarning")
+def test_watchdog_silent_on_chaos_schedule():
+    r = run_spinnaker_chaos(seed=0, duration=6.0)
+    wd = r["watchdog"]
+    assert wd["ok"], wd["violations"][:3]
+    assert wd["entries_checked"] > 10_000
+    assert r["ok"]                      # watchdog is part of the chaos gate
+
+
+@pytest.mark.slow
+@pytest.mark.filterwarnings("ignore::UserWarning")
+def test_watchdog_silent_on_all_chaos_seeds():
+    for seed in range(8):
+        r = run_spinnaker_chaos(seed=seed, duration=12.0)
+        wd = r["watchdog"]
+        assert wd["ok"], (seed, wd["violations"][:3])
+
+
+# -- mutation corpus: detection at the violating transition ------------------
+
+
+@pytest.mark.filterwarnings("ignore::UserWarning")
+def test_mutation_corpus_detects_all_bugs_with_silent_controls():
+    corpus = run_corpus()
+    assert corpus["ok"], corpus
+    assert set(corpus["mutations"]) == set(MUTATIONS)
+    for name, m in corpus["mutations"].items():
+        assert m["detected"], name
+        at = m["detected_at"]
+        assert at["invariant"] == MUTATIONS[name]["invariant"], (name, at)
+        assert at["kind"] == MUTATIONS[name]["at_kind"], (name, at)
+        assert m["control_silent"], (name, m["control_by_invariant"])
+
+
+# -- offline explainer -------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def wedge_journal():
+    r = run_mutation("takeover_wedge", mutated=True, export_journal=True)
+    assert r["detected"]
+    return ProtocolJournal.load_jsonl(r["journal_jsonl"])
+
+
+@pytest.fixture(scope="module")
+def wedge_control_journal():
+    r = run_mutation("takeover_wedge", mutated=False, export_journal=True)
+    return ProtocolJournal.load_jsonl(r["journal_jsonl"])
+
+
+def test_explainer_reconstructs_wedged_regime(wedge_journal):
+    regs = explain.regimes(wedge_journal, 0)
+    assert len(regs) >= 3
+    last = regs[-1]
+    assert last["missing"] > 0          # the incomplete takeover
+    assert last["t_open"] is None       # ...that never reopened
+    # earlier regimes carry election context from elect_decide
+    assert any(r["election"] for r in regs)
+
+
+def test_explainer_signature_takeover_wedge(wedge_journal,
+                                            wedge_control_journal):
+    sigs = explain.scan_signatures(wedge_journal)
+    hits = [f for f in sigs["takeover_wedge"] if f["severity"] == "bug"]
+    assert hits and hits[0]["rid"] == 0
+    clean = explain.scan_signatures(wedge_control_journal)
+    assert not [f for f in clean["takeover_wedge"]
+                if f["severity"] == "bug"]
+
+
+def test_explainer_signature_catchup_starvation():
+    r = run_mutation("catchup_starvation", mutated=True,
+                     export_journal=True)
+    entries = ProtocolJournal.load_jsonl(r["journal_jsonl"])
+    hits = explain.sig_catchup_starvation(entries)
+    assert hits and all(f["severity"] == "bug" for f in hits)
+    fixed = run_mutation("catchup_starvation", mutated=False,
+                         export_journal=True)
+    assert not explain.sig_catchup_starvation(
+        ProtocolJournal.load_jsonl(fixed["journal_jsonl"]))
+
+
+def test_explainer_signature_split_brain_precursor():
+    overlap = [E(0.0, "lease_acquire", 1, rid=0, epoch=3, until=2.0),
+               E(0.5, "lease_acquire", 2, rid=0, epoch=3, until=2.5)]
+    hits = explain.sig_split_brain_precursor(overlap)
+    assert hits and hits[0]["severity"] == "precursor"
+    # a strictly newer epoch overlapping the old one is the bounded
+    # takeover handoff — classified benign, not a precursor
+    handoff = [E(0.0, "lease_acquire", 1, rid=0, epoch=3, until=2.0),
+               E(0.5, "lease_acquire", 2, rid=0, epoch=4, until=2.5)]
+    hand = explain.sig_split_brain_precursor(handoff)
+    assert hand and hand[0]["severity"] == "benign-handoff"
+    # no overlap, no finding
+    clean = [E(0.0, "lease_acquire", 1, rid=0, epoch=3, until=0.4),
+             E(0.5, "lease_acquire", 2, rid=0, epoch=4, until=1.5)]
+    assert not explain.sig_split_brain_precursor(clean)
+
+
+def test_explainer_stall_and_narrative(wedge_journal):
+    stall = "\n".join(explain.explain_stall(wedge_journal, 0, 3.0, 9.0))
+    assert "NO LEADER OPEN" in stall
+    text = explain.narrate(wedge_journal, rid=0)
+    assert "TAKEOVER INCOMPLETE" in text
+    assert "takeover_wedge" in text
+    assert "takeover_completeness" in text   # the watchdog replay section
+
+
+def test_explainer_watchdog_replay_matches_online(wedge_journal,
+                                                  wedge_control_journal):
+    rep = explain.analyze(wedge_journal)
+    assert not rep["watchdog"]["ok"]
+    assert rep["watchdog"]["by_invariant"].get("takeover_completeness")
+    clean = explain.analyze(wedge_control_journal)
+    assert clean["watchdog"]["ok"], clean["watchdog"]["violations"][:3]
