@@ -113,10 +113,23 @@ def _fig8_ratios(rec: dict) -> dict | None:
     }
 
 
+def _claims_ratios(rec: dict) -> dict | None:
+    """Prefer the structured `claims` block (PR 10+); fall back to
+    recomputing the ratios from the raw fig8 arms."""
+    cl = rec.get("claims")
+    if isinstance(cl, dict):
+        return {
+            "write_p50_vs_eventual": cl["write_p50_ratio"],
+            "read_p50_vs_quorum": cl["read_vs_quorum_ratio"],
+            "throughput_vs_eventual": cl["throughput_ratio"],
+        }
+    return _fig8_ratios(rec)
+
+
 def diff_claims(d: Diff, base: dict, cand: dict, tol: float) -> None:
-    b, c = _fig8_ratios(base), _fig8_ratios(cand)
+    b, c = _claims_ratios(base), _claims_ratios(cand)
     if not b or not c:
-        d.skip("fig8 section missing on one side")
+        d.skip("claims/fig8 section missing on one side")
         return
     d.check("fig8.write_p50_vs_eventual", b["write_p50_vs_eventual"],
             c["write_p50_vs_eventual"], "up", tol)

@@ -285,6 +285,41 @@ print(f"ok: committed profile block well-formed — attribution rel err "
       f"{ck['write_p50_ratio']:.2f}")
 EOF
 
+echo "== claims + saturation-retention check vs committed BENCH =="
+python - <<'EOF'
+import json, pathlib
+p = pathlib.Path("BENCH_spinnaker.json")
+if not p.exists():
+    print("skip: no committed BENCH_spinnaker.json")
+    raise SystemExit(0)
+rec = json.loads(p.read_text())
+cl = rec.get("claims")
+assert isinstance(cl, dict), "committed claims block is not structured"
+for key in ("read_vs_quorum_ratio", "write_p50_ratio", "throughput_ratio",
+            "targets", "ok"):
+    assert key in cl, key
+tg = cl["targets"]
+assert cl["write_p50_ratio"] <= tg["write_p50_ratio_max"], cl
+assert cl["throughput_ratio"] >= tg["throughput_ratio_min"], cl
+assert cl["read_vs_quorum_ratio"] <= tg["read_vs_quorum_ratio_max"], cl
+assert cl["ok"], cl
+sat = rec.get("saturation", {})
+assert sat, "committed BENCH_spinnaker.json lacks a 'saturation' block"
+for disk, curves in sat.items():
+    ck = curves["check"]
+    assert ck.get("admission_enabled"), (disk, "admission off in bench")
+    assert ck.get("retention_ok"), (disk, ck.get("post_knee_off"),
+                                    ck.get("post_knee_adaptive"))
+    for arm in ("post_knee_off", "post_knee_adaptive"):
+        pk = ck[arm]
+        assert pk["post_knee_retention"] >= 0.70, (disk, arm, pk)
+print(f"ok: claims write {cl['write_p50_ratio']:.2f} <= "
+      f"{tg['write_p50_ratio_max']}, tput {cl['throughput_ratio']:.2f} >= "
+      f"{tg['throughput_ratio_min']}, read {cl['read_vs_quorum_ratio']:.2f}"
+      f" <= {tg['read_vs_quorum_ratio_max']}; post-knee retention >= 0.70 "
+      f"on {len(sat)} disk classes (admission on)")
+EOF
+
 echo "== perf_diff ratchet: fresh profile run vs committed baseline =="
 python benchmarks/perf_diff.py BENCH_spinnaker.json BENCH_spinnaker.json
 python benchmarks/perf_diff.py BENCH_spinnaker.json \

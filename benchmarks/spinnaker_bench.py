@@ -106,9 +106,16 @@ def base_spec(quick: bool) -> WorkloadSpec:
 
 
 def base_cfg(quick: bool, seed: int = 0) -> ExperimentConfig:
+    # 16 closed-loop clients put the cluster at ~60-70% peak node
+    # utilization — the load point where throughput claims mean something
+    # (the paper's Fig. 8 measures under multi-client load, not an idle
+    # cluster) and where batching/coalescing actually engage.  8 ranges
+    # per node pre-splits the keyspace so zipfian hot keys land on
+    # different range leaders (§2.1 runs many ranges per node).
     return ExperimentConfig(
         n_nodes=5, disk="ssd", seed=seed,
-        n_clients=8 if quick else 32,
+        n_clients=16 if quick else 32,
+        ranges_per_node=8,
         warmup=0.5 if quick else 2.0,
         duration=3.0 if quick else 15.0,
         preload_cap=1000 if quick else 5000)
@@ -141,21 +148,72 @@ def sat_spec() -> WorkloadSpec:
                         cond_frac=0.0, value_size=1024)
 
 
+# server-side admission gate for the saturation ramps: shed once a node's
+# CPU backlog (queue + staged ingress work) exceeds this many seconds of
+# service time.  ~2ms keeps the pipeline full at the knee while cutting
+# the congestive collapse past it (clients back off on OVERLOADED instead
+# of piling retries onto a saturated leader).
+SAT_ADMISSION_LIMIT = 2e-3
+
+
 def sat_cfg(disk: str, batch: str, seed: int = 0) -> ExperimentConfig:
+    # batch="off" disables the whole batching stack — leader proposal
+    # batching AND server-side ingress batching — so the off-vs-adaptive
+    # curves keep measuring what batching buys end-to-end.  (Ingress
+    # batching alone moved the off knee from ~24k/s to ~85k/s; with it on
+    # in both arms the comparison would only see the residual proposal-
+    # batching delta, not the stack.)
     return ExperimentConfig(n_nodes=5, disk=disk, batch=batch, seed=seed,
+                            ingress_batch=(batch != "off"),
+                            admission_limit=SAT_ADMISSION_LIMIT,
                             preload_cap=100)
 
 
-SAT_RATES_QUICK = [5000, 20000, 35000, 50000, 65000]
-SAT_RATES = [2000, 5000, 10000, 20000, 30000, 40000, 50000, 60000, 70000]
+# the ramps straddle the post-PR-10 knees: batch=off (stack disabled)
+# knees ~25-40k/s, adaptive ~85-90k/s, so the top rate gives both arms a
+# ~1.5x-knee retention probe point
+SAT_RATES_QUICK = [5000, 30000, 60000, 90000, 135000]
+SAT_RATES = [2000, 10000, 25000, 40000, 60000, 80000,
+             100000, 120000, 150000]
 
 
-def check_saturation(off: dict, adaptive: dict) -> dict:
-    """Acceptance surface: adaptive batching must buy >= 25% peak write
-    throughput at the knee without costing > 10% p50 at light load, and
+def _post_knee(curve: dict) -> dict:
+    """Post-knee retention for one ramp: throughput at the knee (the
+    offered rate achieving peak) vs at ~1.5x the knee rate.  With
+    admission control shedding past the knee this should hold >= 0.70
+    instead of collapsing into congestive retry storms.  When the ramp
+    tops out before 1.5x the knee, the highest offered rate stands in
+    (recorded so the ratio is honest about its load point)."""
+    pts = curve["points"]
+    knee = max(pts, key=lambda p: p["achieved_tput"])
+    target = 1.5 * knee["offered_rate"]
+    past = [p for p in pts if p["offered_rate"] >= target]
+    probe = past[0] if past else pts[-1]
+    at_knee = knee["achieved_tput"]
+    at_probe = probe["achieved_tput"]
+    return {
+        "knee_rate": knee["offered_rate"],
+        "tput_at_knee": at_knee,
+        "probe_rate": probe["offered_rate"],
+        "tput_at_1.5x_knee": at_probe,
+        "post_knee_retention": at_probe / max(at_knee, 1e-9),
+        "probe_at_1.5x": bool(past),
+        "shed_total": sum(p.get("shed", 0) for p in pts),
+    }
+
+
+def check_saturation(off: dict, adaptive: dict,
+                     admission: bool = True) -> dict:
+    """Acceptance surface: the batching stack (leader proposal batching +
+    server ingress batching, the adaptive arm) must buy >= 25% peak write
+    throughput at the knee over the stack-disabled off arm without
+    costing > 10% p50 at light load, and
     the overload tail (throughput at the highest offered rate, past the
     knee) must hold >= 60% of the peak — retry backoff keeps overload
-    from collapsing into congestive retry storms."""
+    from collapsing into congestive retry storms.  With admission
+    control on (the default for the bench ramps), the post-knee
+    retention — throughput at ~1.5x the knee rate over throughput at
+    the knee — must additionally hold >= 0.70 on both batch arms."""
     p50_off = off["points"][0]["write_p50_ms"]
     p50_ad = adaptive["points"][0]["write_p50_ms"]
     gain = adaptive["peak_write_tput"] / max(off["peak_write_tput"], 1e-9)
@@ -164,6 +222,9 @@ def check_saturation(off: dict, adaptive: dict) -> dict:
         max(off["peak_write_tput"], 1e-9)
     tail_ad = adaptive["points"][-1]["achieved_tput"] / \
         max(adaptive["peak_write_tput"], 1e-9)
+    pk_off, pk_ad = _post_knee(off), _post_knee(adaptive)
+    retention_ok = (pk_off["post_knee_retention"] >= 0.70
+                    and pk_ad["post_knee_retention"] >= 0.70)
     return {
         "peak_write_tput_off": off["peak_write_tput"],
         "peak_write_tput_adaptive": adaptive["peak_write_tput"],
@@ -175,8 +236,13 @@ def check_saturation(off: dict, adaptive: dict) -> dict:
         "overload_tail_off": tail_off,
         "overload_tail_adaptive": tail_ad,
         "tail_ok": bool(tail_off >= 0.6 and tail_ad >= 0.6),
+        "post_knee_off": pk_off,
+        "post_knee_adaptive": pk_ad,
+        "admission_enabled": bool(admission),
+        "retention_ok": bool(retention_ok or not admission),
         "ok": bool(gain >= 1.25 and ratio <= 1.10
-                   and tail_off >= 0.6 and tail_ad >= 0.6),
+                   and tail_off >= 0.6 and tail_ad >= 0.6
+                   and (retention_ok or not admission)),
     }
 
 
@@ -224,6 +290,43 @@ def run_regression_gate(committed_path: str) -> int:
         if tput < 0.9 * want:
             print("FAIL: fig8 write throughput regressed >10%")
             rc = 1
+        # claims ratchet: re-measure the paper-claim ratios fresh and hold
+        # them to the committed ones (one-way: the write gap may only
+        # shrink, throughput may only grow, 5% tolerance) plus the
+        # absolute acceptance envelope.  Old artifacts stored claims as a
+        # list of strings; the ratchet starts once a structured block is
+        # committed.
+        ce = run_cassandra_workload(spec, cfg, quorum=False)
+        cq = run_cassandra_workload(spec, cfg, quorum=True)
+        fresh = check_paper_claims({"spinnaker_strong": got,
+                                    "cassandra_eventual": ce,
+                                    "cassandra_quorum": cq})
+        print(f"regress claims: read {fresh['read_vs_quorum_ratio']:.3f} "
+              f"write {fresh['write_p50_ratio']:.3f} "
+              f"tput {fresh['throughput_ratio']:.3f}")
+        if not fresh["ok"]:
+            print(f"FAIL: fresh claim ratios outside the acceptance "
+                  f"envelope {fresh['targets']}")
+            rc = 1
+        base = committed.get("claims")
+        if isinstance(base, dict):
+            if fresh["write_p50_ratio"] > 1.05 * base["write_p50_ratio"]:
+                print(f"FAIL: write p50 ratio ratchet "
+                      f"{base['write_p50_ratio']:.3f} -> "
+                      f"{fresh['write_p50_ratio']:.3f} (>5% slip)")
+                rc = 1
+            if fresh["read_vs_quorum_ratio"] > \
+                    1.05 * base["read_vs_quorum_ratio"]:
+                print(f"FAIL: read vs quorum ratio ratchet "
+                      f"{base['read_vs_quorum_ratio']:.3f} -> "
+                      f"{fresh['read_vs_quorum_ratio']:.3f} (>5% slip)")
+                rc = 1
+            if fresh["throughput_ratio"] < \
+                    0.95 * base["throughput_ratio"]:
+                print(f"FAIL: throughput ratio ratchet "
+                      f"{base['throughput_ratio']:.3f} -> "
+                      f"{fresh['throughput_ratio']:.3f} (>5% slip)")
+                rc = 1
     # 2. capped saturation quick-sweep: batching must still buy throughput
     rates = SAT_RATES_QUICK[:3]
     off = run_spinnaker_saturation(sat_spec(), sat_cfg("ssd", "off"),
@@ -236,6 +339,20 @@ def run_regression_gate(committed_path: str) -> int:
     if ad["peak_write_tput"] < 1.15 * off["peak_write_tput"]:
         print("FAIL: adaptive batching lost its throughput edge")
         rc = 1
+    # post-knee retention on the capped sweep (admission control's job);
+    # only gated where the cap leaves a true ~1.5x-knee probe point
+    for name, curve in (("off", off), ("adaptive", ad)):
+        pk = _post_knee(curve)
+        if pk["probe_at_1.5x"] and pk["post_knee_retention"] < 0.70:
+            print(f"FAIL: batch={name} post-knee retention "
+                  f"{pk['post_knee_retention']:.2f} < 0.70 "
+                  f"(knee {pk['tput_at_knee']:.0f}/s @ "
+                  f"{pk['knee_rate']}/s, probe {pk['tput_at_1.5x_knee']:.0f}"
+                  f"/s @ {pk['probe_rate']}/s)")
+            rc = 1
+        elif pk["probe_at_1.5x"]:
+            print(f"regress retention batch={name}: "
+                  f"{pk['post_knee_retention']:.2f} >= 0.70 ok")
     want_sat = committed.get("saturation", {}).get("ssd", {}) \
         .get("check", {}).get("peak_write_tput_adaptive")
     if want_sat and ad["peak_write_tput"] < 0.9 * min(want_sat, rates[-1]):
@@ -922,21 +1039,40 @@ def check_writes_resume(fig9: dict) -> dict:
                 (w["throughput"] for w in post), default=0.0)}
 
 
-def check_paper_claims(fig8: dict) -> list[str]:
-    claims = []
+# Paper-claim acceptance envelope (§1/§9 headlines, with reproduction
+# slack): strong reads at or under quorum-read latency, writes within
+# 30% of eventual-consistency writes, throughput within 5%.
+CLAIM_TARGETS = {"read_vs_quorum_ratio_max": 1.05,
+                 "write_p50_ratio_max": 1.30,
+                 "throughput_ratio_min": 0.95}
+
+
+def check_paper_claims(fig8: dict) -> dict:
+    """Structured claim ratios from the fig8 arms.  `perf_diff.py` and
+    smoke.sh ratchet these: the write/read gaps may only shrink and the
+    throughput ratio may only grow across PRs (5% tolerance)."""
     sp, ce = fig8["spinnaker_strong"], fig8["cassandra_eventual"]
     cq = fig8["cassandra_quorum"]
     r_ratio = sp["reads"]["p50_ms"] / max(cq["reads"]["p50_ms"], 1e-9)
-    claims.append(
-        f"strong reads vs quorum reads p50 ratio = {r_ratio:.2f} "
-        f"(paper: 'as fast or even faster', expect <= ~1.0)")
     w_ratio = sp["writes"]["p50_ms"] / max(ce["writes"]["p50_ms"], 1e-9)
-    claims.append(
-        f"spinnaker writes vs eventual writes p50 ratio = {w_ratio:.2f} "
-        f"(paper: '5% to 10% slower', expect ~1.05-1.10)")
     t_ratio = sp["throughput"] / max(ce["throughput"], 1e-9)
-    claims.append(f"throughput ratio spinnaker/eventual = {t_ratio:.2f}")
-    return claims
+    tg = CLAIM_TARGETS
+    return {
+        "read_vs_quorum_ratio": r_ratio,
+        "write_p50_ratio": w_ratio,
+        "throughput_ratio": t_ratio,
+        "targets": dict(tg),
+        "ok": bool(r_ratio <= tg["read_vs_quorum_ratio_max"]
+                   and w_ratio <= tg["write_p50_ratio_max"]
+                   and t_ratio >= tg["throughput_ratio_min"]),
+        "notes": [
+            f"strong reads vs quorum reads p50 ratio = {r_ratio:.2f} "
+            f"(paper: 'as fast or even faster', expect <= ~1.0)",
+            f"spinnaker writes vs eventual writes p50 ratio = {w_ratio:.2f} "
+            f"(paper: '5% to 10% slower', expect ~1.05-1.10)",
+            f"throughput ratio spinnaker/eventual = {t_ratio:.2f}",
+        ],
+    }
 
 
 def main(argv=None) -> int:
@@ -1004,9 +1140,18 @@ def main(argv=None) -> int:
         rec = merged
     out_path.write_text(json.dumps(rec, indent=2))
     print(f"wrote {args.out}")
-    for c in rec.get("claims", []):
+    claims = rec.get("claims") or {}
+    # pre-PR-10 artifacts stored claims as a bare list of strings
+    for c in claims.get("notes", []) if isinstance(claims, dict) else claims:
         print("claim:", c)
     rc = 0
+    if isinstance(claims, dict) and "fig8" in rec and not claims["ok"]:
+        print(f"FAIL: paper-claim envelope missed: "
+              f"read {claims['read_vs_quorum_ratio']:.2f} "
+              f"write {claims['write_p50_ratio']:.2f} "
+              f"tput {claims['throughput_ratio']:.2f} "
+              f"vs targets {claims['targets']}")
+        rc = 1
     if "fig9_check" in rec and not rec["fig9_check"]["writes_resumed"]:
         print("FAIL: writes did not resume after leader crash")
         rc = 1

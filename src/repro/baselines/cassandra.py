@@ -42,6 +42,10 @@ class CassandraConfig:
     batch: str = "adaptive"             # "adaptive" | "off"
     batch_max_records: int = 32
     batch_deadline: float = 0.5e-3
+    # server-side ingress batching, mirroring core/node.py (same codebase,
+    # §9): messages arriving while the CPU is busy drain as one batch job —
+    # per-message overhead once per message class, marginal per record
+    ingress_batch: bool = True
     obs: ObsConfig = field(default_factory=ObsConfig)
 
 
@@ -58,6 +62,11 @@ CPU_READ = (96e-6, 14e-6)
 CPU_WRITE = (30e-6, 25e-6)
 CPU_FWD = (16e-6, 12e-6)
 CPU_ACK = (8e-6, 0.0)
+
+# kinds that carry client requests; everything else (forwarded replica
+# reads/writes, acks) is protocol traffic the two-class ingress drain
+# runs ahead of client request processing
+_CLIENT_KINDS = ("coord_read", "coord_write")
 
 # message kind -> profiler component label (mirrors core/node.py so the
 # Spinnaker-vs-Cassandra utilization shares compare like for like)
@@ -87,6 +96,13 @@ class CassandraNode:
         self._mut_timer: dict[int, Any] = {}
         self.batches_sent = 0
         self.muts_batched = 0
+        # server-side ingress batching (mirrors SpinnakerNode; same
+        # codebase, §9): staged messages drained as one amortised CPU job
+        self._ingress: list[tuple] = []
+        self._ingress_ev = None
+        self.ingress_draining = False
+        self.ingress_batches = 0
+        self.ingress_msgs = 0
 
     # -- local replica ops -------------------------------------------------------
     def local_write(self, key: str, colname: str, value: Any, ts: float,
@@ -116,6 +132,10 @@ class CassandraNode:
         self.cpu.close()
         self.cpu.bump_generation()
         self.disk.crash()
+        self._ingress.clear()
+        if self._ingress_ev is not None:
+            self._ingress_ev.cancel()
+            self._ingress_ev = None
         for timer in self._mut_timer.values():
             timer.cancel()
         self._mut_timer.clear()
@@ -146,7 +166,18 @@ class CassandraNode:
                          "ack": CPU_ACK}.get(kind, CPU_ACK)
         n = len(kw["muts"]) if "muts" in kw else \
             len(kw["tags"]) if "tags" in kw else 1
-        cost = base + per_rec * n
+        thunk = lambda: getattr(self, kind)(**kw)   # noqa: E731
+        if not self.cfg.ingress_batch or (
+                not self._ingress and self.cpu.queue_delay() <= 1e-12):
+            self._profile_cpu(kind, base + per_rec * n)
+            self.cpu.submit(base + per_rec * n, thunk)
+            return
+        self._ingress.append((kind, base, per_rec * n, thunk))
+        if self._ingress_ev is None:
+            self._ingress_ev = self.sim.schedule(
+                self.cpu.queue_delay(), self._drain_ingress)
+
+    def _profile_cpu(self, kind: str, cost: float) -> None:
         prof = self.cluster.obs.profiler
         if prof.enabled:
             wait = self.cpu.queue_delay()
@@ -154,7 +185,49 @@ class CassandraNode:
                           cost * self.cpu.slow_factor, queue_wait_s=wait)
             self.cluster.obs.metrics.observe(
                 self.node_id, "cpu_queue_wait_s", wait)
-        self.cpu.submit(cost, lambda: getattr(self, kind)(**kw))
+
+    def _drain_ingress(self) -> None:
+        self._ingress_ev = None
+        if not self.up:
+            self._ingress.clear()
+            return
+        if self.cpu.queue_delay() > 1e-12:
+            self._ingress_ev = self.sim.schedule(
+                self.cpu.queue_delay(), self._drain_ingress)
+            return
+        batch, self._ingress = self._ingress, []
+        if not batch:
+            return
+        self.ingress_batches += 1
+        self.ingress_msgs += len(batch)
+        # Two-class drain, mirroring the Spinnaker node: replica-side
+        # protocol traffic (forwarded writes/reads, acks) runs as its own
+        # CPU job ahead of coordinator-side client requests, the way real
+        # stores give replication handling its own stage.
+        proto = [it for it in batch if it[0] not in _CLIENT_KINDS]
+        client = [it for it in batch if it[0] in _CLIENT_KINDS]
+        for job in (proto, client):
+            if not job:
+                continue
+            total = 0.0
+            seen: set[str] = set()
+            for kind, base, marginal, _thunk in job:
+                share = marginal + (base if kind not in seen else 0.0)
+                seen.add(kind)
+                total += share
+                self._profile_cpu(kind, share)
+
+            def run_batch(job=job):
+                self.ingress_draining = True
+                try:
+                    for _k, _b, _m, thunk in job:
+                        thunk()
+                finally:
+                    self.ingress_draining = False
+                for dst in list(self._mut_batch):
+                    self._maybe_flush_muts(dst)
+
+            self.cpu.submit(total, run_batch)
 
     # -- coordinator-side mutation batching ----------------------------------------
     def _enqueue_mut(self, dst: int, key: str, colname: str, value: Any,
@@ -163,10 +236,22 @@ class CassandraNode:
         leader's adaptive batching (immediate while the CPU queue is empty,
         else accumulate until count/deadline)."""
         self._mut_batch.setdefault(dst, []).append((key, colname, value, ts))
+        self._maybe_flush_muts(dst)
+
+    def _maybe_flush_muts(self, dst: int) -> None:
         cfg = self.cfg
+        if not self._mut_batch.get(dst):
+            return
         if cfg.batch != "adaptive" \
-                or len(self._mut_batch[dst]) >= cfg.batch_max_records \
-                or self.cpu.busy_until <= self.sim.now + 1e-12:
+                or len(self._mut_batch[dst]) >= cfg.batch_max_records:
+            self._flush_muts(dst)
+            return
+        if self.ingress_draining:
+            # mid ingress-drain: coord_writes still to run in this CPU
+            # batch may stage more mutations for dst; run_batch flushes
+            # once at the end (mirrors the Spinnaker leader's accumulator)
+            return
+        if self.cpu.busy_until <= self.sim.now + 1e-12:
             self._flush_muts(dst)
         elif dst not in self._mut_timer:
             self._mut_timer[dst] = self.sim.schedule(

@@ -28,6 +28,11 @@ from ..obs import Observability, ObsConfig, install_node_gauges
 class ClusterConfig:
     n_nodes: int = 5
     num_keys: int = 100_000          # key-space pre-split for range boundaries
+    # base ranges per node.  One range per node is the minimal layout; a
+    # finer pre-split (the paper's deployments run many ranges per node,
+    # §2.1) spreads range leadership round-robin so a skewed workload's
+    # hot keys land on different leaders instead of piling onto one node
+    ranges_per_node: int = 1
     node: NodeConfig = field(default_factory=NodeConfig)
     net: NetParams = field(default_factory=NetParams)
     session_timeout: float = 2.0     # §D.1
@@ -54,21 +59,24 @@ class SpinnakerCluster:
         n = self.cfg.n_nodes
         if n < 3:
             raise ValueError("Spinnaker needs >= 3 nodes for 3-way replication")
-        self.n_base_ranges = n
-        # initial range table: uniform pre-split of the key space, one base
-        # range per node, chained declustering cohort(r) = {r, r+1, r+2}
-        boundaries = [key_of(i * self.cfg.num_keys // n) for i in range(n)]
+        nr = n * max(1, self.cfg.ranges_per_node)
+        self.n_base_ranges = nr
+        # initial range table: uniform pre-split of the key space,
+        # `ranges_per_node` base ranges per node, chained declustering
+        # cohort(r) = {r, r+1, r+2} (mod n)
+        boundaries = [key_of(i * self.cfg.num_keys // nr) for i in range(nr)]
         self.ranges: dict[int, KeyRange] = {}
         self.members: dict[int, tuple[int, ...]] = {}
-        for i in range(n):
-            hi = boundaries[i + 1] if i + 1 < n else ""
+        for i in range(nr):
+            hi = boundaries[i + 1] if i + 1 < nr else ""
             self.ranges[i] = KeyRange(range_id=i, lo=boundaries[i], hi=hi)
-            self.members[i] = tuple(sorted((i, (i + 1) % n, (i + 2) % n)))
+            self.members[i] = tuple(sorted(
+                (i % n, (i + 1) % n, (i + 2) % n)))
         self._rebuild_routing()
         # register the table in coordination: clients route from these
         # znodes, and splits/migrations rewrite them
         self.zk.create(ranges_mod.VERSION_PATH, data=0)
-        self.zk.create(ranges_mod.NEXT_RID_PATH, data=n - 1)
+        self.zk.create(ranges_mod.NEXT_RID_PATH, data=nr - 1)
         for rid, kr in self.ranges.items():
             ranges_mod.set_range_meta(self.zk, rid, kr.lo, kr.hi,
                                       self.members[rid])
@@ -280,6 +288,12 @@ class Client:
     BACKOFF_CAP = 1.0        # ... up to this cap (±50% jitter throughout)
     ATTEMPT_TIMEOUT = 1.0    # first attempt; scales with the retry count
     ATTEMPT_TIMEOUT_CAP = 8.0
+    # client->node request envelope window: requests headed to the same
+    # node within this window share one message (per-message wire cost paid
+    # once).  0 = same-event only — ops issued simultaneously (e.g. the
+    # convoy a coalesced reply envelope releases) batch for free, and no op
+    # is ever delayed to wait for company.
+    COALESCE_WINDOW = 0.0
 
     def __init__(self, cluster: SpinnakerCluster, client_id: str):
         self.cluster = cluster
@@ -315,6 +329,9 @@ class Client:
         # trace carries the workload's op label ("rmw", "txn_cross", ...)
         # instead of the client-internal path name; consumed per op
         self.next_trace_kind: Optional[str] = None
+        # request envelopes: per-target staging (see COALESCE_WINDOW)
+        self._req_buf: dict[int, list[tuple]] = {}
+        self.req_envelopes = 0       # multi-request envelopes sent
 
     # -- routing -----------------------------------------------------------------
     def _retry_delay(self, tries: int) -> float:
@@ -528,7 +545,7 @@ class Client:
     # per-key retryable mread results (reads never bounce on locks —
     # strong reads of locked keys defer server-side instead)
     _RETRY_CODES = (ErrorCode.NOT_LEADER, ErrorCode.UNAVAILABLE,
-                    ErrorCode.WRONG_RANGE)
+                    ErrorCode.WRONG_RANGE, ErrorCode.OVERLOADED)
 
     def _mread(self, items: list[tuple[int, str, str]], consistent: bool,
                deliver: Callable, tries: int) -> None:
@@ -616,12 +633,8 @@ class Client:
         payload = dict(pairs=[(k, c) for _i, k, c in items],
                        consistent=consistent,
                        reply=self._reply_via_net(target, on_reply))
-        node = self.cluster.nodes[target]
-        self.cluster.net.send(self.id, target, node.handle_client, rid,
-                              "mread", payload,
-                              nbytes=200 + 64 * len(items),
-                              cross_switch=True,
-                              component="client.read", rid=rid)
+        self._send_req(target, rid, "mread", payload,
+                       200 + 64 * len(items), "client.read")
 
     def transaction(self, ops: list[WriteOp], cb: Callable) -> None:
         """Multi-operation transaction.  Single-cohort op sets keep the
@@ -713,7 +726,8 @@ class Client:
             if res is None or res.code in (ErrorCode.NOT_LEADER,
                                            ErrorCode.UNAVAILABLE,
                                            ErrorCode.WRONG_RANGE,
-                                           ErrorCode.LOCKED):
+                                           ErrorCode.LOCKED,
+                                           ErrorCode.OVERLOADED):
                 retry(res)
                 return
             self._gate_release(kind, key, kw)
@@ -748,14 +762,47 @@ class Client:
             tr.t_send = self.sim.now
             payload["trace"] = tr
         payload["reply"] = self._reply_via_net(target, on_reply)
-        node = self.cluster.nodes[target]
         nbytes = 4200 if kind in ("write", "txn") else 300
         comp = "client.write" if kind in ("write", "txn") else "client.read"
-        self.cluster.net.send(self.id, target, node.handle_client, rid,
-                              wire_kind, payload, nbytes=nbytes,
-                              cross_switch=True, component=comp, rid=rid)
+        self._send_req(target, rid, wire_kind, payload, nbytes, comp)
+
+    # -- request/reply envelopes (client <-> node edge) ---------------------------
+    def _send_req(self, target: int, rid: int, wire_kind: str, payload: dict,
+                  nbytes: int, comp: str) -> None:
+        """Stage a request for `target`; everything staged within the
+        coalescing window leaves as one envelope."""
+        buf = self._req_buf.get(target)
+        if buf is None:
+            buf = self._req_buf[target] = []
+            self.sim.schedule(self.COALESCE_WINDOW, self._flush_reqs, target)
+        buf.append((rid, wire_kind, payload, nbytes, comp))
+
+    def _flush_reqs(self, target: int) -> None:
+        batch = self._req_buf.pop(target, None)
+        if not batch:
+            return
+        node = self.cluster.nodes[target]
+        if len(batch) == 1:
+            rid, kind, payload, nbytes, comp = batch[0]
+            self.cluster.net.send(self.id, target, node.handle_client, rid,
+                                  kind, payload, nbytes=nbytes,
+                                  cross_switch=True, component=comp, rid=rid)
+            return
+        self.req_envelopes += 1
+        self._count("client_req_envelopes")
+        items = [(rid, kind, payload) for rid, kind, payload, _n, _c in batch]
+        self.cluster.net.send(self.id, target, node.handle_client_batch,
+                              items,
+                              nbytes=sum(n for *_h, n, _c in batch),
+                              cross_switch=True, component=batch[0][4],
+                              rid=batch[0][0])
 
     def _reply_via_net(self, src_node: int, cb: Callable) -> Callable:
+        """Build the server-side reply hook: replies route through the
+        node's per-client reply envelope (node.client_reply), so acks and
+        read results minted in one event share one message back."""
+        node = self.cluster.nodes[src_node]
+
         def reply(res):
             if isinstance(res, list):   # batched mread reply
                 nbytes = 200 + sum(
@@ -764,8 +811,7 @@ class Client:
             else:
                 nbytes = 4200 if res is not None and res.value is not None \
                     else 200
-            self.cluster.net.send(src_node, self.id, cb, res, nbytes=nbytes,
-                                  cross_switch=True, component="client.reply")
+            node.client_reply(self.id, cb, res, nbytes)
         return reply
 
     # -- synchronous helpers for tests ------------------------------------------------

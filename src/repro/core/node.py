@@ -12,7 +12,7 @@ from . import ranges as ranges_mod
 from .replica import CohortReplica, ReplicaConfig, Role
 from .sim import Disk, DiskParams, FifoServer
 from .storage import Store
-from .types import KeyRange
+from .types import ErrorCode, KeyRange, Result
 from .wal import WAL
 
 if TYPE_CHECKING:
@@ -53,6 +53,11 @@ CPU_COST = {
     "on_read_confirm_ack": (8e-6, 0.0),
     "default": (10e-6, 0.0),
 }
+
+# dispatch classes that carry client requests; everything else is protocol
+# traffic (replication, 2PC, leases) that the two-class ingress drain runs
+# ahead of client request processing
+_CLIENT_CLASSES = ("client_read", "client_write")
 
 
 def message_cost(handler: str, kw: dict) -> float:
@@ -102,6 +107,21 @@ class NodeConfig:
     disk: DiskParams = field(default_factory=DiskParams.hdd)
     heartbeat_interval: float = 0.5
     wal_segment_bytes: int = 1 << 22
+    # -- ingress batching ---------------------------------------------------
+    # While the CPU is busy, arriving messages stage in an ingress queue and
+    # are served as ONE batch job when it drains: per-message overhead is
+    # paid once per message class in the batch, the marginal term per record
+    # (recvmmsg-style batched ingest — same amortisation the proposal
+    # accumulator applies on the wire, applied at the CPU).  An idle CPU
+    # dispatches immediately, so light load keeps the unbatched latency.
+    ingress_batch: bool = True
+    # -- admission control --------------------------------------------------
+    # Client requests arriving when the CPU backlog (queued + staged work)
+    # exceeds this many seconds are shed with OVERLOADED instead of queued;
+    # the client backs off and retries.  Past the saturation knee this
+    # converts collapse (every op queues for seconds, then times out and
+    # retries, multiplying load) into flat goodput.  None = admit all.
+    admission_limit: Optional[float] = None
 
 
 class SpinnakerNode:
@@ -128,6 +148,20 @@ class SpinnakerNode:
         self.session: Optional[int] = None
         self._hb_timer = None
         self.up = False
+        # ingress batching: messages staged while the CPU is busy, drained
+        # as one amortised batch job (see NodeConfig.ingress_batch)
+        self._ingress: list[tuple] = []   # (class, comp, base, marginal, thunk, rid)
+        self._ingress_cost = 0.0          # un-amortised staged service time
+        self._ingress_ev = None
+        self.ingress_draining = False     # replicas defer batch flushes while set
+        self.ingress_batches = 0
+        self.ingress_msgs = 0
+        self.admission_shed = 0
+        # reply envelopes: replies minted in one event share one message
+        # per client (the "one scheduled ack flush per batch" of §9)
+        self._reply_buf: dict[str, list[tuple]] = {}
+        # protocol envelopes (send_batched): per-destination staging
+        self._proto_buf: dict[int, list[tuple]] = {}
 
     # -- wiring ----------------------------------------------------------------
     def add_range(self, key_range: KeyRange, peers: tuple[int, ...]) -> None:
@@ -293,6 +327,13 @@ class SpinnakerNode:
         self.net.set_down(self.node_id, True)
         self.cpu.close()
         self.cpu.bump_generation()
+        self._ingress.clear()
+        self._ingress_cost = 0.0
+        if self._ingress_ev is not None:
+            self._ingress_ev.cancel()
+            self._ingress_ev = None
+        self._reply_buf.clear()
+        self._proto_buf.clear()
         if self._hb_timer is not None:
             self._hb_timer.cancel()
             self._hb_timer = None
@@ -323,15 +364,154 @@ class SpinnakerNode:
                       dst_node.receive, rid, handler, kw, nbytes=nbytes,
                       component=component_of(handler), rid=rid)
 
+    def send_batched(self, dst: int, rid: int, handler: str,
+                     nbytes: int = 256, **kw: Any) -> None:
+        """Protocol-message envelope: messages staged for `dst` in the same
+        event leave as ONE wire message (used by the 2PC coordinator so
+        prepares/decides per (coordinator, participant) pair share an
+        envelope).  The flush is at +0 sim-time — never delays a message."""
+        buf = self._proto_buf.get(dst)
+        if buf is None:
+            buf = self._proto_buf[dst] = []
+            self.sim.schedule(0.0, self._flush_proto, dst)
+        buf.append((rid, handler, kw, nbytes))
+
+    def _flush_proto(self, dst: int) -> None:
+        batch = self._proto_buf.pop(dst, None)
+        if not batch or not self.up:
+            return
+        if len(batch) == 1:
+            rid, handler, kw, nbytes = batch[0]
+            self.send(dst, rid, handler, nbytes=nbytes, **kw)
+            return
+        dst_node = self.cluster.nodes[dst]
+        items = [(rid, handler, kw) for rid, handler, kw, _n in batch]
+        self.net.send(self.node_id, dst, dst_node.receive_batch, items,
+                      nbytes=sum(n for *_h, n in batch),
+                      component=component_of(batch[0][1]), rid=batch[0][0])
+
+    def receive_batch(self, items: list) -> None:
+        """Unpack a protocol envelope; each message dispatches through the
+        normal receive path (and the ingress batch amortises their CPU —
+        the first dispatch occupies the CPU, the rest stage behind it)."""
+        for rid, handler, kw in items:
+            self.receive(rid, handler, kw)
+
     def receive(self, rid: int, handler: str, kw: dict) -> None:
         if not self.up:
             return
         replica = self.replicas.get(rid)
         if replica is None:
             return
-        cost = message_cost(handler, kw)
-        self._profile_cpu(component_of(handler), cost, rid)
-        self.cpu.submit(cost, lambda: getattr(replica, handler)(**kw))
+        base, per_rec = CPU_COST.get(handler, CPU_COST["default"])
+        records = kw.get("records")
+        if not isinstance(records, list):
+            records = kw.get("ops")
+        n = len(records) if isinstance(records, list) else 1
+        self._dispatch(handler, component_of(handler), base, per_rec * n,
+                       lambda: getattr(replica, handler)(**kw), rid)
+
+    # -- ingress batching (see NodeConfig.ingress_batch) -----------------------
+    def _dispatch(self, klass: str, comp: str, base: float, marginal: float,
+                  thunk, rid: int) -> None:
+        """CPU dispatch: immediate while the CPU is idle; staged into the
+        ingress queue while it is busy, to be drained as one batch job."""
+        if not self.cfg.ingress_batch or (
+                not self._ingress and self.cpu.queue_delay() <= 1e-12):
+            self._profile_cpu(comp, base + marginal, rid)
+            self.cpu.submit(base + marginal, thunk)
+            return
+        self._ingress.append((klass, comp, base, marginal, thunk, rid))
+        self._ingress_cost += base + marginal
+        if self._ingress_ev is None:
+            self._ingress_ev = self.sim.schedule(
+                self.cpu.queue_delay(), self._drain_ingress)
+
+    def _drain_ingress(self) -> None:
+        self._ingress_ev = None
+        if not self.up:
+            self._ingress.clear()
+            self._ingress_cost = 0.0
+            return
+        if self.cpu.queue_delay() > 1e-12:
+            # a completion callback submitted more work in the meantime;
+            # keep staging until the CPU actually drains
+            self._ingress_ev = self.sim.schedule(
+                self.cpu.queue_delay(), self._drain_ingress)
+            return
+        batch, self._ingress = self._ingress, []
+        self._ingress_cost = 0.0
+        if not batch:
+            return
+        self.ingress_batches += 1
+        self.ingress_msgs += len(batch)
+        # Two-class drain: protocol messages (propose/ack/commit/2PC —
+        # microsecond bookkeeping that other nodes' commit paths block on)
+        # drain ahead of client request processing, the way real stores
+        # run replication handling on its own stage instead of behind the
+        # client pool.  Arrival order is preserved within each class.
+        proto = [it for it in batch if it[0] not in _CLIENT_CLASSES]
+        client = [it for it in batch if it[0] in _CLIENT_CLASSES]
+        for job in (proto, client):
+            if not job:
+                continue
+            # one batch job per class group: per-message overhead once per
+            # message class, the marginal term per message — each
+            # message's share is profiled so component attribution still
+            # sums exactly to cpu.total_busy
+            total = 0.0
+            seen: set[str] = set()
+            for klass, comp, base, marginal, _thunk, rid in job:
+                share = marginal + (base if klass not in seen else 0.0)
+                seen.add(klass)
+                total += share
+                self._profile_cpu(comp, share, rid)
+
+            def run_batch(job=job):
+                # handlers run back-to-back in arrival order at batch end;
+                # the draining flag makes replica proposal accumulators
+                # hold their flush until every staged write has been
+                # admitted, so one ingress batch feeds one proposal batch
+                self.ingress_draining = True
+                try:
+                    for _k, _c, _b, _m, thunk, _r in job:
+                        thunk()
+                finally:
+                    self.ingress_draining = False
+                for rep in self.replicas.values():
+                    rep.on_ingress_drained()
+
+            self.cpu.submit(total, run_batch)
+
+    # -- reply envelopes --------------------------------------------------------
+    def client_reply(self, client_id: str, cb, res, nbytes: int) -> None:
+        """Queue a client reply; all replies minted for one client in the
+        same event leave as ONE envelope (per-message wire cost paid once).
+        The flush is scheduled at +0 sim-time — coalescing never delays an
+        ack, it only merges acks that were already simultaneous."""
+        buf = self._reply_buf.get(client_id)
+        if buf is None:
+            buf = self._reply_buf[client_id] = []
+            self.sim.schedule(0.0, self._flush_replies, client_id)
+        buf.append((cb, res, nbytes))
+
+    def _flush_replies(self, client_id: str) -> None:
+        batch = self._reply_buf.pop(client_id, None)
+        if not batch or not self.up:
+            return   # a node that died this instant loses its replies
+        if len(batch) == 1:
+            cb, res, nbytes = batch[0]
+            self.net.send(self.node_id, client_id, cb, res, nbytes=nbytes,
+                          cross_switch=True, component="client.reply")
+            return
+
+        def deliver(items=batch):
+            for cb, res, _nb in items:
+                cb(res)
+
+        self.net.send(self.node_id, client_id, deliver,
+                      nbytes=sum(nb for _cb, _res, nb in batch),
+                      cross_switch=True, component="client.reply")
 
     def _profile_cpu(self, component: str, cost: float, rid: int) -> None:
         """Attribute one CPU dispatch to the profiler (the slow factor is
@@ -347,6 +527,13 @@ class SpinnakerNode:
                                          wait)
 
     # client entry points (arrive via network; dispatched through the CPU)
+    def handle_client_batch(self, items: list) -> None:
+        """Unpack a client request envelope: requests a client issued in
+        one event to this node share one message; each unpacks into the
+        normal per-request path (and the ingress batch, when busy)."""
+        for rid, kind, kw in items:
+            self.handle_client(rid, kind, kw)
+
     def handle_client(self, rid: int, kind: str, kw: dict) -> None:
         if not self.up:
             return
@@ -360,30 +547,39 @@ class SpinnakerNode:
         if replica is None:
             kw["reply"](None)
             return
+        limit = self.cfg.admission_limit
+        if limit is not None \
+                and self.cpu.queue_delay() + self._ingress_cost > limit:
+            # shed at the NIC, before any CPU is spent: the client backs
+            # off and retries, so offered load stops compounding the queue
+            self.admission_shed += 1
+            self.cluster.obs.metrics.inc(self.node_id, "admission_shed")
+            kw["reply"](Result(ErrorCode.OVERLOADED))
+            return
         base, per_rec = CPU_COST["client_read" if kind in ("read", "mread")
                                  else "client_write"]
         if kind == "read":
-            cost, comp = base + per_rec, "client.read"
+            n, comp = 1, "client.read"
             thunk = lambda: replica.client_read(**kw)           # noqa: E731
         elif kind == "mread":
             # batched read service: one message overhead for the group
             n = max(1, len(kw.get("pairs", ())))
-            cost, comp = base + per_rec * n, "client.read"
+            comp = "client.read"
             thunk = lambda: replica.client_multi_read(**kw)     # noqa: E731
         elif kind == "txn":
             n = max(1, len(kw.get("ops", ())))
-            cost, comp = base + per_rec * n, "client.txn"
+            comp = "client.txn"
             thunk = lambda: replica.client_transaction(         # noqa: E731
                 kw["ops"], kw["reply"], trace=tr)
         elif kind == "txn2":
             # cross-range transaction: this leader coordinates 2PC
             n = max(1, sum(len(ops) for ops in kw.get("groups", {}).values()))
-            cost, comp = base + per_rec * n, "client.txn"
+            comp = "client.txn"
             thunk = lambda: replica.client_txn2(                # noqa: E731
                 kw["groups"], kw["reply"], trace=tr)
         else:
-            cost, comp = base + per_rec, "client.write"
+            n, comp = 1, "client.write"
             thunk = lambda: replica.client_write(               # noqa: E731
                 kw["op"], kw["reply"], trace=tr)
-        self._profile_cpu(comp, cost, rid)
-        self.cpu.submit(cost, thunk)
+        klass = "client_read" if kind in ("read", "mread") else "client_write"
+        self._dispatch(klass, comp, base, per_rec * n, thunk, rid)

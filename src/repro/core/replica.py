@@ -66,7 +66,12 @@ class Role(enum.Enum):
 @dataclass
 class ReplicaConfig:
     commit_period: float = 1.0          # §D.1 default
-    piggyback_commit: bool = False      # §D.1: piggy-back commit LSN on proposes
+    # §D.1: piggy-back the commit LSN on proposal batches.  On by default
+    # since the §9 write-path campaign: while writes flow, followers learn
+    # commit from the piggybacked watermark and the periodic on_commit
+    # broadcast is suppressed (commit markers stop paying their own
+    # message); idle ranges keep the slow keepalive rebroadcast.
+    piggyback_commit: bool = True
     flush_threshold: int = 4 << 20
     # -- leader-side proposal batching -------------------------------------
     # "adaptive": a write flushes immediately while the node's CPU queue is
@@ -143,6 +148,7 @@ class CohortReplica:
         self._takeover_hi = 0    # l.lst at takeover; writes open when cmt >= this
         self._election_round = 0
         self._last_commit_bcast = -1   # cmt at the last on_commit broadcast
+        self._piggy_sent = -1    # highest cmt piggybacked to ALL insync
         # range management (core/ranges.py): a proposed-but-unapplied SPLIT
         # gates writes above the split point; one member change in flight max
         self.pending_split: Optional[tuple[str, int]] = None  # (key, child rid)
@@ -205,6 +211,14 @@ class CohortReplica:
 
     def _send(self, dst: int, handler: str, nbytes: int = 256, **kw) -> None:
         self.node.send(dst, self.rid, handler, nbytes=nbytes, **kw)
+
+    def _send_batched(self, dst: int, handler: str, nbytes: int = 256,
+                      **kw) -> None:
+        """Hot-path variant of `_send`: same-event messages to one peer
+        node share a wire envelope (node.send_batched).  With many ranges
+        per node an ingress drain flushes several replicas at once — their
+        proposes (and the acks coming back) ride one message per peer."""
+        self.node.send_batched(dst, self.rid, handler, nbytes=nbytes, **kw)
 
     def log(self, msg: str) -> None:
         self.node.cluster.trace(
@@ -269,7 +283,25 @@ class CohortReplica:
         self._leader_seen = self.node.sim.now
         self.role = Role.ELECTING
         self._arm_guard_timer()
-        self._join_or_elect()
+        # Stagger the boot-time join by the node's chained-declustering
+        # distance from the range's home node.  Cold elections tie on
+        # lst=0 and fall to the candidacy-znode sequence, which otherwise
+        # always crowns the second-lowest member id — clumping every base
+        # range's leadership onto the same few nodes.  A microsecond-scale
+        # rotation-ordered stagger makes the winner rotate with the range
+        # id instead, spreading leadership round-robin.  Re-elections are
+        # unaffected: real lst gaps dominate the tie-break, and the delay
+        # is invisible next to the session timeout.
+        n = self.node.cluster.cfg.n_nodes
+        stagger = ((self.node.node_id - self.rid) % n) * 1e-6
+        if stagger > 0.0:
+            self.node.sim.schedule(stagger, self._staggered_join)
+        else:
+            self._join_or_elect()
+
+    def _staggered_join(self) -> None:
+        if self.role is Role.ELECTING:
+            self._join_or_elect()
 
     def stop(self) -> None:
         self.role = Role.OFFLINE
@@ -488,6 +520,7 @@ class CohortReplica:
         self._takeover_hi = self.lst
         self._reset_batch()
         self._last_commit_bcast = -1   # first tick re-announces cmt
+        self._piggy_sent = -1
         self._watched_peers.clear()
         # rebuild version map + range-op gates from the unresolved queue:
         # an in-flight SPLIT must keep gating writes above the split point
@@ -1231,8 +1264,15 @@ class CohortReplica:
             return
         if cfg.batch != "adaptive" \
                 or len(self._batch) >= cfg.batch_max_records \
-                or self._batch_bytes >= cfg.batch_max_bytes \
-                or self.node.cpu.busy_until <= self.node.sim.now + 1e-12:
+                or self._batch_bytes >= cfg.batch_max_bytes:
+            self._flush_batch()
+            return
+        if self.node.ingress_draining:
+            # mid ingress-drain: later staged writes are about to be
+            # admitted in this same CPU batch; on_ingress_drained flushes
+            # once, covering all of them with one propose + one force
+            return
+        if self.node.cpu.busy_until <= self.node.sim.now + 1e-12:
             # CPU queue empty -> no load to amortise against: flush now and
             # keep the unbatched latency profile.  Otherwise writes are
             # arriving faster than they are served; let the batch grow.
@@ -1240,6 +1280,12 @@ class CohortReplica:
         elif self._batch_timer is None:
             self._batch_timer = self.node.sim.schedule(
                 cfg.batch_deadline, self._on_batch_deadline)
+
+    def on_ingress_drained(self) -> None:
+        """The node finished serving an ingress batch: flush whatever the
+        batched handlers staged (one proposal batch per ingress batch)."""
+        if self._batch:
+            self._maybe_flush_batch()
 
     def _on_batch_deadline(self) -> None:
         self._batch_timer = None
@@ -1280,9 +1326,16 @@ class CohortReplica:
 
         self.node.wal.force(cb=on_forced, component="wal.force", rid=self.rid)
         nbytes = sum(r.nbytes() for r in batch) + 64
+        cl = self._piggyback()
         for f in self.insync:
-            self._send(f, "on_propose", nbytes=nbytes, epoch=self.epoch,
-                       records=list(batch), commit_lsn=self._piggyback())
+            self._send_batched(f, "on_propose", nbytes=nbytes,
+                               epoch=self.epoch, records=list(batch),
+                               commit_lsn=cl)
+        if cl is not None and self.insync:
+            # every insync follower just learned cmt: the periodic commit
+            # broadcast for this watermark is redundant (suppressed in
+            # _commit_tick) — the marker stopped paying its own message
+            self._piggy_sent = max(self._piggy_sent, cl)
 
     def client_transaction(self, ops: list, reply: Callable,
                            trace=None) -> None:
@@ -1407,7 +1460,13 @@ class CohortReplica:
             # nothing new to force: re-ack the watermark
             self._ack(max(self._follower_forced, self.cmt))
         if commit_lsn is not None:
+            before = self.cmt
             self._apply_committed(min(commit_lsn, self.lst))
+            if self.cmt > before:
+                # piggybacked commit progress: persist the marker exactly
+                # as a dedicated on_commit broadcast would have
+                self.node.wal.append(CommitMarker(self.rid, self.cmt),
+                                     force=False)
 
     _follower_forced = 0
     _dropped_catchup = False   # drop_first_catchup fault-hook latch
@@ -1432,8 +1491,8 @@ class CohortReplica:
             return
         self.acks_sent += 1
         self._jrec("ack", epoch=self.epoch, lsn=lsn)
-        self._send(self.leader_id, "on_ack", epoch=self.epoch,
-                   follower=self.node.node_id, lsn=lsn, nbytes=96)
+        self._send_batched(self.leader_id, "on_ack", epoch=self.epoch,
+                           follower=self.node.node_id, lsn=lsn, nbytes=96)
 
     def on_ack(self, epoch: int, follower: int, lsn: int) -> None:
         """Cumulative: `lsn` is the follower's durability watermark; it
@@ -1489,6 +1548,10 @@ class CohortReplica:
             tr = self._trace_by_lsn.pop(lsn, None)
             if tr is not None:
                 tr.t_commit = self.node.sim.now
+                # the ack leaves through the node's reply envelope this
+                # same instant (coalescing merges simultaneous acks, it
+                # never delays one) — the ack_coalesce stage records that
+                tr.t_acked = self.node.sim.now
             self.cmt = lsn   # range ops read cmt; keep it current in-loop
             if rec.op is OpType.SPLIT:
                 self._apply_split(rec)
@@ -1751,13 +1814,16 @@ class CohortReplica:
         if self.role not in (Role.LEADER, Role.TAKEOVER):
             return
         if self.cmt != self._last_commit_bcast:
-            # progress: persist the marker and broadcast
+            # progress: persist the marker, and broadcast unless the
+            # watermark already piggybacked on a proposal batch to every
+            # insync follower (then the dedicated message is pure overhead)
             self._last_commit_bcast = self.cmt
             self._idle_ticks = 0
             self.node.wal.append(CommitMarker(self.rid, self.cmt), force=False)
-            for f in self.insync:
-                self._send(f, "on_commit", epoch=self.epoch,
-                           commit_lsn=self.cmt, nbytes=96)
+            if self._piggy_sent < self.cmt:
+                for f in self.insync:
+                    self._send_batched(f, "on_commit", epoch=self.epoch,
+                                       commit_lsn=self.cmt, nbytes=96)
         else:
             # idle range: skip the marker append and the broadcast, except
             # for a slow keepalive rebroadcast (messages only, no append) so
@@ -1767,8 +1833,8 @@ class CohortReplica:
             if self._idle_ticks >= self._IDLE_REBCAST_TICKS:
                 self._idle_ticks = 0
                 for f in self.insync:
-                    self._send(f, "on_commit", epoch=self.epoch,
-                               commit_lsn=self.cmt, nbytes=96)
+                    self._send_batched(f, "on_commit", epoch=self.epoch,
+                                       commit_lsn=self.cmt, nbytes=96)
         self._check_migration()   # heartbeat-paced migration resume
         self._arm_commit_timer()
 

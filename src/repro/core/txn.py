@@ -514,9 +514,12 @@ class TxnManager:
             return      # no leader right now: the prepare timeout aborts
         nbytes = 128 + sum(64 + len(op.key) for op in ops)
         self.tracer.txn_mark(inst.txid, "prepare_sent", rid)
-        self.rep.node.send(leader, rid, "on_txn_prepare", nbytes=nbytes,
-                           txid=inst.txid, coord_rid=self.rep.rid,
-                           ops=list(ops))
+        # batched per (coordinator, participant) node pair: prepares staged
+        # in the same event (several ranges led by one node, or concurrent
+        # transactions deciding together) share one wire message
+        self.rep.node.send_batched(leader, rid, "on_txn_prepare",
+                                   nbytes=nbytes, txid=inst.txid,
+                                   coord_rid=self.rep.rid, ops=list(ops))
 
     def on_txn_vote(self, txid: str, prid: int, ok: bool, versions,
                     reason: str) -> None:
@@ -608,8 +611,11 @@ class TxnManager:
         leader = self._leader_of(rid)
         if leader is None:
             return      # resend tick retries while the intent survives
-        self.rep.node.send(leader, rid, "on_txn_decide", nbytes=96,
-                           txid=txid, coord_rid=self.rep.rid, commit=commit)
+        # decides fan out to every participant the instant the decision
+        # commits: participants led by the same node share one envelope
+        self.rep.node.send_batched(leader, rid, "on_txn_decide", nbytes=96,
+                                   txid=txid, coord_rid=self.rep.rid,
+                                   commit=commit)
 
     def on_txn_decided_ack(self, txid: str, prid: int) -> None:
         pending = self.unacked.get(txid)

@@ -144,6 +144,11 @@ class ErrorCode(enum.Enum):
     # deadlock avoidance, core/txn.py): retryable — the lock clears as
     # soon as the owning transaction resolves
     LOCKED = "locked"
+    # admission control (core/node.py): the node's CPU backlog is past its
+    # configured limit and the request was shed before queuing; retryable
+    # after backoff — by then the queue has drained or the client's load
+    # has spread to other cohorts
+    OVERLOADED = "overloaded"
 
 
 @dataclass

@@ -16,12 +16,15 @@ Milestones for a Spinnaker strong write::
     t_flush   proposal batch holding the record is flushed to followers
     t_forced  leader's WAL force covering the record is durable
     t_commit  commit rule satisfied (leader force + majority ack); applied
+    t_acked   ack handed to the per-client reply envelope (coalesced acks
+              for one batch leave as one message; the flush is same-instant,
+              so this stage measures coalescing delay — by design ~0)
     t_done    client receives the ack
 
 Consecutive milestones define stages that sum exactly to end-to-end
 latency: client_queue, net_req, cpu, batch_wait, wal_force, commit_wait,
-reply_net.  The Cassandra baseline uses a shorter chain (no proposal
-batch / quorum round): client_queue, net_req, cpu, durable_wait,
+ack_coalesce, reply_net.  The Cassandra baseline uses a shorter chain (no
+proposal batch / quorum round): client_queue, net_req, cpu, durable_wait,
 reply_net.
 
 2PC transactions get a parallel txid-keyed chain (`TxnTrace`):
@@ -45,7 +48,8 @@ SPINNAKER_CHAIN = (
     ("batch_wait", "t_cpu", "t_flush"),
     ("wal_force", "t_flush", "t_forced"),
     ("commit_wait", "t_forced", "t_commit"),
-    ("reply_net", "t_commit", "t_done"),
+    ("ack_coalesce", "t_commit", "t_acked"),
+    ("reply_net", "t_acked", "t_done"),
 )
 
 CASSANDRA_CHAIN = (
@@ -77,6 +81,7 @@ class OpTrace:
     t_flush: Optional[float] = None
     t_forced: Optional[float] = None
     t_commit: Optional[float] = None
+    t_acked: Optional[float] = None
     t_done: Optional[float] = None
     attempts: int = 0
     node: Optional[int] = None      # node that served the final attempt

@@ -41,6 +41,16 @@ class ExperimentConfig:
     batch: str = "adaptive"           # adaptive | off
     batch_max_records: int = 32
     batch_deadline: float = 0.5e-3
+    # server-side ingress batching (both systems — recvmmsg-style: drain
+    # everything that arrived while the CPU was busy as one batch job)
+    ingress_batch: bool = True
+    # admission control: shed client requests once the node's CPU backlog
+    # (queue delay + staged ingress work) exceeds this many seconds of
+    # service time; None disables the gate
+    admission_limit: Optional[float] = None
+    # base ranges per node (finer pre-split spreads range leadership so
+    # zipfian hot keys land on different leaders — see ClusterConfig)
+    ranges_per_node: int = 1
     # leader leases (chaos scenarios compare lease-on failover against the
     # lease-off quorum-read / stall behaviour)
     lease_enabled: bool = True
@@ -81,13 +91,16 @@ def build_spinnaker(cfg: ExperimentConfig, num_keys: Optional[int] = None):
     sim = Simulator(seed=cfg.seed)
     ccfg = ClusterConfig(
         n_nodes=cfg.n_nodes,
+        ranges_per_node=cfg.ranges_per_node,
         node=NodeConfig(replica=ReplicaConfig(
             commit_period=cfg.commit_period, batch=cfg.batch,
             batch_max_records=cfg.batch_max_records,
             batch_deadline=cfg.batch_deadline,
             lease_enabled=cfg.lease_enabled,
             lease_duration=cfg.lease_duration),
-                        disk=_DISKS[cfg.disk]()),
+                        disk=_DISKS[cfg.disk](),
+                        ingress_batch=cfg.ingress_batch,
+                        admission_limit=cfg.admission_limit),
         obs=ObsConfig(trace_sample=cfg.trace_sample,
                       metrics_interval=cfg.metrics_interval,
                       profile=cfg.profile,
@@ -107,6 +120,7 @@ def build_cassandra(cfg: ExperimentConfig):
     cluster = CassandraCluster(
         sim, CassandraConfig(n_nodes=cfg.n_nodes, disk=_DISKS[cfg.disk](),
                              batch=cfg.batch,
+                             ingress_batch=cfg.ingress_batch,
                              batch_max_records=cfg.batch_max_records,
                              batch_deadline=cfg.batch_deadline,
                              obs=ObsConfig(

@@ -251,6 +251,61 @@ def test_leader_kill_with_inflight_batches_no_acked_write_lost():
         sorted(set(r.version for _, r in acked if r.ok))
 
 
+def test_leader_kill_between_watermark_ack_and_commit_broadcast():
+    """PR 10 ack-coalescing window: the leader acks a write the moment its
+    majority-durability watermark covers it, and the commit marker reaches
+    followers only later (piggybacked on the next proposal batch or the
+    commit tick).  Kill the leader inside that window: the acked write is
+    durable on a follower majority, so the new regime must surface it —
+    exactly one ack, zero lost, and the invariant watchdog (notably
+    acked_durable / acked_committed_majority) stays silent throughout."""
+    from repro.obs import ObsConfig
+
+    sim = Simulator(seed=13)
+    cfg = ClusterConfig(
+        n_nodes=5,
+        node=NodeConfig(replica=ReplicaConfig(
+            batch="adaptive", commit_period=0.5)),   # lagging commit tick
+        obs=ObsConfig(journal=True, watchdog=True))
+    cluster = SpinnakerCluster(sim, cfg)
+    cluster.start()
+    cluster.settle()
+    c = cluster.make_client()
+    key = key_of(5)
+    rid = cluster.range_of(key)
+    leader = cluster.leader_replica(rid)
+    acks = []
+    c.put(key, "c", b"windowed", acks.append)
+    # step until the client holds the ack, then stop immediately — the
+    # long commit period guarantees the marker broadcast has not fired
+    for _ in range(10_000):
+        sim.step()
+        if acks:
+            break
+    assert [r.ok for r in acks] == [True], acks
+    lsn = leader.lst
+    followers = [cluster.nodes[m].replicas[rid] for m in cluster.cohort(rid)
+                 if cluster.nodes[m].replicas[rid].role is Role.FOLLOWER]
+    # precondition: we really are inside the window — the cohort holds the
+    # record durably but nobody learned the commit marker yet
+    assert leader.cmt >= lsn
+    assert all(f.cmt < lsn for f in followers), \
+        "commit marker already broadcast; window missed"
+    assert sum(f._follower_forced >= lsn for f in followers) \
+        >= len(followers) - 1
+    cluster.crash_node(leader.node.node_id)
+    sim.run_for(20.0)
+    new_leader = cluster.leader_replica(rid)
+    assert new_leader is not None
+    assert new_leader.node.node_id != leader.node.node_id
+    # the acked write survived the failover and was committed exactly once
+    got = c.sync_get(key, "c", consistent=True)
+    assert got.ok and got.value == b"windowed" and got.version == 1
+    assert len(acks) == 1, "client must see exactly one ack"
+    wd = cluster.obs.watchdog.summary()
+    assert wd["ok"], wd["violations"][:3]
+
+
 def test_crash_drops_staged_batch_cleanly():
     """Crash a leader with a record still staged in the accumulator (the
     deadline flush never fired): the staged batch dies with the leader's

@@ -89,13 +89,14 @@ def test_stages_partition_e2e_exactly():
     t = OpTrace(trace_id=1, kind="write", path="write", key="k",
                 system="spinnaker", t_issue=1.0, t_send=1.001,
                 t_recv=1.0015, t_cpu=1.0016, t_flush=1.0018,
-                t_forced=1.0021, t_commit=1.0027, t_done=1.0031)
+                t_forced=1.0021, t_commit=1.0027, t_acked=1.0027,
+                t_done=1.0031)
     t.ok = True
     assert t.complete()
     assert sum(t.stages().values()) == pytest.approx(t.e2e, abs=1e-12)
     assert set(t.stages()) == {"client_queue", "net_req", "cpu",
                                "batch_wait", "wal_force", "commit_wait",
-                               "reply_net"}
+                               "ack_coalesce", "reply_net"}
 
 
 def test_audit_flags_incomplete_acked_write():
@@ -103,7 +104,7 @@ def test_audit_flags_incomplete_acked_write():
     tr = Tracer(sim, "spinnaker", sample=1.0)
     good = tr.maybe_start("write", "write", "k1")
     good.t_send = good.t_recv = good.t_cpu = good.t_flush = 0.0
-    good.t_forced = good.t_commit = 0.0
+    good.t_forced = good.t_commit = good.t_acked = 0.0
     tr.finish(good, True, "OK")
     assert tr.audit_writes()["ok"]
     bad = tr.maybe_start("write", "write", "k2")
@@ -130,8 +131,9 @@ def test_stage_breakdown_reconstructs_known_median():
         t.t_flush = t.t_cpu + 0.0002
         t.t_forced = t.t_flush + 0.0001
         t.t_commit = t.t_forced + 0.0005
+        t.t_acked = t.t_commit             # envelope flush is same-instant
         tr.finish(t, True, "OK")
-        t.t_done = t.t_commit + 0.0004     # finish() stamped sim.now; undo
+        t.t_done = t.t_acked + 0.0004      # finish() stamped sim.now; undo
     bd = stage_breakdown(tr.traces, kind="write")
     assert bd["n_traces"] == 100
     assert bd["stage_sum_p50_ms"] == pytest.approx(bd["p50_ms"], rel=1e-6)

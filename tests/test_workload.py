@@ -126,20 +126,41 @@ def test_histogram_percentiles_bounded_error():
 
 
 def test_histogram_percentile_within_one_log_bin():
-    # the bin grid is 30/decade: any percentile answer must sit within
-    # one bin-width factor (10^(1/30) ~ 1.08x) of the exact sample
+    # the bin grid is 240/decade: any percentile answer must sit within
+    # one bin-width factor (10^(1/240) ~ 1.0096x) of the exact sample
     # quantile, clamped to the observed [min, max]
     h = LatencyHistogram()
     rng = np.random.default_rng(7)
     xs = np.sort(rng.lognormal(mean=-6, sigma=1.5, size=50000))
     for x in xs:
         h.add(float(x))
-    bin_factor = 10 ** (1 / 30)
+    bin_factor = 10 ** (1 / 240)
     for p in (10, 50, 90, 95, 99, 99.9):
         exact = float(np.percentile(xs, p, method="inverted_cdf"))
         got = h.percentile(p)
         assert exact / bin_factor * 0.999 <= got <= exact * bin_factor \
             * 1.001, (p, got, exact)
+
+
+def test_histogram_separates_close_percentiles():
+    """Regression for the coarse-bin collapse: a 30/decade grid (~8%
+    bins) folded latencies a few percent apart into one bin, so p50, p95
+    and p99 of a tight distribution all read back as the same edge value
+    (visible as bit-identical percentiles across unrelated runs).  The
+    240/decade grid (<1% bins) must keep 5%-apart percentiles distinct,
+    ordered, and within 1% of their true values."""
+    h = LatencyHistogram()
+    for _ in range(5000):
+        h.add(1.00e-3)
+    for _ in range(4500):
+        h.add(1.05e-3)
+    for _ in range(500):
+        h.add(1.10e-3)
+    p50, p95, p99 = (h.percentile(p) for p in (50, 95, 99))
+    assert p50 < p95 < p99, (p50, p95, p99)
+    assert p50 == pytest.approx(1.00e-3, rel=0.01)
+    assert p95 == pytest.approx(1.05e-3, rel=0.01)
+    assert p99 == pytest.approx(1.10e-3, rel=0.01)
 
 
 def test_histogram_empty_summary():
